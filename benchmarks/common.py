@@ -1,0 +1,79 @@
+"""Shared benchmark plumbing: incremental JSON result cache + table printing.
+
+Every table script computes a list of row-dicts, keyed by a stable ``name``.
+Rows are cached in ``benchmarks/results/<table>.json`` as they finish, so an
+interrupted sweep resumes, and the final ``python -m benchmarks.run`` replays
+cached rows without re-training (pass ``--rerun`` to force).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _path(table: str) -> str:
+    return os.path.join(RESULTS_DIR, table + ".json")
+
+
+def load_rows(table: str) -> Dict[str, dict]:
+    p = _path(table)
+    if not os.path.exists(p):
+        return {}
+    with open(p) as f:
+        return {r["name"]: r for r in json.load(f)}
+
+
+def save_rows(table: str, rows: Dict[str, dict]) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(_path(table), "w") as f:
+        json.dump(list(rows.values()), f, indent=1)
+
+
+CACHED_ONLY = False      # benchmarks.run --cached-only: never compute
+
+
+def run_cached(table: str, names: List[str], compute: Callable[[str], dict],
+               rerun: bool = False) -> List[dict]:
+    """Compute (or load) one row per name; persist incrementally."""
+    rows = {} if rerun else load_rows(table)
+    for name in names:
+        if name in rows and not rows[name].get("error"):
+            continue
+        if CACHED_ONLY:
+            continue
+        t0 = time.time()
+        try:
+            row = compute(name)
+        except Exception as e:  # noqa: BLE001 — record and continue the sweep
+            row = {"name": name, "error": repr(e)[:300]}
+        row["name"] = name
+        row.setdefault("seconds", round(time.time() - t0, 1))
+        rows[name] = row
+        save_rows(table, rows)
+        print(f"[{table}] {name}: "
+              + ", ".join(f"{k}={v}" for k, v in row.items()
+                          if k not in ("name", "curve")), flush=True)
+    return [rows[n] for n in names if n in rows]
+
+
+def fmt_table(title: str, rows: List[dict], cols: List[str]) -> str:
+    """Markdown table from row dicts."""
+    out = [f"\n### {title}\n", "| " + " | ".join(cols) + " |",
+           "|" + "---|" * len(cols)]
+    for r in rows:
+        cells = []
+        for c in cols:
+            v = r.get(c, "")
+            cells.append(f"{v:.2f}" if isinstance(v, float) else str(v))
+        out.append("| " + " | ".join(cells) + " |")
+    return "\n".join(out) + "\n"
+
+
+def check(claims: List[tuple]) -> List[str]:
+    """[(description, bool)] -> printable pass/fail lines."""
+    return [("  [ok] " if ok else "  [MISMATCH] ") + desc
+            for desc, ok in claims]

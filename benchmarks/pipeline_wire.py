@@ -1,0 +1,84 @@
+"""HLO collective-bytes measurement of the REAL compressed pipeline.
+
+The convergence experiments use the paper's simulated-MP boundary (inside
+one SPMD program — no inter-stage collective).  This benchmark lowers the
+actual ``shard_map`` pipeline (core/pipeline.py) on a production-mesh
+stage axis and reads the ``collective-permute`` bytes out of the compiled
+HLO for each wire scheme — the paper's compression ratio, visible in the
+collective roofline term.
+
+Run:
+  PYTHONPATH=src python -m benchmarks.pipeline_wire          # 4-stage, GPT-2ish
+"""
+import os
+
+if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=256"
+
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.dryrun import collective_bytes
+
+
+def measure(schemes=("none", "q8", "q4", "topk"), *, stages=4,
+            batch=32, seq=1024, d_model=768, d_ff=3072, k_frac=0.10):
+    """Returns one report per scheme: collective-permute bytes/step."""
+    from repro.core.pipeline import pipeline_forward
+    n_dev = jax.device_count()
+    data = n_dev // stages
+    mesh = jax.make_mesh((stages, data), ("stage", "data"))
+
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    params = {
+        "w1": (jax.random.normal(k1, (stages, d_model, d_ff), jnp.float32)
+               * (1 / d_model) ** 0.5).astype(jnp.bfloat16),
+        "w2": (jax.random.normal(k2, (stages, d_ff, d_model), jnp.float32)
+               * (1 / d_ff) ** 0.5).astype(jnp.bfloat16),
+    }
+
+    def stage_fn(p, h):
+        return h + (jax.nn.gelu((h @ p["w1"]).astype(jnp.float32))
+                    .astype(jnp.bfloat16) @ p["w2"])
+
+    x = jax.ShapeDtypeStruct((batch, seq, d_model), jnp.bfloat16)
+    params_s = jax.eval_shape(lambda: params)
+
+    reports = []
+    for scheme in schemes:
+        def run(p, xx):
+            return pipeline_forward(stage_fn, p, xx, mesh, "stage",
+                                    scheme=scheme, k_frac=k_frac)
+        lowered = jax.jit(run).lower(params_s, x)
+        compiled = lowered.compile()
+        coll = collective_bytes(compiled.as_text())
+        cp = coll.get("collective-permute", 0)
+        reports.append({
+            "scheme": scheme, "stages": stages,
+            "collective_permute_bytes": cp,
+            "all_collectives": coll,
+            "ratio_vs_none": None,
+        })
+    base = reports[0]["collective_permute_bytes"] or 1
+    for r in reports:
+        r["ratio_vs_none"] = round(base / max(r["collective_permute_bytes"],
+                                              1), 2)
+    return reports
+
+
+def main():
+    reports = measure()
+    for r in reports:
+        print(json.dumps(r))
+    os.makedirs(os.path.join(os.path.dirname(__file__), "results"),
+                exist_ok=True)
+    with open(os.path.join(os.path.dirname(__file__), "results",
+                           "pipeline_wire.json"), "w") as f:
+        json.dump(reports, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

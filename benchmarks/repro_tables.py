@@ -1,0 +1,293 @@
+"""Paper reproduction experiments — Tables 1-5 (Sec. 3).
+
+Scaled-down but protocol-faithful: same compression modes, same MP degree 4
+(3 boundaries), eval with compression ON and OFF, warm-start rows, single
+seed (the paper reports best-of-5; we report one run and validate the
+*qualitative* findings F1-F6 from DESIGN.md).
+
+All tables share the uncompressed baseline run (and its weights, for the
+"warmup N" rows), cached under benchmarks/results/.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax.numpy as jnp
+
+from benchmarks.common import RESULTS_DIR, fmt_table, load_rows, run_cached
+from repro.checkpoint import io as ckpt
+from repro.core.policy import (CompressionPolicy, NO_POLICY, aqsgd_policy,
+                               ef_policy, quant_policy, topk_policy)
+from repro.data.synthetic import ImageClassData, LMData
+from repro.models.config import ModelConfig
+from repro.train.loop import (pretrain_lm, run_cnn_experiment,
+                              run_lm_experiment)
+
+EPOCHS = int(os.environ.get("REPRO_EPOCHS", "10"))
+WARM_EPOCHS = max(2, EPOCHS // 5)          # paper's "warmup 20" of 100 epochs
+_DATA: Optional[ImageClassData] = None
+_LMDATA: Optional[LMData] = None
+
+
+def cnn_data() -> ImageClassData:
+    global _DATA
+    if _DATA is None:
+        _DATA = ImageClassData()
+    return _DATA
+
+
+def lm_data() -> LMData:
+    # corpus sized so pretraining GENERALIZES: at vocab 256 the order-2
+    # transition table has 65k contexts (~2 visits each at this budget
+    # -> the model can only memorize: train loss 0.2 / held-out 10.4);
+    # vocab 64 gives 4k contexts x ~30 visits -> real structure learning.
+    global _LMDATA
+    if _LMDATA is None:
+        _LMDATA = LMData(num_train=2048, num_test=256, vocab=64)
+    return _LMDATA
+
+
+def _ckpt(name: str) -> str:
+    return os.path.join(RESULTS_DIR, name + ".npz")
+
+
+def policy(b) -> CompressionPolicy:
+    return CompressionPolicy(num_stages=4, boundary=b)
+
+
+# ---------------------------------------------------------------------------
+# Shared baselines
+# ---------------------------------------------------------------------------
+
+def baseline_cnn(rerun: bool = False) -> dict:
+    """Full-length uncompressed baseline (row 1 of every CNN table)."""
+    def compute(_):
+        r = run_cnn_experiment(NO_POLICY, epochs=EPOCHS, data=cnn_data())
+        ckpt.save(_ckpt("cnn_baseline"), r.params)
+        return {"acc_off": r.acc_off, "acc_on": r.acc_on,
+                "curve": r.train_curve}
+    return run_cached("baseline_cnn", ["no-compression"], compute, rerun)[0]
+
+
+def warm_params(rerun: bool = False):
+    """Uncompressed weights after WARM_EPOCHS (the paper's warmup rows)."""
+    def compute(_):
+        r = run_cnn_experiment(NO_POLICY, epochs=WARM_EPOCHS,
+                               data=cnn_data())
+        ckpt.save(_ckpt("cnn_warm"), r.params)
+        return {"acc_on": r.acc_on}
+    run_cached("baseline_warm", ["warm"], compute, rerun)
+    import jax
+    from repro.models import cnn
+    like = jax.eval_shape(
+        lambda: cnn.init_params(jax.random.PRNGKey(0), width=16))
+    params, _ = ckpt.restore(_ckpt("cnn_warm"), like)
+    return params
+
+
+def _cnn_row(pol: CompressionPolicy, warm: bool = False,
+             rerun: bool = False, lr: Optional[float] = None,
+             epochs: Optional[int] = None):
+    def compute(name):
+        from repro.optim.optimizers import OptimizerConfig
+        wp = warm_params(rerun) if warm else None
+        eps = epochs or EPOCHS
+        opt = None
+        if lr is not None:
+            steps = eps * (cnn_data().num_train // 100)
+            opt = OptimizerConfig(kind="sgd", lr=lr, momentum=0.9,
+                                  weight_decay=5e-4, schedule="cosine",
+                                  t_max=steps)
+        r = run_cnn_experiment(pol, epochs=eps, data=cnn_data(),
+                               warmup_params=wp, opt=opt)
+        return {"acc_off": r.acc_off, "acc_on": r.acc_on,
+                "curve": r.train_curve}
+    return compute
+
+
+# ---------------------------------------------------------------------------
+# Table 1: quantization fw[A]-bw[B]
+# ---------------------------------------------------------------------------
+
+T1_MODES = {                       # paper Table 1
+    "fw4-bw8": (4, 8), "fw4-bw6": (4, 6), "fw4-bw4": (4, 4),
+    "fw4-bw2": (4, 2), "fw2-bw8": (2, 8), "fw2-bw6": (2, 6),
+    "fw2-bw4": (2, 4),
+}
+
+
+def table1(rerun: bool = False):
+    rows = [dict(baseline_cnn(rerun), name="no-compression")]
+    def compute(name):
+        a, b = T1_MODES[name]
+        return _cnn_row(policy(quant_policy(a, b)))(name)
+    rows += run_cached("table1_quant", list(T1_MODES), compute, rerun)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 2: TopK sweep
+# ---------------------------------------------------------------------------
+
+T2_KS = {"top50": 0.50, "top30": 0.30, "top20": 0.20, "top10": 0.10,
+         "top5": 0.05, "top2": 0.02}
+
+
+def table2(rerun: bool = False):
+    rows = [dict(baseline_cnn(rerun), name="no-compression")]
+    def compute(name):
+        return _cnn_row(policy(topk_policy(T2_KS[name])))(name)
+    rows += run_cached("table2_topk", list(T2_KS), compute, rerun)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 3: error feedback (EF / EF-mixed / EF21), TopK compressors
+# ---------------------------------------------------------------------------
+
+T3_MODES = {
+    "ef-top10-warm":      (ef_policy(0.10, "ef"), True),
+    "efmixed-top10-warm": (ef_policy(0.10, "efmixed"), True),
+    "ef21-top5":          (ef_policy(0.05, "ef21"), False),
+    "ef21-top10":         (ef_policy(0.10, "ef21"), False),
+    "ef21-top10-warm":    (ef_policy(0.10, "ef21"), True),
+}
+
+# EF-family feedback learns through a mostly-stale message in the early
+# phase (the buffer is another batch's activations), so its transient is
+# several-fold longer than plain TopK's — at the tables-1/2 budget
+# (10 epochs, lr 0.02 cosine) every EF row sits at chance.  The EF table
+# therefore runs the PAPER's lr (0.01, Sec 3.1) with a doubled epoch
+# budget, plus a plain-top10 control at identical settings so F4 compares
+# like-for-like.  Diagnosis chain recorded in EXPERIMENTS.md §Repro notes.
+T3_LR = 0.01
+T3_EPOCHS = 2 * EPOCHS
+
+
+def table3(rerun: bool = False):
+    rows = [dict(baseline_cnn(rerun), name="no-compression")]
+    def compute(name):
+        if name == "top10-lr001":            # plain-TopK control at same lr
+            return _cnn_row(policy(topk_policy(0.10)), lr=T3_LR,
+                            epochs=T3_EPOCHS)(name)
+        bp, warm = T3_MODES[name]
+        return _cnn_row(policy(bp), warm=warm, lr=T3_LR,
+                        epochs=T3_EPOCHS)(name)
+    rows += run_cached("table3_ef", ["top10-lr001"] + list(T3_MODES),
+                       compute, rerun)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 4: AQ-SGD (per-example buffer, activations only) + TopK
+# ---------------------------------------------------------------------------
+
+T4_KS = {"aqsgd-top50-warm": 0.50, "aqsgd-top30-warm": 0.30,
+         "aqsgd-top20-warm": 0.20, "aqsgd-top10-warm": 0.10}
+
+
+def table4(rerun: bool = False):
+    rows = [dict(baseline_cnn(rerun), name="no-compression")]
+    def compute(name):
+        return _cnn_row(policy(aqsgd_policy(T4_KS[name])), warm=True)(name)
+    rows += run_cached("table4_aqsgd", list(T4_KS), compute, rerun)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 5: LM fine-tuning, TopK with index reuse vs separate masks
+# ---------------------------------------------------------------------------
+
+LM_CFG = ModelConfig(
+    arch_id="tiny-gpt2ish", family="dense", num_layers=4, d_model=128,
+    num_heads=4, num_kv_heads=4, head_dim=32, d_ff=512, vocab_size=256,
+    pos_embed="rope", norm="layernorm", mlp="gelu", tie_embeddings=True,
+    max_seq=64, source="scaled-down GPT-2 (paper Sec. 3.2 protocol)")
+
+T5_MODES = {
+    "lm-top50": (0.50, True), "lm-top30": (0.30, True),
+    "lm-top20": (0.20, True), "lm-top10": (0.10, True),
+    "lm-top10-separate": (0.10, False),
+}
+
+
+def _lm_pretrained(rerun: bool = False):
+    def compute(_):
+        # long enough to be genuinely structured, short enough not to
+        # memorize (the paper fine-tunes the fully pretrained GPT-2)
+        params, loss = pretrain_lm(LM_CFG, steps=1000, data=lm_data())
+        ckpt.save(_ckpt("lm_pretrained"), params)
+        return {"train_loss": loss}
+    run_cached("baseline_lm", ["pretrain"], compute, rerun)
+    import jax
+    from repro.models import transformer
+    like = jax.eval_shape(
+        lambda: transformer.init_params(jax.random.PRNGKey(0), LM_CFG))
+    params, _ = ckpt.restore(_ckpt("lm_pretrained"), like)
+    return params
+
+
+def table5(rerun: bool = False):
+    import math
+    from benchmarks import common
+    if common.CACHED_ONLY and not os.path.exists(_ckpt("lm_pretrained")):
+        return run_cached("table5_lm", [], lambda n: {}, False)
+    pre = _lm_pretrained(rerun)
+
+    from repro.optim.optimizers import OptimizerConfig
+    ft_opt = OptimizerConfig(kind="adamw", lr=3e-4, weight_decay=0.01,
+                             schedule="constant", grad_clip=1.0)
+
+    def compute(name):
+        if name == "no-compression":
+            pol = NO_POLICY
+        else:
+            k, reuse = T5_MODES[name]
+            pol = policy(topk_policy(k, reuse_indices=reuse))
+        r = run_lm_experiment(LM_CFG, pol, pretrained_params=pre,
+                              epochs=2, data=lm_data(), opt=ft_opt)
+        return {"eval_loss": r.loss_on, "eval_loss_off": r.loss_off,
+                "ppl": math.exp(min(r.loss_on, 20.0)),
+                "ppl_off": math.exp(min(r.loss_off, 20.0))}
+    names = ["no-compression"] + list(T5_MODES)
+    return run_cached("table5_lm", names, compute, rerun)
+
+
+# ---------------------------------------------------------------------------
+# Findings validation (DESIGN.md F1-F6 vs paper's claims)
+# ---------------------------------------------------------------------------
+
+def validate(t1, t2, t3, t4, t5):
+    by = lambda rows: {r["name"]: r for r in rows}
+    b1, b2, b3, b4, b5 = by(t1), by(t2), by(t3), by(t4), by(t5)
+    g = lambda d, n, k: d.get(n, {}).get(k, float("nan"))
+    claims = [
+        ("F1 gradients more quant-sensitive: fw2-bw8 (on) beats fw4-bw2 (on)",
+         g(b1, "fw2-bw8", "acc_on") > g(b1, "fw4-bw2", "acc_on") + 2),
+        ("F1b fw4-bw8 ~ baseline (within 5pp, compressed eval)",
+         abs(g(b1, "fw4-bw8", "acc_on") - g(b1, "no-compression", "acc_on")) < 5),
+        ("F2 top10 (on) within 6pp of baseline; top2 (on) clearly worse",
+         (g(b2, "top10", "acc_on") > g(b2, "no-compression", "acc_on") - 6)
+         and (g(b2, "top2", "acc_on") < g(b2, "top10", "acc_on"))),
+        ("F3 strong TopK: compressed eval beats uncompressed eval by >5pp "
+         "(top5)", g(b2, "top5", "acc_on") > g(b2, "top5", "acc_off") + 5),
+        ("F3b quant fw2: compressed eval beats uncompressed eval (fw2-bw8)",
+         g(b1, "fw2-bw8", "acc_on") > g(b1, "fw2-bw8", "acc_off")),
+        ("F4 EF21+top10 does not beat plain top10 (on) by >2pp (same lr)",
+         g(b3, "ef21-top10", "acc_on") < g(b3, "top10-lr001", "acc_on") + 2),
+        ("F4b EF21 model serves UNCOMPRESSED with no quality drop "
+         "(off >= on - 1pp)",
+         g(b3, "ef21-top10", "acc_off")
+         >= g(b3, "ef21-top10", "acc_on") - 1.0),
+        ("F5 AQ-SGD+top10 does not beat plain top10 (on)",
+         g(b4, "aqsgd-top10-warm", "acc_on") < g(b2, "top10", "acc_on") + 2),
+        ("F5b AQ-SGD degrades as K shrinks (top50 >= top10)",
+         g(b4, "aqsgd-top50-warm", "acc_on")
+         >= g(b4, "aqsgd-top10-warm", "acc_on") - 1),
+        ("F6 LM: top10 separate masks much worse than index reuse",
+         g(b5, "lm-top10-separate", "eval_loss") > g(b5, "lm-top10", "eval_loss") + 0.3),
+        ("F6b LM: compression level ladder monotone-ish (top50 <= top10 loss)",
+         g(b5, "lm-top50", "eval_loss") <= g(b5, "lm-top10", "eval_loss") + 0.05),
+    ]
+    return claims

@@ -1,0 +1,144 @@
+"""Roofline analysis from dry-run artifacts (DESIGN.md / EXPERIMENTS.md
+§Roofline).
+
+Reads the JSON written by ``repro.launch.dryrun --json`` and derives, per
+(arch x shape x policy):
+
+  compute term    = HLO_FLOPs / (chips x 197 TFLOP/s bf16)
+  memory term     = HLO_bytes / (chips x 819 GB/s)
+  collective term = collective_bytes / (chips x 50 GB/s/link)
+
+cost_analysis() reports PER-DEVICE program flops/bytes for an SPMD module,
+so chips only divides the collective sum (whose bytes we parse from the
+optimized HLO of one device program and which are already per-device).
+The dominant term is the bottleneck the §Perf loop iterates on.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12     # bf16 per chip (TPU v5e)
+HBM_BW = 819e9          # bytes/s per chip
+ICI_BW = 50e9           # bytes/s per link
+
+
+def terms(report: dict) -> dict:
+    """Three roofline terms (seconds) + bottleneck + useful-FLOPs ratio.
+
+    cost_analysis on the compiled scanned program counts each lax.scan body
+    ONCE, so its flops/bytes undercount by roughly the layer-group count.
+    The dry-run therefore also records ``flops_unrolled_global`` — exact
+    global flops from an unrolled lowering.  We derive the undercount
+    factor F from the flops and apply it to the compiled bytes and
+    collective sums (layers are homogeneous, so flop- and byte-undercount
+    track each other; the optimizer's outside-the-loop traffic makes this
+    a slight over-correction — noted in EXPERIMENTS.md caveats).
+    """
+    if report.get("skipped") or report.get("error"):
+        return report
+    devices = report["devices"]
+    flops_c = report["flops"]                     # per-device, body-once
+    if report.get("flops_unrolled_global") and \
+            report.get("flops_scanned_global"):
+        # scan undercount factor measured on the GLOBAL (pre-partition)
+        # lowering, applied to the compiled per-device numbers — keeps the
+        # partitioner's actual work split (incl. replicated decode work)
+        f_corr = max(1.0, report["flops_unrolled_global"]
+                     / max(report["flops_scanned_global"], 1.0))
+    else:
+        f_corr = 1.0
+    flops_dev = flops_c * f_corr
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = report["bytes"] * f_corr / HBM_BW
+    t_coll = report["collective_bytes"] * f_corr / ICI_BW
+    dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                   (t_coll, "collective"))[1]
+    useful = report["model_flops"] / report["flops_unrolled_global"] \
+        if report.get("flops_unrolled_global") else (
+            report["model_flops"] / (flops_dev * devices) if flops_dev
+            else 0.0)
+    out = dict(report)
+    out.update(t_compute_ms=1e3 * t_compute, t_memory_ms=1e3 * t_memory,
+               t_collective_ms=1e3 * t_coll, bottleneck=dominant,
+               scan_corr_factor=round(f_corr, 1),
+               useful_flops_ratio=round(useful, 3),
+               step_lower_bound_ms=1e3 * max(t_compute, t_memory, t_coll))
+    return out
+
+
+def fmt(rows: List[dict]) -> str:
+    hdr = (f"| arch | shape | policy | mesh | compute ms | memory ms | "
+           f"collective ms | bottleneck | useful-FLOPs |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | - "
+                         f"| skipped: {r.get('reason','')} | - |")
+            continue
+        if r.get("error"):
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | - "
+                         f"| ERROR | - |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('policy','none')} "
+            f"| {r['mesh']} | {r['t_compute_ms']:.1f} | {r['t_memory_ms']:.1f} "
+            f"| {r['t_collective_ms']:.1f} | **{r['bottleneck']}** "
+            f"| {r['useful_flops_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def _gb(x):
+    return f"{x / 1e9:.2f}"
+
+
+def fmt_dryrun(rows: List[dict]) -> str:
+    """§Dry-run table: per-device memory, flops, collective schedule."""
+    hdr = ("| arch | shape | mesh | compile s | peak GB/dev | HLO GFLOP/dev "
+           "| collective GB/dev (by op) | model TFLOP (global) |")
+    lines = [hdr, "|" + "---|" * 8]
+    for r in rows:
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | - "
+                         f"| skipped ({r.get('reason','')[:40]}) | - |")
+            continue
+        if r.get("error"):
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | - "
+                         f"| ERROR {r['error'][:60]} | - |")
+            continue
+        coll = ", ".join(f"{k.replace('collective-','c-')} {_gb(v)}"
+                         for k, v in sorted(r["collectives"].items(),
+                                            key=lambda kv: -kv[1]))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r.get('compile_s','-')} | {r['peak_bytes']/2**30:.2f} "
+            f"| {r['flops']/1e9:.0f} | {coll} "
+            f"| {r['model_flops']/1e12:.1f} |")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("jsons", nargs="+", help="dryrun --json outputs")
+    ap.add_argument("--md", default=None, help="write markdown table here")
+    ap.add_argument("--dryrun-table", action="store_true",
+                    help="emit the §Dry-run table instead of §Roofline")
+    args = ap.parse_args(argv)
+    rows = []
+    for p in args.jsons:
+        with open(p) as f:
+            raw = json.load(f)
+        rows += raw if args.dryrun_table else [terms(r) for r in raw]
+    table = fmt_dryrun(rows) if args.dryrun_table else fmt(rows)
+    print(table)
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write(table + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,100 @@
+"""Benchmark driver — one table per paper table (Sec. 3) + wire model +
+roofline replay.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run               # all (cached rows replayed)
+  PYTHONPATH=src python -m benchmarks.run --only table2 --rerun
+  REPRO_EPOCHS=4 PYTHONPATH=src python -m benchmarks.run --only table1
+
+Training rows are cached in benchmarks/results/*.json (see common.py); a
+fresh container recomputes them (~2h CPU for the full suite at
+REPRO_EPOCHS=10).  Dry-run/roofline tables replay the JSON written by
+``repro.launch.dryrun --json`` if present.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+from benchmarks import repro_tables, wire
+from benchmarks.common import RESULTS_DIR, check, fmt_table
+
+CNN_COLS = ["name", "acc_off", "acc_on", "seconds"]
+LM_COLS = ["name", "eval_loss", "ppl", "eval_loss_off", "ppl_off", "seconds"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=["table1", "table2", "table3", "table4",
+                             "table5", "wire", "roofline"])
+    ap.add_argument("--rerun", action="store_true")
+    ap.add_argument("--cached-only", action="store_true",
+                    help="replay cached rows; never train")
+    args = ap.parse_args(argv)
+    if args.cached_only:
+        import benchmarks.common as common
+        common.CACHED_ONLY = True
+    want = lambda t: args.only in (None, t)
+    out = []
+
+    tables = {}
+    if want("table1"):
+        tables["t1"] = repro_tables.table1(args.rerun)
+        out.append(fmt_table(
+            "Table 1 — quantization fw[A]-bw[B] (ResNet-ish / synth-CIFAR)",
+            tables["t1"], CNN_COLS))
+    if want("table2"):
+        tables["t2"] = repro_tables.table2(args.rerun)
+        out.append(fmt_table("Table 2 — TopK sweep", tables["t2"], CNN_COLS))
+    if want("table3"):
+        tables["t3"] = repro_tables.table3(args.rerun)
+        out.append(fmt_table("Table 3 — error feedback (EF/EF-mixed/EF21)",
+                             tables["t3"], CNN_COLS))
+    if want("table4"):
+        tables["t4"] = repro_tables.table4(args.rerun)
+        out.append(fmt_table("Table 4 — AQ-SGD + TopK", tables["t4"],
+                             CNN_COLS))
+    if want("table5"):
+        tables["t5"] = repro_tables.table5(args.rerun)
+        out.append(fmt_table("Table 5 — LM fine-tune TopK (index reuse vs "
+                             "separate)", tables["t5"], LM_COLS))
+    if want("wire"):
+        out.append(fmt_table(
+            "Wire model — bytes per boundary per step (B=8,S=1024,d=768)",
+            wire.rows(), ["name", "fw_MB", "bw_MB", "ratio", "ms_1gbit",
+                          "ms_ici"]))
+    if want("roofline"):
+        from benchmarks.roofline import fmt, terms
+        js = sorted(glob.glob(os.path.join(RESULTS_DIR, "dryrun*.json")))
+        if js:
+            rows = []
+            for p in js:
+                with open(p) as f:
+                    rows += [terms(r) for r in json.load(f)]
+            out.append("\n### Roofline (from dry-run artifacts)\n\n"
+                       + fmt(rows) + "\n")
+        else:
+            out.append("\n### Roofline: no dryrun JSON found — run "
+                       "`python -m repro.launch.dryrun --all --json "
+                       "benchmarks/results/dryrun_single.json`\n")
+
+    print("".join(out))
+
+    if args.only is None and all(len(tables.get(k, [])) > 1 for k in
+                                 ("t1", "t2", "t3", "t4", "t5")):
+        claims = repro_tables.validate(tables["t1"], tables["t2"],
+                                       tables["t3"], tables["t4"],
+                                       tables["t5"])
+        print("### Paper-findings validation (F1-F6)")
+        print("\n".join(check(claims)))
+        bad = sum(0 if ok else 1 for _, ok in claims)
+        print(f"# {len(claims) - bad}/{len(claims)} findings reproduced")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,49 @@
+"""Boundary wire-bytes model — the paper's motivation quantified.
+
+For each compression mode, computes the bytes crossing ONE pipeline-stage
+boundary per training step (forward activations + backward gradients) for a
+representative LM stage tensor (B, S, d_model), and the implied transfer
+time over slow-network (1 Gbit/s, the paper's Petals-style setting) and TPU
+ICI (50 GB/s) links.  Pure arithmetic — no device work.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.compressors import quant, topk
+from repro.core.policy import (BoundaryPolicy, NO_COMPRESSION, quant_policy,
+                               topk_policy)
+
+GBIT = 1e9 / 8
+ICI = 50e9
+
+
+def boundary_bytes(bp: BoundaryPolicy, numel: int, elem_bytes: int = 2):
+    fw = bp.fw.wire_bytes_per_elem(elem_bytes) * numel
+    bw = bp.bw.wire_bytes_per_elem(elem_bytes) * numel
+    return fw, bw
+
+
+def rows(batch: int = 8, seq: int = 1024, d_model: int = 768) -> List[dict]:
+    """GPT-2-small fine-tuning shape (paper Sec. 3.2)."""
+    numel = batch * seq * d_model
+    modes = [("no-compression", NO_COMPRESSION)]
+    modes += [(f"fw{a}-bw{b}", quant_policy(a, b))
+              for a, b in [(4, 8), (4, 4), (2, 8)]]
+    modes += [(f"top{int(k*100)}%", topk_policy(k))
+              for k in [0.5, 0.3, 0.2, 0.1, 0.05]]
+    modes += [("top10%+reuse", topk_policy(0.10, reuse_indices=True))]
+    out = []
+    base = 2 * numel * 2.0
+    for name, bp in modes:
+        fw, bw = boundary_bytes(bp, numel)
+        if bp.reuse_indices:
+            # reused indices need not be retransmitted backward: values only
+            bw = bp.bw.k_frac * 2 * numel
+        tot = fw + bw
+        out.append({
+            "name": name, "fw_MB": fw / 1e6, "bw_MB": bw / 1e6,
+            "ratio": base / tot,
+            "ms_1gbit": 1e3 * tot / GBIT, "ms_ici": 1e3 * tot / ICI,
+        })
+    return out

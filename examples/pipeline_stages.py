@@ -1,0 +1,53 @@
+"""Real pipeline parallelism with compressed stage handoffs (beyond-paper).
+
+Forces 4 host devices, builds a 4-stage GPipe pipeline over mesh axis
+"stage" via shard_map, and streams microbatches through it with the boundary
+payload PACKED on the wire (bf16 raw / int8 quant / 4-bit packed / TopK
+values+indices).  Verifies the pipelined result matches the sequential
+forward and prints the measured bytes-per-boundary of each scheme — the
+collective-bytes reduction that motivates the whole paper.
+
+Run:  PYTHONPATH=src python examples/pipeline_stages.py
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.pipeline import (pack_payload, pipeline_forward, wire_bytes)
+
+mesh = jax.make_mesh((4,), ("stage",))
+B, D = 8, 256
+key = jax.random.PRNGKey(0)
+x = jax.random.normal(key, (B, D), jnp.float32)
+
+# 4 stages, each an MLP block; stage s holds slice s of the stacked params.
+k1, k2 = jax.random.split(key)
+w1 = jax.random.normal(k1, (4, D, 4 * D)) * (1.0 / D) ** 0.5
+w2 = jax.random.normal(k2, (4, 4 * D, D)) * (1.0 / (4 * D)) ** 0.5
+params = {"w1": w1, "w2": w2}
+
+
+def stage_fn(p, h):
+    return h + jax.nn.gelu(h @ p["w1"]) @ p["w2"]
+
+
+# sequential reference
+ref = x
+for s in range(4):
+    ref = stage_fn(jax.tree.map(lambda a: a[s], params), ref)
+
+print(f"pipeline over mesh {dict(mesh.shape)} — payload schemes:")
+for scheme, k in [("none", 0.1), ("q8", 0.1), ("q4", 0.1), ("topk", 0.1)]:
+    out = pipeline_forward(stage_fn, params, x, mesh, "stage",
+                           scheme=scheme, k_frac=k)
+    err = float(jnp.max(jnp.abs(out - ref)) / jnp.max(jnp.abs(ref)))
+    payload = pack_payload(ref[: B // 4], scheme, k)
+    mb = wire_bytes(payload)
+    raw = ref[: B // 4].size * 2
+    print(f"  {scheme:5s}: bytes/boundary {mb:7d} "
+          f"({raw / mb:4.1f}x vs bf16)  rel-err vs sequential {err:.3f}")
+print("-> 'none' must be ~exact; q8 tight; q4/topk lossy by design")

@@ -1,0 +1,61 @@
+"""Quickstart: train a tiny LM with the paper's boundary compression.
+
+Builds a 4-layer transformer, cuts it into 4 pipeline stages (3 compression
+boundaries, the paper's MP degree), trains ~60 steps with Top-10% activation
++ gradient compression (forward TopK indices reused backward, paper Table 5),
+then evaluates with compression ON and OFF — reproducing finding F3 in
+miniature: the trained model expects its boundary compression at inference.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.boundary import init_boundary_state
+from repro.core.policy import CompressionPolicy, topk_policy
+from repro.data.synthetic import LMData
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.optim.optimizers import OptimizerConfig, init_opt_state
+from repro.train.steps import (make_lm_eval_step, make_lm_train_step)
+
+cfg = ModelConfig(
+    arch_id="quickstart-lm", family="dense", num_layers=4, d_model=128,
+    num_heads=4, num_kv_heads=4, head_dim=32, d_ff=512, vocab_size=256,
+    pos_embed="rope", norm="rmsnorm", mlp="swiglu", max_seq=64)
+
+policy = CompressionPolicy(num_stages=4,
+                           boundary=topk_policy(0.10, reuse_indices=True))
+
+data = LMData(num_train=256, num_test=64)
+opt = OptimizerConfig(kind="adamw", lr=1e-3, schedule="constant",
+                      grad_clip=1.0)
+params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+opt_state = init_opt_state(opt, params)
+bstates = [init_boundary_state(policy.at(i), (data.seq_len, cfg.d_model),
+                               batch=16) for i in range(3)]
+step = make_lm_train_step(cfg, policy, opt, remat=False, donate=False)
+
+print(f"training {cfg.arch_id} with policy "
+      f"{policy.boundary.name} at 3 stage boundaries")
+n = 0
+for ep in range(4):
+    for toks, ids in data.epoch(16, ep):
+        params, opt_state, bstates, m = step(
+            params, opt_state, bstates, {"tokens": jnp.asarray(toks)},
+            jnp.asarray(ids))
+        n += 1
+        if n % 16 == 0:
+            print(f"  step {n:3d}  loss {float(m['loss']):.3f}")
+
+for compress in (True, False):
+    ev = make_lm_eval_step(cfg, policy, compress)
+    losses = [float(ev(params, {"tokens": jnp.asarray(t)}))
+              for t, _ in data.test_batches(16)]
+    loss = sum(losses) / len(losses)
+    tag = "ON " if compress else "OFF"
+    print(f"eval compression {tag}: loss {loss:.3f} "
+          f"ppl {math.exp(loss):.1f}")
+print("-> the compressed-inference loss should be the lower one (finding F3)")

@@ -1,0 +1,61 @@
+"""Checkpointing: pytree <-> flat-npz, with step metadata.
+
+No orbax offline; .npz keeps it dependency-free and deterministic.  Keys are
+"/"-joined pytree paths; dtypes (incl. bf16 via uint16 view) round-trip
+exactly.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            flat[key + "@bf16"] = arr.view(np.uint16)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def save(path: str, tree, step: int = 0, extra: dict = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    meta = {"step": step, "extra": extra or {}}
+    np.savez(path, __meta__=json.dumps(meta), **flat)
+
+
+def restore(path: str, like) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (same pytree as saved)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz",
+                   allow_pickle=False)
+    meta = json.loads(str(data["__meta__"]))
+    flat = {}
+    for k in data.files:
+        if k == "__meta__":
+            continue
+        if k.endswith("@bf16"):
+            flat[k[:-5]] = data[k].view(jnp.bfloat16)
+        else:
+            flat[k] = data[k]
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_, leaf in leaves_like:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_)
+        arr = flat[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(jnp.asarray(arr))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)
+    return tree, meta["step"]

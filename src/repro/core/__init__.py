@@ -1,0 +1,12 @@
+"""Core: the paper's contribution — boundary compression for MP training."""
+from repro.core.compressors import (Compressor, IDENTITY, quant, topk,
+                                    quantize_kbit, dequantize_kbit,
+                                    quantize_dequantize, topk_compress,
+                                    topk_mask, topk_values_indices,
+                                    topk_scatter)
+from repro.core.policy import (BoundaryPolicy, CompressionPolicy,
+                               NO_COMPRESSION, NO_POLICY, quant_policy,
+                               topk_policy, ef_policy, aqsgd_policy)
+from repro.core.boundary import (boundary_apply, boundary_eval,
+                                 init_boundary_state,
+                                 init_all_boundary_states)

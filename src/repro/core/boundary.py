@@ -1,0 +1,113 @@
+"""Compression boundary: the paper's technique as a composable JAX module.
+
+A boundary sits at a pipeline-stage cut.  In a real MP system the forward
+activation and the backward activation-gradient cross the network here; the
+paper compresses both.  Following the paper (Sec. 2.1) we integrate the
+boundary directly into the model with ``jax.custom_vjp`` — convergence-
+equivalent to the distributed system, while ``core/pipeline.py`` provides the
+real ``shard_map``/``ppermute`` path for performance work.
+
+Semantics (training):
+  forward : y  = F(x)   where F is the fw compressor, optionally wrapped in
+                         EF / EF21 / EF-mixed / AQ-SGD feedback;
+  backward: gx = G(gy)  where G is the bw compressor, optionally wrapped in
+                         EF / EF21 / EF-mixed feedback, or — with
+                         ``reuse_indices`` — masking by the forward TopK mask.
+
+State threading: feedback buffers are functional.  The *forward* buffer's
+update is returned as a second output.  The *backward* buffer's update is
+only known during backprop, so it is returned **as the cotangent of the
+``bw_buf`` argument** — take ``grad`` w.r.t. ``bw_buf`` in the train step and
+read the updated buffer out of the gradient pytree (see train/steps.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressors import apply_mask, topk_mask
+from repro.core.feedback import feedback_message
+from repro.core.policy import BoundaryPolicy
+
+
+def _fw_message(policy: BoundaryPolicy, x, fw_buf, ids):
+    """Forward message + new fw buffer + the TopK mask (for index reuse)."""
+    m, new_fw = feedback_message(policy.feedback, policy.fw, x, fw_buf, ids)
+    mask = None
+    if policy.reuse_indices:
+        # Mask of what the forward direction actually kept.  With plain TopK
+        # this is the TopK mask of x itself (paper Table 5).
+        src = x if policy.feedback == "none" else m
+        mask = topk_mask(src, policy.fw.k_frac)
+    return m, new_fw, mask
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def boundary_apply(policy: BoundaryPolicy, x, fw_buf, bw_buf, ids):
+    """Training-time boundary.  Returns ``(y, new_fw_buf)``.
+
+    ``fw_buf``/``bw_buf``: feedback buffers (size-0 arrays when unused).
+    ``ids``: (B,) int32 example ids (AQ-SGD only; zeros otherwise).
+    The updated backward buffer is delivered as the cotangent of ``bw_buf``.
+    """
+    m, new_fw, _ = _fw_message(policy, x, fw_buf, ids)
+    return m, new_fw
+
+
+def _boundary_fwd(policy: BoundaryPolicy, x, fw_buf, bw_buf, ids):
+    m, new_fw, mask = _fw_message(policy, x, fw_buf, ids)
+    residuals = (mask, fw_buf, bw_buf, ids)
+    return (m, new_fw), residuals
+
+
+def _boundary_bwd(policy: BoundaryPolicy, residuals, cotangents):
+    mask, fw_buf, bw_buf, ids = residuals
+    g_y, _g_new_fw = cotangents          # buffer output is aux — no gradient
+    if policy.reuse_indices:
+        # Paper Table 5: reuse the forward TopK indices on the gradient.
+        g_x = apply_mask(g_y, mask)
+        new_bw = jnp.zeros_like(bw_buf)
+    else:
+        g_x, new_bw = feedback_message(policy.bw_feedback, policy.bw, g_y, bw_buf)
+    zero_fw = jax.tree.map(jnp.zeros_like, fw_buf)
+    zero_ids = np.zeros(ids.shape, dtype=jax.dtypes.float0)
+    return (g_x, zero_fw, new_bw, zero_ids)
+
+
+boundary_apply.defvjp(_boundary_fwd, _boundary_bwd)
+
+
+def boundary_eval(policy: BoundaryPolicy, x, compress: bool):
+    """Inference-time boundary: plain fw compressor or identity.
+
+    The paper evaluates each trained model BOTH ways (Tables 1-4):
+    compression kept on at inference vs switched off.
+    """
+    return policy.fw(x) if compress else x
+
+
+# ---------------------------------------------------------------------------
+# State container helpers
+# ---------------------------------------------------------------------------
+
+def init_boundary_state(policy: BoundaryPolicy, feat_shape, *, batch: int,
+                        num_samples: int = 0, dtype=jnp.float32):
+    """``{'fw': buf, 'bw': buf}`` for one boundary (size-0 when unused)."""
+    from repro.core.feedback import init_buffer
+    fw = init_buffer(policy.feedback, feat_shape, dtype=dtype,
+                     num_samples=num_samples, batch=batch)
+    bw = init_buffer(policy.bw_feedback, feat_shape, dtype=dtype,
+                     num_samples=num_samples, batch=batch)
+    return {"fw": fw, "bw": bw}
+
+
+def init_all_boundary_states(comp_policy, feat_shape, *, batch: int,
+                             num_samples: int = 0, dtype=jnp.float32):
+    """One state dict per boundary of a CompressionPolicy."""
+    return [init_boundary_state(comp_policy.at(i), feat_shape, batch=batch,
+                                num_samples=num_samples, dtype=dtype)
+            for i in range(comp_policy.num_boundaries)]

@@ -1,0 +1,203 @@
+"""Compression operators for model-parallel boundary communication.
+
+Implements the paper's two operator families (Sec. 2.2, 2.3):
+
+* uniform k-bit min-max quantization  (``quantize_kbit`` / ``dequantize_kbit``)
+* TopK sparsification                 (``topk_mask`` / ``topk_compress``)
+
+All operators are pure functions over jnp arrays so they can be used inside
+``jax.custom_vjp`` boundaries, ``shard_map`` pipeline sends, and Pallas
+kernel reference tests.  Compression is applied along the *flattened* trailing
+feature dimensions of a per-example tensor unless stated otherwise, matching
+the paper ("input vector" = the activation tensor crossing the boundary).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Uniform k-bit min-max quantization (paper Sec. 2.2)
+# ---------------------------------------------------------------------------
+
+def quantize_kbit(x: jnp.ndarray, bits: int, axis=None) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Uniform k-bit quantization with min-max scaling.
+
+    Maps ``x`` to ``[0, 2**bits - 1]`` integer levels.  ``axis=None`` uses a
+    single global (per-tensor) min/max, as in the paper; a tuple of axes
+    yields per-slice scales (used by the per-tile Pallas variant).
+
+    Returns ``(codes_uint, x_min, scale)`` where
+    ``dequant = codes * scale + x_min``.
+    """
+    levels = (1 << bits) - 1
+    x_min = jnp.min(x, axis=axis, keepdims=axis is not None)
+    x_max = jnp.max(x, axis=axis, keepdims=axis is not None)
+    span = x_max - x_min
+    # Guard degenerate constant tensors.
+    scale = jnp.where(span > 0, span / levels, jnp.ones_like(span))
+    codes = jnp.clip(jnp.round((x - x_min) / scale), 0, levels)
+    codes = codes.astype(jnp.uint8 if bits <= 8 else jnp.uint16)
+    return codes, x_min, scale
+
+
+def dequantize_kbit(codes: jnp.ndarray, x_min: jnp.ndarray, scale: jnp.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    return (codes.astype(dtype) * scale.astype(dtype) + x_min.astype(dtype))
+
+
+def quantize_dequantize(x: jnp.ndarray, bits: int, axis=None) -> jnp.ndarray:
+    """The C(x) used in convergence experiments: quantize then dequantize."""
+    codes, x_min, scale = quantize_kbit(x, bits, axis=axis)
+    return dequantize_kbit(codes, x_min, scale, dtype=x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# TopK sparsification (paper Sec. 2.3)
+# ---------------------------------------------------------------------------
+
+def _flatten_per_example(x: jnp.ndarray) -> Tuple[jnp.ndarray, Tuple[int, ...]]:
+    """(B, ...) -> (B, N).  The paper compresses the per-example activation
+    vector crossing the boundary."""
+    b = x.shape[0]
+    return x.reshape(b, -1), x.shape
+
+
+def topk_mask(x: jnp.ndarray, k_frac: float, per_example: bool = True) -> jnp.ndarray:
+    """Boolean mask selecting the largest-|.| ``k_frac`` of entries.
+
+    ``per_example=True`` selects top-K within each batch element (paper's
+    setting: the communicated message is a per-example activation vector).
+    """
+    if not per_example:
+        flat = x.reshape(1, -1)
+    else:
+        flat, _ = _flatten_per_example(x)
+    n = flat.shape[-1]
+    k = max(1, int(round(k_frac * n)))
+    mag = jnp.abs(flat)
+    # threshold = k-th largest magnitude per row
+    thresh = jax.lax.top_k(mag, k)[0][..., -1:]
+    mask = mag >= thresh
+    return mask.reshape(x.shape)
+
+
+def topk_compress(x: jnp.ndarray, k_frac: float, per_example: bool = True) -> jnp.ndarray:
+    """C(x) for TopK: zero all but the largest-|.| K% entries."""
+    return jnp.where(topk_mask(x, k_frac, per_example), x, jnp.zeros_like(x))
+
+
+def topk_values_indices(x: jnp.ndarray, k_frac: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Wire format of TopK: (values, int32 indices), per example.
+
+    Used by the real pipeline path (core/pipeline.py) to compute actual
+    bytes-on-wire: 4 (fp32 value) + 4 (index) per kept entry, or 2+4 for bf16.
+    """
+    flat, _ = _flatten_per_example(x)
+    n = flat.shape[-1]
+    k = max(1, int(round(k_frac * n)))
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    vals = jnp.take_along_axis(flat, idx, axis=-1)
+    return vals, idx
+
+
+def topk_scatter(vals: jnp.ndarray, idx: jnp.ndarray, shape: Tuple[int, ...],
+                 dtype=jnp.float32) -> jnp.ndarray:
+    """Inverse of topk_values_indices: scatter back into a dense zero tensor."""
+    b = vals.shape[0]
+    n = 1
+    for s in shape[1:]:
+        n *= s
+    flat = jnp.zeros((b, n), dtype=dtype)
+    flat = jax.vmap(lambda f, i, v: f.at[i].set(v))(flat, idx, vals.astype(dtype))
+    return flat.reshape(shape)
+
+
+def apply_mask(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    return jnp.where(mask, x, jnp.zeros_like(x))
+
+
+# ---------------------------------------------------------------------------
+# Operator objects (used by CompressionPolicy / boundary)
+# ---------------------------------------------------------------------------
+
+# Which implementation C(x) runs on: "auto" uses the Pallas kernels on TPU
+# (per-tile scales / block-local TopK — the DESIGN.md §4 TPU adaptation)
+# and pure jnp elsewhere; "pallas" forces the kernels (interpret mode on
+# CPU — used by tests); "jnp" forces the references.
+KERNEL_BACKEND = "auto"
+
+
+def _use_pallas() -> bool:
+    if KERNEL_BACKEND == "pallas":
+        return True
+    if KERNEL_BACKEND == "jnp":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """A named compression operator C(x) plus its wire-cost model.
+
+    ``kind``: "none" | "quant" | "topk"
+    ``bits``: quantization bits (quant)
+    ``k_frac``: kept fraction (topk)
+    """
+    kind: str = "none"
+    bits: int = 8
+    k_frac: float = 1.0
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        if self.kind == "none":
+            return x
+        if self.kind == "quant":
+            if _use_pallas():
+                from repro.kernels.ops import quant_dequant_op
+                return quant_dequant_op(x, self.bits)
+            return quantize_dequantize(x, self.bits)
+        if self.kind == "topk":
+            if _use_pallas():
+                from repro.kernels.ops import topk_block_op
+                return topk_block_op(x, self.k_frac)
+            return topk_compress(x, self.k_frac)
+        raise ValueError(f"unknown compressor kind: {self.kind}")
+
+    # -- wire-cost model (bytes per element of the uncompressed tensor) -----
+    def wire_bytes_per_elem(self, elem_bytes: int = 2) -> float:
+        """Bytes actually communicated per original element (bf16 baseline=2).
+
+        quant: bits/8 (+ negligible per-tensor scale);
+        topk:  k_frac * (elem_bytes + 4) — value + int32 index.
+        """
+        if self.kind == "none":
+            return float(elem_bytes)
+        if self.kind == "quant":
+            return self.bits / 8.0
+        if self.kind == "topk":
+            return self.k_frac * (elem_bytes + 4)
+        raise ValueError(self.kind)
+
+    @property
+    def name(self) -> str:
+        if self.kind == "none":
+            return "none"
+        if self.kind == "quant":
+            return f"q{self.bits}"
+        return f"top{int(round(self.k_frac * 100))}%"
+
+
+IDENTITY = Compressor("none")
+
+
+def quant(bits: int) -> Compressor:
+    return Compressor("quant", bits=bits)
+
+
+def topk(k_frac: float) -> Compressor:
+    return Compressor("topk", k_frac=k_frac)

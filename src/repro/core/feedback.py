@@ -1,0 +1,91 @@
+"""Error-compensation message functions (paper Sec. 2.4, 2.5).
+
+Each function maps ``(compressor, x, buffer) -> (message, new_buffer)``.
+``message`` is what crosses the wire (and what the downstream stage sees);
+``new_buffer`` is the updated compensation state.
+
+Modes:
+  EF       (Seide et al.):     m = C(x + e);           e' = x + e - m
+  EF21     (Richtarik et al.): m = g + C(x - g);       g' = m
+  EF-mixed (this paper):       m = C_{K/2}(x) + C_{K/2}(e);  e' = x + e - m
+  AQ-SGD   (Wang et al.):      per-example EF21 on activations only:
+                               m_i = b_i + C(x_i - b_i); b_i' = m_i
+
+Buffers are plain arrays; AQ-SGD's buffer is ``(num_samples, *feat)`` and is
+gathered/scattered by example id.  All functions are pure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressors import Compressor, topk_compress
+
+
+def ef_message(comp: Compressor, x: jnp.ndarray, e: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xe = x + e
+    m = comp(xe)
+    return m, xe - m
+
+
+def ef21_message(comp: Compressor, x: jnp.ndarray, g: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    m = g + comp(x - g)
+    return m, m
+
+
+def efmixed_message(comp: Compressor, x: jnp.ndarray, e: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if comp.kind != "topk":
+        raise ValueError("EF-mixed is defined for TopK compression")
+    half = comp.k_frac / 2.0
+    m = topk_compress(x, half) + topk_compress(e, half)
+    return m, (x + e) - m
+
+
+def aqsgd_message(comp: Compressor, x: jnp.ndarray, buf: jnp.ndarray,
+                  ids: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-example EF21.  ``buf``: (num_samples, *feat); ``ids``: (B,) int32."""
+    b = buf[ids]                                # (B, *feat)
+    m = b + comp(x - b)
+    new_buf = buf.at[ids].set(m)
+    return m, new_buf
+
+
+def feedback_message(mode: str, comp: Compressor, x: jnp.ndarray,
+                     buf, ids=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dispatch. ``mode='none'`` ignores the buffer and returns it unchanged."""
+    if mode == "none":
+        return comp(x), buf
+    if mode == "ef":
+        return ef_message(comp, x, buf)
+    if mode == "ef21":
+        return ef21_message(comp, x, buf)
+    if mode == "efmixed":
+        return efmixed_message(comp, x, buf)
+    if mode == "aqsgd":
+        return aqsgd_message(comp, x, buf, ids)
+    raise ValueError(f"unknown feedback mode {mode}")
+
+
+def init_buffer(mode: str, feat_shape, dtype=jnp.float32, num_samples: int = 0,
+                batch: int = 0):
+    """Initial buffer for a boundary direction.
+
+    Global-buffer modes (ef/ef21/efmixed) keep one buffer of the full
+    boundary-tensor shape ``(batch, *feat)`` (paper: "global error buffer
+    ... added to the next batch").  AQ-SGD keeps ``(num_samples, *feat)``.
+    ``mode='none'`` returns a size-0 placeholder so pytree structure is
+    stable across policies.
+    """
+    if mode == "none":
+        return jnp.zeros((0,), dtype=dtype)
+    if mode == "aqsgd":
+        assert num_samples > 0, "aqsgd needs the dataset size"
+        return jnp.zeros((num_samples, *feat_shape), dtype=dtype)
+    assert batch > 0, "global EF buffer needs the batch size"
+    return jnp.zeros((batch, *feat_shape), dtype=dtype)

@@ -1,0 +1,133 @@
+"""Compression policy configuration for stage boundaries.
+
+A :class:`BoundaryPolicy` describes what happens at ONE pipeline-stage cut:
+which compressor is applied to the forward activations, which to the backward
+activation-gradients, and which error-compensation technique (if any) wraps
+each direction.  A :class:`CompressionPolicy` is the per-model plan: the list
+of stage cut points plus the boundary policy (the paper uses the same policy
+at every cut; we allow per-cut overrides).
+
+Frozen dataclasses => hashable => usable as ``jax.custom_vjp`` /
+``jax.jit`` static arguments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core.compressors import Compressor, IDENTITY, quant, topk
+
+
+FEEDBACK_MODES = ("none", "ef", "ef21", "efmixed", "aqsgd")
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundaryPolicy:
+    """Per-boundary compression behaviour.
+
+    fw / bw         : compressors for activations / activation-gradients.
+    feedback        : error compensation wrapping the FORWARD direction.
+                      "aqsgd" keeps a per-example buffer (paper Sec. 2.5),
+                      others keep one global buffer (paper Sec. 2.4).
+    bw_feedback     : error compensation wrapping the BACKWARD direction
+                      ("aqsgd" is not valid here; the paper applies AQ-SGD
+                      to activations only).
+    reuse_indices   : reuse the forward TopK mask to compress the backward
+                      gradient (paper Table 5 — required for LM fine-tuning).
+    compress_eval   : apply ``fw`` during inference.  The paper shows models
+                      trained with strong compression need this (Table 2).
+    """
+    fw: Compressor = IDENTITY
+    bw: Compressor = IDENTITY
+    feedback: str = "none"
+    bw_feedback: str = "none"
+    reuse_indices: bool = False
+    compress_eval: bool = True
+
+    def __post_init__(self):
+        if self.feedback not in FEEDBACK_MODES:
+            raise ValueError(f"bad feedback mode {self.feedback}")
+        if self.bw_feedback not in FEEDBACK_MODES or self.bw_feedback == "aqsgd":
+            if self.bw_feedback != "none" and self.bw_feedback not in ("ef", "ef21", "efmixed"):
+                raise ValueError(f"bad bw_feedback mode {self.bw_feedback}")
+        if self.reuse_indices and self.fw.kind != "topk":
+            raise ValueError("reuse_indices requires a TopK forward compressor")
+
+    @property
+    def needs_fw_buffer(self) -> bool:
+        return self.feedback in ("ef", "ef21", "efmixed", "aqsgd")
+
+    @property
+    def needs_bw_buffer(self) -> bool:
+        return self.bw_feedback in ("ef", "ef21", "efmixed")
+
+    @property
+    def name(self) -> str:
+        parts = [f"fw={self.fw.name}", f"bw={self.bw.name}"]
+        if self.feedback != "none":
+            parts.append(self.feedback)
+        if self.bw_feedback != "none":
+            parts.append(f"bw-{self.bw_feedback}")
+        if self.reuse_indices:
+            parts.append("reuse")
+        return ",".join(parts)
+
+
+NO_COMPRESSION = BoundaryPolicy()
+
+
+def quant_policy(fw_bits: int, bw_bits: int) -> BoundaryPolicy:
+    """Paper's fw[A]-bw[B] quantization mode (Table 1)."""
+    return BoundaryPolicy(fw=quant(fw_bits), bw=quant(bw_bits))
+
+
+def topk_policy(k_frac: float, reuse_indices: bool = False) -> BoundaryPolicy:
+    """Paper's TopK mode (Tables 2, 5)."""
+    return BoundaryPolicy(fw=topk(k_frac), bw=topk(k_frac),
+                          reuse_indices=reuse_indices)
+
+
+def ef_policy(k_frac: float, mode: str = "ef") -> BoundaryPolicy:
+    """Paper's error-feedback modes (Table 3): EF / EF21 / EF-mixed on both
+    directions, TopK compressors."""
+    return BoundaryPolicy(fw=topk(k_frac), bw=topk(k_frac),
+                          feedback=mode, bw_feedback=mode)
+
+
+def aqsgd_policy(k_frac: float) -> BoundaryPolicy:
+    """Paper's AQ-SGD + TopK mode (Table 4): per-example feedback on
+    activations, plain TopK on gradients."""
+    return BoundaryPolicy(fw=topk(k_frac), bw=topk(k_frac), feedback="aqsgd")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionPolicy:
+    """Model-level plan: where the stage cuts are and what happens at each.
+
+    ``num_stages`` stages => ``num_stages - 1`` boundaries (paper: MP degree
+    4 => 3 compression operations).  ``boundary`` is used at every cut unless
+    ``overrides`` provides a per-cut policy.
+    """
+    num_stages: int = 4
+    boundary: BoundaryPolicy = NO_COMPRESSION
+    overrides: Tuple[Tuple[int, BoundaryPolicy], ...] = ()
+
+    @property
+    def num_boundaries(self) -> int:
+        return max(0, self.num_stages - 1)
+
+    def at(self, i: int) -> BoundaryPolicy:
+        for j, p in self.overrides:
+            if j == i:
+                return p
+        return self.boundary
+
+    def cut_layers(self, num_layers: int) -> Tuple[int, ...]:
+        """Layer indices AFTER which a boundary sits (even partition)."""
+        if self.num_stages <= 1:
+            return ()
+        per = num_layers / self.num_stages
+        return tuple(int(round(per * (s + 1))) - 1 for s in range(self.num_stages - 1))
+
+
+NO_POLICY = CompressionPolicy(num_stages=1)

@@ -1,0 +1,85 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handle arbitrary-rank boundary tensors (flatten to 2D per example), choose
+tile shapes that divide the feature dim, fall back to the jnp reference when
+no 128-multiple tiling exists (e.g. odd smoke-test widths), and provide a
+straight-through custom_vjp so the kernels can sit INSIDE a compression
+boundary's forward pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.quantize import quant_dequant as _qdq_pallas
+from repro.kernels.topk_mask import topk_block as _topk_pallas
+
+_BN_CANDIDATES = (2048, 1024, 512, 256, 128)
+
+
+def _pick_bn(n: int):
+    for bn in _BN_CANDIDATES:
+        if n % bn == 0:
+            return bn
+    return None
+
+
+def _to_2d(x):
+    b = x.shape[0]
+    return x.reshape(b, -1)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def quant_dequant_op(x, bits: int):
+    """Per-tile fused quant-dequant of a boundary tensor (any rank)."""
+    flat = _to_2d(x)
+    m, n = flat.shape
+    bn = _pick_bn(n)
+    if bn is None:
+        return ref.quant_dequant_ref(flat, bits, block=(m, n)).reshape(x.shape)
+    bm = max(1, min(256, m))
+    while m % bm:
+        bm -= 1
+    y = _qdq_pallas(flat, bits, block=(bm, bn))
+    return y.reshape(x.shape)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def topk_block_op(x, k_frac: float):
+    """Block-local TopK of a boundary tensor (any rank)."""
+    flat = _to_2d(x)
+    m, n = flat.shape
+    bn = _pick_bn(n)
+    if bn is None:
+        return ref.topk_block_ref(flat, k_frac, block=(m, n)).reshape(x.shape)
+    bm = max(1, min(256, m))
+    while m % bm:
+        bm -= 1
+    y = _topk_pallas(flat, k_frac, block=(bm, bn))
+    return y.reshape(x.shape)
+
+
+# straight-through estimators (compression sits in a custom_vjp boundary;
+# these make the kernels usable stand-alone too)
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def quant_dequant_st(x, bits: int):
+    return quant_dequant_op(x, bits)
+
+
+quant_dequant_st.defvjp(
+    lambda x, bits: (quant_dequant_op(x, bits), None),
+    lambda bits, _, g: (g,))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def topk_block_st(x, k_frac: float):
+    return topk_block_op(x, k_frac)
+
+
+topk_block_st.defvjp(
+    lambda x, k: (topk_block_op(x, k), None),
+    lambda k, _, g: (g,))

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (bit-exact where stated)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def _tile_view(x, bm, bn):
+    m, n = x.shape
+    return x.reshape(m // bm, bm, n // bn, bn)
+
+
+def quant_dequant_ref(x: jnp.ndarray, bits: int, block=(256, 256)):
+    """Per-tile min-max quant-dequant; mirrors kernels/quantize.py exactly."""
+    m, n = x.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    levels = (1 << bits) - 1
+    t = _tile_view(x, bm, bn).astype(jnp.float32)
+    xmin = t.min(axis=(1, 3), keepdims=True)
+    xmax = t.max(axis=(1, 3), keepdims=True)
+    span = xmax - xmin
+    scale = jnp.where(span > 0, span / levels, 1.0)
+    codes = jnp.clip(jnp.round((t - xmin) / scale), 0.0, float(levels))
+    out = (codes * scale + xmin).astype(x.dtype)
+    return _untile(out, m, n)
+
+
+def _untile(t, m, n):
+    # t: (gm, bm, gn, bn) laid out as produced by _tile_view (no transpose)
+    return t.reshape(m, n)
+
+
+def quantize_wire_ref(x, bits: int, block=(256, 256)):
+    m, n = x.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    levels = (1 << bits) - 1
+    t = _tile_view(x, bm, bn).astype(jnp.float32)
+    xmin = t.min(axis=(1, 3))
+    xmax = t.max(axis=(1, 3))
+    span = xmax - xmin
+    scale = jnp.where(span > 0, span / levels, 1.0)
+    codes = jnp.clip(jnp.round((t - xmin[:, None, :, None])
+                               / scale[:, None, :, None]), 0.0,
+                     float(levels)).astype(jnp.uint8)
+    gm, gn = m // bm, n // bn
+    meta = jnp.zeros((gm, 2 * gn), jnp.float32)
+    meta = meta.at[:, 0::2].set(xmin)
+    meta = meta.at[:, 1::2].set(scale)
+    return _untile(codes, m, n), meta
+
+
+def topk_block_ref(x: jnp.ndarray, k_frac: float, block=(256, 512),
+                   iters: int = 24):
+    """Bit-exact mirror of kernels/topk_mask.py (same bisection)."""
+    m, n = x.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    k = jnp.float32(max(1, int(math.ceil(k_frac * bn))))
+    t = _tile_view(x, bm, bn)
+    mag = jnp.abs(t.astype(jnp.float32))
+    hi = mag.max(axis=3, keepdims=True)
+    lo = jnp.zeros_like(hi)
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum((mag >= mid).astype(jnp.float32), axis=3, keepdims=True)
+        gt = cnt > k
+        lo = jnp.where(gt, mid, lo)
+        hi = jnp.where(gt, hi, mid)
+    out = jnp.where(mag >= lo, t, jnp.zeros_like(t))
+    return _untile(out, m, n)
+
+
+def topk_exact_block_ref(x: jnp.ndarray, k_frac: float, block=(256, 512)):
+    """EXACT per-row-per-tile TopK via sort — the semantic target the
+    bisection approximates (used by property tests + convergence studies)."""
+    m, n = x.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    k = max(1, int(math.ceil(k_frac * bn)))
+    t = _tile_view(x, bm, bn)
+    mag = jnp.abs(t.astype(jnp.float32))
+    thresh = jax.lax.top_k(mag, k)[0][..., -1:]
+    out = jnp.where(mag >= thresh, t, jnp.zeros_like(t))
+    return _untile(out, m, n)

@@ -1,0 +1,73 @@
+"""ShapeDtypeStruct stand-ins for every (architecture x input-shape) pair.
+
+No device allocation — the dry-run lowers against these structs only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k":    InputShape("train_4k", "train", 4_096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k":  InputShape("decode_32k", "decode", 32_768, 128),
+    "long_500k":   InputShape("long_500k", "decode", 524_288, 1),
+}
+
+
+def _sd(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape):
+    """The data-batch pytree for train/prefill (tokens + modality stubs)."""
+    b, s = shape.batch, shape.seq
+    batch = {"tokens": _sd((b, s), jnp.int32)}
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = _sd((b, cfg.num_patches, cfg.d_model),
+                                    jnp.bfloat16)
+    if cfg.enc_dec:
+        batch["enc_embeds"] = _sd((b, cfg.enc_seq, cfg.d_model),
+                                  jnp.bfloat16)
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape):
+    """(token, caches, pos) structs for one decode step with a filled cache
+    of length ``shape.seq``."""
+    b, s = shape.batch, shape.seq
+    mod = encdec if cfg.enc_dec else transformer
+    caches = jax.eval_shape(
+        lambda: mod.init_caches(cfg, b, s, jnp.bfloat16))
+    if cfg.enc_dec:
+        memory = _sd((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        caches = (caches, memory)
+    token = _sd((b,), jnp.int32)
+    pos = _sd((), jnp.int32)
+    return token, caches, pos
+
+
+def ids_spec(shape: InputShape):
+    return _sd((shape.batch,), jnp.int32)
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> bool:
+    """long_500k only for sub-quadratic-decode archs (DESIGN.md §7)."""
+    if shape_name != "long_500k":
+        return True
+    return cfg.supports_long_decode()

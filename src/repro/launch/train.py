@@ -1,0 +1,150 @@
+"""End-to-end training driver.
+
+Trains any registry architecture (full or --smoke reduced variant) on the
+synthetic LM stream with a boundary-compression policy, on the current
+device set (CPU here; the same program lowers to the production mesh via
+launch/dryrun.py).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch gpt2-small --smoke \
+      --steps 200 --batch 8 --seq 128 --policy top10reuse
+  PYTHONPATH=src python -m repro.launch.train --arch mixtral-8x7b --smoke \
+      --steps 50 --policy q4q8 --microbatches 2 --ckpt /tmp/mix.npz
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import io as ckpt_io
+from repro.configs.registry import ARCHS, get
+from repro.core.boundary import init_boundary_state
+from repro.core.policy import (CompressionPolicy, NO_POLICY, ef_policy,
+                               quant_policy, topk_policy)
+from repro.models import encdec, transformer
+from repro.models.config import active_param_count, param_count
+from repro.optim.optimizers import OptimizerConfig, init_opt_state
+from repro.train.steps import make_lm_train_step
+
+POLICIES = {
+    "none": lambda: NO_POLICY,
+    "q4q8": lambda: CompressionPolicy(num_stages=4,
+                                      boundary=quant_policy(4, 8)),
+    "top10": lambda: CompressionPolicy(num_stages=4,
+                                       boundary=topk_policy(0.10)),
+    "top10reuse": lambda: CompressionPolicy(
+        num_stages=4, boundary=topk_policy(0.10, reuse_indices=True)),
+    "ef21top10": lambda: CompressionPolicy(num_stages=4,
+                                           boundary=ef_policy(0.10, "ef21")),
+}
+
+
+def synthetic_stream(cfg, batch: int, seq: int, seed: int = 0):
+    """Deterministic order-2 Markov token stream (see data/synthetic.py),
+    vocab-clipped to the model's vocabulary."""
+    rng = np.random.RandomState(seed)
+    vocab = min(cfg.vocab_size, 1024)
+    succ = rng.randint(0, vocab, size=(vocab, vocab, 4))
+    step = 0
+    while True:
+        r = np.random.RandomState(seed + 1 + step)
+        out = np.zeros((batch, seq), np.int32)
+        out[:, 0] = r.randint(0, vocab, batch)
+        out[:, 1] = r.randint(0, vocab, batch)
+        for t in range(2, seq):
+            out[:, t] = succ[out[:, t - 2], out[:, t - 1],
+                             r.randint(0, 4, batch)]
+        ids = np.arange(batch, dtype=np.int32) + batch * step
+        yield out, ids
+        step += 1
+
+
+def make_batch(cfg, tokens):
+    b = {"tokens": jnp.asarray(tokens)}
+    n = tokens.shape[0]
+    if cfg.frontend == "vision":
+        b["patch_embeds"] = jnp.zeros((n, cfg.num_patches, cfg.d_model),
+                                      jnp.bfloat16)
+    if cfg.enc_dec:
+        b["enc_embeds"] = jnp.zeros((n, cfg.enc_seq, cfg.d_model),
+                                    jnp.bfloat16)
+    return b
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt2-small", choices=sorted(ARCHS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--policy", default="none", choices=sorted(POLICIES))
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, help="write metrics here")
+    args = ap.parse_args(argv)
+
+    cfg = get(args.arch, smoke=args.smoke)
+    seq = min(args.seq, cfg.max_seq)
+    policy = POLICIES[args.policy]()
+    n_params = param_count(cfg)
+    print(f"# arch={cfg.arch_id} params~{n_params/1e6:.1f}M "
+          f"(active {active_param_count(cfg)/1e6:.1f}M) "
+          f"B={args.batch} S={seq} policy={args.policy} "
+          f"devices={jax.device_count()}", flush=True)
+
+    opt = OptimizerConfig(kind="adamw", lr=args.lr, weight_decay=0.01,
+                          schedule="cosine", t_max=args.steps, grad_clip=1.0)
+    params = (encdec if cfg.enc_dec else transformer).init_params(
+        jax.random.PRNGKey(args.seed), cfg)
+    opt_state = init_opt_state(opt, params)
+    bstates = [init_boundary_state(policy.at(i), (seq, cfg.d_model),
+                                   batch=args.batch, dtype=jnp.bfloat16)
+               for i in range(policy.num_boundaries)]
+    step_fn = make_lm_train_step(cfg, policy, opt, remat=not args.no_remat,
+                                 donate=False,
+                                 microbatches=args.microbatches)
+
+    stream = synthetic_stream(cfg, args.batch, seq, args.seed)
+    metrics, t0 = [], time.time()
+    tokens_per_step = args.batch * seq
+    for step in range(1, args.steps + 1):
+        toks, ids = next(stream)
+        params, opt_state, bstates, m = step_fn(
+            params, opt_state, bstates, make_batch(cfg, toks),
+            jnp.asarray(ids))
+        if step % args.log_every == 0 or step == args.steps:
+            dt = time.time() - t0
+            loss = float(m["loss"])
+            rec = {"step": step, "loss": round(loss, 4),
+                   "ppl": round(math.exp(min(loss, 20.0)), 2),
+                   "tok_per_s": round(step * tokens_per_step / dt, 1),
+                   "wall_s": round(dt, 1)}
+            metrics.append(rec)
+            print(json.dumps(rec), flush=True)
+        if args.ckpt and (step % args.ckpt_every == 0
+                          or step == args.steps):
+            ckpt_io.save(args.ckpt, params, step=step,
+                         extra={"arch": cfg.arch_id, "policy": args.policy})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(metrics, f, indent=1)
+    print(f"# done: final loss {metrics[-1]['loss']}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

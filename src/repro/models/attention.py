@@ -1,0 +1,195 @@
+"""GQA attention: full / sliding-window / logit-softcap variants.
+
+Three entry points per layer:
+  * ``attn_train``   — full-sequence causal self-attention (training/prefill)
+  * ``attn_prefill`` — attn_train + returns the filled KV cache
+  * ``attn_decode``  — one new token against a KV cache (full or ring buffer)
+
+Cache layout: ``{"k": (B, C, KV, hd), "v": (B, C, KV, hd)}`` where C is the
+full context for global layers and ``window`` for SWA layers (ring buffer —
+this is what makes mixtral/gemma2 long_500k decode sub-quadratic in memory).
+RoPE is applied at *write* time so ring slots never need re-rotation.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import DTYPE, apply_rope, dense_init, softcap
+from repro.sharding.ctx import constrain
+
+
+def attn_init(key, d: int, num_heads: int, num_kv_heads: int, head_dim: int,
+              dtype=DTYPE):
+    ks = jax.random.split(key, 4)
+    return {"wq": dense_init(ks[0], d, num_heads * head_dim, dtype),
+            "wk": dense_init(ks[1], d, num_kv_heads * head_dim, dtype),
+            "wv": dense_init(ks[2], d, num_kv_heads * head_dim, dtype),
+            "wo": dense_init(ks[3], num_heads * head_dim, d, dtype)}
+
+
+def _project_qkv(params, x, num_heads, num_kv_heads, head_dim):
+    b, s, _ = x.shape
+    q = (x @ params["wq"]).reshape(b, s, num_heads, head_dim)
+    k = (x @ params["wk"]).reshape(b, s, num_kv_heads, head_dim)
+    v = (x @ params["wv"]).reshape(b, s, num_kv_heads, head_dim)
+    return q, k, v
+
+
+def _sdpa_block(q, k, v, mask, cap: Optional[float]):
+    """q: (B,S,H,hd); k,v: (B,T,KV,hd); mask broadcast to (B,H,S,T)."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    groups = h // kv
+    qg = q.reshape(b, s, kv, groups, hd)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(jnp.float32(hd))
+    logits = softcap(logits, cap)
+    logits = jnp.where(mask[:, None, None, :, :] if mask.ndim == 3
+                       else mask, logits, jnp.float32(-1e30))
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, hd)
+
+
+def _qchunk(s: int) -> int:
+    """Query-chunk size: bounds the materialized (S_chunk x T) logits so
+    long-sequence training/prefill never holds an S x S tensor (flash-style;
+    the python loop keeps HLO cost analysis exact, unlike a scan)."""
+    if s <= 2048:
+        return s
+    return max(2048, s // 4)
+
+
+def _sdpa(q, k, v, mask, cap: Optional[float]):
+    s = q.shape[1]
+    qc = _qchunk(s)
+    if qc >= s:
+        return _sdpa_block(q, k, v, mask, cap)
+    outs = []
+    for i in range(0, s, qc):
+        mi = mask[:, i:i + qc] if mask.ndim == 3 else mask
+        outs.append(_sdpa_block(q[:, i:i + qc], k, v, mi, cap))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _causal_mask(s: int, window: Optional[int], positions) -> jnp.ndarray:
+    """(1, S, S) bool mask; window==None => plain causal."""
+    qp = positions[:, None]          # (S,1)
+    kp = positions[None, :]          # (1,S)
+    m = kp <= qp
+    if window is not None:
+        m &= kp > qp - window
+    return m[None]
+
+
+def attn_train(params, x, *, num_heads, num_kv_heads, head_dim,
+               pos_embed="rope", rope_theta=10_000.0, window=None,
+               attn_softcap=None, positions=None):
+    b, s, d = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    q, k, v = _project_qkv(params, x, num_heads, num_kv_heads, head_dim)
+    if pos_embed == "rope":
+        q = apply_rope(q, positions[None], rope_theta)
+        k = apply_rope(k, positions[None], rope_theta)
+    mask = _causal_mask(s, window, positions)
+    out = _sdpa(q, k, v, mask, attn_softcap)
+    out = out.reshape(b, s, num_heads * head_dim)
+    return out @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(batch: int, cache_len: int, num_kv_heads: int, head_dim: int,
+               dtype=DTYPE):
+    shape = (batch, cache_len, num_kv_heads, head_dim)
+    k = constrain(jnp.zeros(shape, dtype), "batch", "seq", "model", None)
+    v = constrain(jnp.zeros(shape, dtype), "batch", "seq", "model", None)
+    return {"k": k, "v": v}
+
+
+def attn_decode(params, x1, cache, pos, *, num_heads, num_kv_heads, head_dim,
+                pos_embed="rope", rope_theta=10_000.0, window=None,
+                attn_softcap=None):
+    """One-token decode.  x1: (B, 1, d); pos: scalar int32 (current index).
+
+    ``window`` set => the cache is a ring buffer of length ``cache["k"].shape[1]
+    == window`` and slots hold RoPE-rotated keys at their absolute positions.
+    """
+    b = x1.shape[0]
+    c = cache["k"].shape[1]
+    q, k, v = _project_qkv(params, x1, num_heads, num_kv_heads, head_dim)
+    if pos_embed == "rope":
+        posb = jnp.full((1, 1), pos)
+        q = apply_rope(q, posb, rope_theta)
+        k = apply_rope(k, posb, rope_theta)
+    slot = pos % c if window is not None else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    idx = jnp.arange(c)
+    if window is None:
+        valid = idx <= pos                              # absolute layout
+    else:
+        # ring layout: slot i holds absolute position p_i where
+        # p_i = pos - ((slot - i) mod c); valid iff p_i > pos - window
+        age = (slot - idx) % c
+        valid = age < jnp.minimum(pos + 1, c)
+    mask = valid[None, None, None, :]                   # (1,1,1,C) -> bcast
+    out = _sdpa(q, ck, cv, mask, attn_softcap)
+    out = out.reshape(b, 1, num_heads * head_dim)
+    return out @ params["wo"], {"k": ck, "v": cv}
+
+
+def attn_prefill(params, x, *, cache_len, num_heads, num_kv_heads, head_dim,
+                 pos_embed="rope", rope_theta=10_000.0, window=None,
+                 attn_softcap=None):
+    """Full-sequence forward that also fills the cache (inference prefill)."""
+    b, s, d = x.shape
+    positions = jnp.arange(s)
+    q, k, v = _project_qkv(params, x, num_heads, num_kv_heads, head_dim)
+    if pos_embed == "rope":
+        q = apply_rope(q, positions[None], rope_theta)
+        k = apply_rope(k, positions[None], rope_theta)
+    mask = _causal_mask(s, window, positions)
+    out = _sdpa(q, k, v, mask, attn_softcap)
+    out = out.reshape(b, s, num_heads * head_dim)
+    ring = window is not None
+    csize = cache_len if not ring else min(window, cache_len)
+    cache = init_cache(b, csize, num_kv_heads, head_dim, k.dtype)
+    c = min(csize, s)
+    klast = k[:, s - c:].astype(cache["k"].dtype)
+    vlast = v[:, s - c:].astype(cache["v"].dtype)
+    if ring and c == csize and s % c:
+        # ring semantics: abs position p lives at slot p % c
+        klast = jnp.roll(klast, s % c, axis=1)
+        vlast = jnp.roll(vlast, s % c, axis=1)
+    ck = jax.lax.dynamic_update_slice(cache["k"], klast, (0, 0, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], vlast, (0, 0, 0, 0))
+    return out @ params["wo"], {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_init(key, d: int, num_heads: int, head_dim: int, dtype=DTYPE):
+    return attn_init(key, d, num_heads, num_heads, head_dim, dtype)
+
+
+def cross_attn(params, x, memory, *, num_heads, head_dim):
+    """x: (B,S,d) queries; memory: (B,T,d) encoder output (non-causal)."""
+    b, s, _ = x.shape
+    t = memory.shape[1]
+    q = (x @ params["wq"]).reshape(b, s, num_heads, head_dim)
+    k = (memory @ params["wk"]).reshape(b, t, num_heads, head_dim)
+    v = (memory @ params["wv"]).reshape(b, t, num_heads, head_dim)
+    mask = jnp.ones((1, 1, 1, t), bool)
+    out = _sdpa(q, k, v, mask, None).reshape(b, s, num_heads * head_dim)
+    return out @ params["wo"]

@@ -1,0 +1,435 @@
+"""Per-layer blocks for every architecture family.
+
+Kinds:
+  dense        — GQA attention + MLP (llama/glm/granite/starcoder2/pixtral)
+  attn_local   — dense with sliding-window attention   (gemma2 even layers)
+  attn_global  — dense with full attention             (gemma2 odd layers)
+  moe          — GQA attention + MoE FFN               (mixtral, llama4)
+  rwkv         — RWKV6 time-mix + channel-mix          (attention-free)
+  hymba        — parallel GQA + Mamba2/SSD heads, then MLP
+
+Uniform interface so the stack can `lax.scan` over layer groups:
+  block_init(key, cfg, kind)                      -> params
+  block_train(params, x, cfg, kind)               -> (y, aux)
+  block_prefill(params, x, cfg, kind, cache_len)  -> (y, cache, aux)
+  block_decode(params, x1, cache, pos, cfg, kind) -> (y, new_cache)
+  block_cache(cfg, kind, batch, cache_len, dtype) -> cache pytree
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models.common import (DTYPE, dense_init, mlp_apply, mlp_init,
+                                 norm_apply, norm_init)
+from repro.models.config import ModelConfig
+from repro.models.linattn import (chunked_linear_attention,
+                                  linear_attention_decode)
+from repro.models.moe import moe_apply, moe_init
+
+RWKV_LORA = 32
+RWKV_DECAY_LORA = 64
+RWKV_HEAD = 64          # rwkv6 head size (K == V == 64)
+
+
+# ===========================================================================
+# Attention-family blocks (dense / attn_local / attn_global / moe)
+# ===========================================================================
+
+def _attn_kwargs(cfg: ModelConfig, kind: str):
+    window = cfg.window
+    if kind == "attn_local":
+        window = cfg.window or 4096
+    elif kind == "attn_global":
+        window = None
+    return dict(num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, pos_embed=cfg.pos_embed,
+                rope_theta=cfg.rope_theta, window=window,
+                attn_softcap=cfg.attn_softcap)
+
+
+def _attn_block_init(key, cfg: ModelConfig, moe: bool):
+    ks = jax.random.split(key, 6)
+    p = {"ln1": norm_init(cfg.d_model, cfg.norm),
+         "ln2": norm_init(cfg.d_model, cfg.norm),
+         "attn": A.attn_init(ks[0], cfg.d_model, cfg.num_heads,
+                             cfg.num_kv_heads, cfg.resolved_head_dim)}
+    if cfg.post_norm:
+        p["pn1"] = norm_init(cfg.d_model, cfg.norm)
+        p["pn2"] = norm_init(cfg.d_model, cfg.norm)
+    if moe:
+        p["moe"] = moe_init(ks[1], cfg.d_model, cfg.d_ff, cfg.num_experts,
+                            cfg.mlp, cfg.num_shared_experts)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp)
+    return p
+
+
+def _maybe_post(p, name, h, cfg):
+    return norm_apply(p[name], h, cfg.norm) if cfg.post_norm else h
+
+
+def _ffn(p, h, cfg: ModelConfig, moe: bool):
+    if moe:
+        return moe_apply(p["moe"], h, num_experts=cfg.num_experts,
+                         top_k=cfg.top_k, mlp_kind=cfg.mlp,
+                         capacity_factor=cfg.capacity_factor,
+                         dispatch_quant=cfg.moe_dispatch_quant)
+    return mlp_apply(p["mlp"], h, cfg.mlp), jnp.float32(0.0)
+
+
+def _attn_block_train(p, x, cfg: ModelConfig, kind: str):
+    moe = kind == "moe"
+    h = A.attn_train(p["attn"], norm_apply(p["ln1"], x, cfg.norm),
+                     **_attn_kwargs(cfg, kind))
+    x = x + _maybe_post(p, "pn1", h, cfg)
+    h, aux = _ffn(p, norm_apply(p["ln2"], x, cfg.norm), cfg, moe)
+    x = x + _maybe_post(p, "pn2", h, cfg)
+    return x, aux
+
+
+def _attn_block_prefill(p, x, cfg: ModelConfig, kind: str, cache_len: int):
+    moe = kind == "moe"
+    h, cache = A.attn_prefill(p["attn"], norm_apply(p["ln1"], x, cfg.norm),
+                              cache_len=cache_len, **_attn_kwargs(cfg, kind))
+    x = x + _maybe_post(p, "pn1", h, cfg)
+    h, aux = _ffn(p, norm_apply(p["ln2"], x, cfg.norm), cfg, moe)
+    x = x + _maybe_post(p, "pn2", h, cfg)
+    return x, cache, aux
+
+
+def _attn_block_decode(p, x1, cache, pos, cfg: ModelConfig, kind: str):
+    moe = kind == "moe"
+    h, cache = A.attn_decode(p["attn"], norm_apply(p["ln1"], x1, cfg.norm),
+                             cache, pos, **_attn_kwargs(cfg, kind))
+    x1 = x1 + _maybe_post(p, "pn1", h, cfg)
+    h, _ = _ffn(p, norm_apply(p["ln2"], x1, cfg.norm), cfg, moe)
+    x1 = x1 + _maybe_post(p, "pn2", h, cfg)
+    return x1, cache
+
+
+def _attn_block_cache(cfg: ModelConfig, kind: str, batch: int,
+                      cache_len: int, dtype):
+    kw = _attn_kwargs(cfg, kind)
+    c = cache_len if kw["window"] is None else min(kw["window"], cache_len)
+    return A.init_cache(batch, c, cfg.num_kv_heads, cfg.resolved_head_dim,
+                        dtype)
+
+
+# ===========================================================================
+# RWKV6 (Finch) block
+# ===========================================================================
+
+def _rwkv_heads(cfg: ModelConfig) -> Tuple[int, int]:
+    hs = cfg.ssm_state or RWKV_HEAD
+    assert cfg.d_model % hs == 0
+    return cfg.d_model // hs, hs            # (H, head_size)
+
+
+def _rwkv_block_init(key, cfg: ModelConfig):
+    d, ff = cfg.d_model, cfg.d_ff
+    h, hs = _rwkv_heads(cfg)
+    ks = jax.random.split(key, 12)
+    f32 = jnp.float32
+    # decay base: spread in [-6, -0.3] across channels (rwkv init)
+    dec = -6.0 + 5.7 * (jnp.arange(d, dtype=f32) / max(d - 1, 1)) ** 1.3
+    return {
+        "ln1": norm_init(d, cfg.norm), "ln2": norm_init(d, cfg.norm),
+        "tm": {
+            "mu_x": jnp.full((d,), 0.5, f32),
+            "mu": jnp.full((5, d), 0.5, f32),                  # r,k,v,g,w
+            "lora_A": dense_init(ks[0], d, 5 * RWKV_LORA, f32),
+            "lora_B": (jax.random.normal(ks[1], (5, RWKV_LORA, d), f32)
+                       * 0.01),
+            "wr": dense_init(ks[2], d, d), "wk": dense_init(ks[3], d, d),
+            "wv": dense_init(ks[4], d, d), "wg": dense_init(ks[5], d, d),
+            "wo": dense_init(ks[6], d, d),
+            "w0": dec,
+            "w_lora_A": dense_init(ks[7], d, RWKV_DECAY_LORA, f32),
+            "w_lora_B": (jax.random.normal(ks[8], (RWKV_DECAY_LORA, d), f32)
+                         * 0.01),
+            "u": jax.random.normal(ks[9], (h, hs), f32) * 0.1,
+            "gn_scale": jnp.ones((d,), f32),
+            "gn_bias": jnp.zeros((d,), f32),
+        },
+        "cm": {
+            "mu_k": jnp.full((d,), 0.5, f32),
+            "mu_r": jnp.full((d,), 0.5, f32),
+            "wk": dense_init(ks[10], d, ff),
+            "wv": dense_init(ks[11], ff, d),
+            "wr": dense_init(ks[0], d, d),
+        },
+    }
+
+
+def _shift(x, state):
+    """x: (B,S,d); state: (B,d) previous token (zeros at start)."""
+    return jnp.concatenate([state[:, None], x[:, :-1]], axis=1)
+
+
+def _rwkv_time_mix(tm, x, sx, cfg: ModelConfig, state, decode: bool):
+    """x: (B,S,d); sx: shifted x; state: (B,H,K,V)."""
+    b, s, d = x.shape
+    h, hs = _rwkv_heads(cfg)
+    xf = x.astype(jnp.float32)
+    dx = sx.astype(jnp.float32) - xf
+    xx = xf + dx * tm["mu_x"]
+    lora = jnp.tanh(xx @ tm["lora_A"]).reshape(b, s, 5, RWKV_LORA)
+    delta = jnp.einsum("bsfr,frd->bsfd", lora, tm["lora_B"])    # (B,S,5,d)
+    mixed = xf[:, :, None] + dx[:, :, None] * (tm["mu"] + delta)
+    xr, xk, xv, xg, xw = (mixed[:, :, i].astype(x.dtype) for i in range(5))
+
+    r = (xr @ tm["wr"]).reshape(b, s, h, hs).transpose(0, 2, 1, 3)
+    k = (xk @ tm["wk"]).reshape(b, s, h, hs).transpose(0, 2, 1, 3)
+    v = (xv @ tm["wv"]).reshape(b, s, h, hs).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(xg @ tm["wg"])
+    log_w = -jnp.exp(tm["w0"]
+                     + jnp.tanh(xw.astype(jnp.float32) @ tm["w_lora_A"])
+                     @ tm["w_lora_B"])                          # (B,S,d) <= 0
+    log_w = log_w.reshape(b, s, h, hs).transpose(0, 2, 1, 3)
+
+    if decode:
+        y, new_state = linear_attention_decode(
+            r[:, :, 0], k[:, :, 0], v[:, :, 0], log_w[:, :, 0], state,
+            bonus=tm["u"])
+        y = y[:, :, None].transpose(0, 2, 1, 3)                 # (B,1,H,V)
+    else:
+        y, new_state = chunked_linear_attention(
+            r, k, v, log_w, bonus=tm["u"], initial_state=state)
+        y = y.transpose(0, 2, 1, 3)                             # (B,S,H,V)
+
+    # per-head group norm
+    yf = y.astype(jnp.float32)
+    mu = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yf = (yf - mu) * jax.lax.rsqrt(var + 64e-5)
+    yf = yf.reshape(b, -1, d) * tm["gn_scale"] + tm["gn_bias"]
+    out = (yf.astype(x.dtype) * g) @ tm["wo"]
+    return out, new_state
+
+
+def _rwkv_channel_mix(cm, x, sx):
+    xf = x.astype(jnp.float32)
+    dx = sx.astype(jnp.float32) - xf
+    xk = (xf + dx * cm["mu_k"]).astype(x.dtype)
+    xr = (xf + dx * cm["mu_r"]).astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ cm["wk"]))
+    return jax.nn.sigmoid(xr @ cm["wr"]) * (kk @ cm["wv"])
+
+
+def _rwkv_block_train(p, x, cfg: ModelConfig, state=None):
+    b, s, d = x.shape
+    h, hs = _rwkv_heads(cfg)
+    if state is None:
+        state = _rwkv_block_cache(cfg, "rwkv", b, 0, x.dtype)
+    xn = norm_apply(p["ln1"], x, cfg.norm)
+    h_out, new_s = _rwkv_time_mix(p["tm"], xn, _shift(xn, state["tm"]),
+                                  cfg, state["S"], decode=False)
+    x = x + h_out
+    xn2 = norm_apply(p["ln2"], x, cfg.norm)
+    x = x + _rwkv_channel_mix(p["cm"], xn2, _shift(xn2, state["cm"]))
+    new_cache = {"S": new_s, "tm": xn[:, -1], "cm": xn2[:, -1]}
+    return x, new_cache
+
+
+def _rwkv_block_decode(p, x1, cache, pos, cfg: ModelConfig):
+    xn = norm_apply(p["ln1"], x1, cfg.norm)
+    h_out, new_s = _rwkv_time_mix(p["tm"], xn, cache["tm"][:, None], cfg,
+                                  cache["S"], decode=True)
+    x1 = x1 + h_out
+    xn2 = norm_apply(p["ln2"], x1, cfg.norm)
+    x1 = x1 + _rwkv_channel_mix(p["cm"], xn2, cache["cm"][:, None])
+    return x1, {"S": new_s, "tm": xn[:, 0], "cm": xn2[:, 0]}
+
+
+def _rwkv_block_cache(cfg: ModelConfig, kind, batch, cache_len, dtype):
+    h, hs = _rwkv_heads(cfg)
+    return {"S": jnp.zeros((batch, h, hs, hs), jnp.float32),
+            "tm": jnp.zeros((batch, cfg.d_model), dtype),
+            "cm": jnp.zeros((batch, cfg.d_model), dtype)}
+
+
+# ===========================================================================
+# Hymba block: parallel GQA attention + Mamba2/SSD heads
+# ===========================================================================
+
+def _hymba_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    hd = cfg.resolved_head_dim
+    nh = cfg.ssm_heads or cfg.num_heads
+    return nh, hd, cfg.ssm_state or 16       # (ssm heads, head dim, state N)
+
+
+def _hymba_block_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    nh, hd, n = _hymba_dims(cfg)
+    sd = nh * hd
+    ks = jax.random.split(key, 8)
+    f32 = jnp.float32
+    p = _attn_block_init(ks[0], cfg, moe=False)
+    p["ssm"] = {
+        "in_proj": dense_init(ks[1], d, 2 * sd),
+        "w_dt": dense_init(ks[2], d, nh, f32),
+        "dt_bias": jnp.zeros((nh,), f32),
+        "w_b": dense_init(ks[3], d, n),
+        "w_c": dense_init(ks[4], d, n),
+        "a_log": jnp.log(jnp.linspace(1.0, 8.0, nh)),           # decay rates
+        "d_skip": jnp.ones((nh,), f32),
+        "out_proj": dense_init(ks[5], sd, d),
+    }
+    p["ln_attn_out"] = norm_init(d, cfg.norm)
+    p["ln_ssm_out"] = norm_init(d, cfg.norm)
+    return p
+
+
+def _ssd_project(ssm, x, cfg):
+    b, s, d = x.shape
+    nh, hd, n = _hymba_dims(cfg)
+    xz = x @ ssm["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)                           # (B,S,sd)
+    dt = jax.nn.softplus(x.astype(jnp.float32) @ ssm["w_dt"]
+                         + ssm["dt_bias"])                      # (B,S,H)
+    log_w = -jnp.exp(ssm["a_log"]) * dt                         # (B,S,H)
+    bb = (x @ ssm["w_b"]).astype(jnp.float32)                   # (B,S,N)
+    cc = (x @ ssm["w_c"]).astype(jnp.float32)                   # (B,S,N)
+    xh = xs.reshape(b, s, nh, hd).astype(jnp.float32)
+    v = xh * dt[..., None]                                      # dt-scaled
+    return xs, z, v, bb, cc, log_w, dt, xh
+
+
+def _hymba_ssm_train(ssm, x, cfg, state):
+    b, s, d = x.shape
+    nh, hd, n = _hymba_dims(cfg)
+    xs, z, v, bb, cc, log_w, dt, xh = _ssd_project(ssm, x, cfg)
+    q = jnp.broadcast_to(cc[:, None], (b, nh, s, n))
+    k = jnp.broadcast_to(bb[:, None], (b, nh, s, n))
+    vv = v.transpose(0, 2, 1, 3)                                # (B,H,S,hd)
+    w = jnp.broadcast_to(log_w.transpose(0, 2, 1)[..., None], (b, nh, s, n))
+    y, new_state = chunked_linear_attention(q, k, vv, w, initial_state=state)
+    y = y.transpose(0, 2, 1, 3) + ssm["d_skip"][None, None, :, None] * xh
+    y = (y.reshape(b, s, nh * hd)).astype(x.dtype) * jax.nn.silu(z)
+    return y @ ssm["out_proj"], new_state
+
+
+def _hymba_ssm_decode(ssm, x1, cfg, state):
+    b = x1.shape[0]
+    nh, hd, n = _hymba_dims(cfg)
+    xs, z, v, bb, cc, log_w, dt, xh = _ssd_project(ssm, x1, cfg)
+    q = jnp.broadcast_to(cc[:, 0, None], (b, nh, n))
+    k = jnp.broadcast_to(bb[:, 0, None], (b, nh, n))
+    vv = v[:, 0]                                                # (B,H,hd)
+    w = jnp.broadcast_to(log_w[:, 0, :, None], (b, nh, n))
+    y, new_state = linear_attention_decode(q, k, vv, w, state)
+    y = y[:, None] + ssm["d_skip"][None, None, :, None] * xh
+    y = (y.reshape(b, 1, nh * hd)).astype(x1.dtype) * jax.nn.silu(z)
+    return y @ ssm["out_proj"], new_state
+
+
+def _hymba_block_train(p, x, cfg: ModelConfig, state=None):
+    b = x.shape[0]
+    if state is None:
+        state = _hymba_block_cache(cfg, "hymba", b, 0, x.dtype)["ssm"]
+    xn = norm_apply(p["ln1"], x, cfg.norm)
+    h_attn = A.attn_train(p["attn"], xn, **_attn_kwargs(cfg, "dense"))
+    h_ssm, new_s = _hymba_ssm_train(p["ssm"], xn, cfg, state)
+    h = 0.5 * (norm_apply(p["ln_attn_out"], h_attn, cfg.norm)
+               + norm_apply(p["ln_ssm_out"], h_ssm, cfg.norm))
+    x = x + h
+    x = x + mlp_apply(p["mlp"], norm_apply(p["ln2"], x, cfg.norm), cfg.mlp)
+    return x, new_s
+
+
+def _hymba_block_decode(p, x1, cache, pos, cfg: ModelConfig):
+    xn = norm_apply(p["ln1"], x1, cfg.norm)
+    h_attn, new_kv = A.attn_decode(p["attn"], xn, {"k": cache["k"],
+                                                   "v": cache["v"]},
+                                   pos, **_attn_kwargs(cfg, "dense"))
+    h_ssm, new_s = _hymba_ssm_decode(p["ssm"], xn, cfg, cache["ssm"])
+    h = 0.5 * (norm_apply(p["ln_attn_out"], h_attn, cfg.norm)
+               + norm_apply(p["ln_ssm_out"], h_ssm, cfg.norm))
+    x1 = x1 + h
+    x1 = x1 + mlp_apply(p["mlp"], norm_apply(p["ln2"], x1, cfg.norm), cfg.mlp)
+    return x1, {"k": new_kv["k"], "v": new_kv["v"], "ssm": new_s}
+
+
+def _hymba_block_cache(cfg: ModelConfig, kind, batch, cache_len, dtype):
+    nh, hd, n = _hymba_dims(cfg)
+    c = {"ssm": jnp.zeros((batch, nh, n, hd), jnp.float32)}
+    if cache_len:
+        c.update(_attn_block_cache(cfg, "dense", batch, cache_len, dtype))
+    return c
+
+
+# ===========================================================================
+# Dispatch
+# ===========================================================================
+
+ATTN_KINDS = ("dense", "attn_local", "attn_global", "moe")
+
+
+def block_init(key, cfg: ModelConfig, kind: str):
+    if kind in ATTN_KINDS:
+        return _attn_block_init(key, cfg, moe=(kind == "moe"))
+    if kind == "rwkv":
+        return _rwkv_block_init(key, cfg)
+    if kind == "hymba":
+        return _hymba_block_init(key, cfg)
+    raise ValueError(kind)
+
+
+def block_train(p, x, cfg: ModelConfig, kind: str):
+    """Returns (y, aux_loss).  Recurrent kinds start from zero state."""
+    if kind in ATTN_KINDS:
+        return _attn_block_train(p, x, cfg, kind)
+    if kind == "rwkv":
+        y, _ = _rwkv_block_train(p, x, cfg)
+        return y, jnp.float32(0.0)
+    if kind == "hymba":
+        y, _ = _hymba_block_train(p, x, cfg)
+        return y, jnp.float32(0.0)
+    raise ValueError(kind)
+
+
+def block_prefill(p, x, cfg: ModelConfig, kind: str, cache_len: int):
+    if kind in ATTN_KINDS:
+        return _attn_block_prefill(p, x, cfg, kind, cache_len)
+    if kind == "rwkv":
+        y, cache = _rwkv_block_train(p, x, cfg)
+        return y, cache, jnp.float32(0.0)
+    if kind == "hymba":
+        b = x.shape[0]
+        state = _hymba_block_cache(cfg, kind, b, 0, x.dtype)["ssm"]
+        xn = norm_apply(p["ln1"], x, cfg.norm)
+        h_attn, kv = A.attn_prefill(p["attn"], xn, cache_len=cache_len,
+                                    **_attn_kwargs(cfg, "dense"))
+        h_ssm, new_s = _hymba_ssm_train(p["ssm"], xn, cfg, state)
+        h = 0.5 * (norm_apply(p["ln_attn_out"], h_attn, cfg.norm)
+                   + norm_apply(p["ln_ssm_out"], h_ssm, cfg.norm))
+        x = x + h
+        x = x + mlp_apply(p["mlp"], norm_apply(p["ln2"], x, cfg.norm), cfg.mlp)
+        return x, {"k": kv["k"], "v": kv["v"], "ssm": new_s}, jnp.float32(0.0)
+    raise ValueError(kind)
+
+
+def block_decode(p, x1, cache, pos, cfg: ModelConfig, kind: str):
+    if kind in ATTN_KINDS:
+        return _attn_block_decode(p, x1, cache, pos, cfg, kind)
+    if kind == "rwkv":
+        return _rwkv_block_decode(p, x1, cache, pos, cfg)
+    if kind == "hymba":
+        return _hymba_block_decode(p, x1, cache, pos, cfg)
+    raise ValueError(kind)
+
+
+def block_cache(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
+                dtype=DTYPE):
+    if kind in ATTN_KINDS:
+        return _attn_block_cache(cfg, kind, batch, cache_len, dtype)
+    if kind == "rwkv":
+        return _rwkv_block_cache(cfg, kind, batch, cache_len, dtype)
+    if kind == "hymba":
+        return _hymba_block_cache(cfg, kind, batch, cache_len, dtype)
+    raise ValueError(kind)

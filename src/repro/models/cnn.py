@@ -1,0 +1,136 @@
+"""ResNet-style CNN for the paper's ResNet18/CIFAR-10 experiments.
+
+Four stages of residual blocks — exactly the paper's model-parallel degree 4
+with 3 compression boundaries between stages (Fig. 1).  GroupNorm replaces
+BatchNorm so the model is purely functional (no running stats to thread
+through custom_vjp boundaries); this does not affect the paper's qualitative
+compression findings.  NHWC, ``jax.lax.conv_general_dilated``.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.boundary import boundary_apply, boundary_eval
+from repro.core.policy import CompressionPolicy, NO_POLICY
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    std = (2.0 / fan_in) ** 0.5
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * std
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _gn_init(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def _gn(params, x, groups=8):
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    xg = x.reshape(b, h, w, g, c // g)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + 1e-5)
+    return xg.reshape(b, h, w, c) * params["scale"] + params["bias"]
+
+
+def _block_init(key, cin, cout, stride):
+    ks = jax.random.split(key, 3)
+    p = {"conv1": _conv_init(ks[0], 3, 3, cin, cout), "gn1": _gn_init(cout),
+         "conv2": _conv_init(ks[1], 3, 3, cout, cout), "gn2": _gn_init(cout)}
+    if stride != 1 or cin != cout:
+        p["proj"] = _conv_init(ks[2], 1, 1, cin, cout)
+    return p
+
+
+def _block_apply(p, x, stride):
+    h = jax.nn.relu(_gn(p["gn1"], _conv(x, p["conv1"], stride)))
+    h = _gn(p["gn2"], _conv(h, p["conv2"]))
+    sc = _conv(x, p["proj"], stride) if "proj" in p else x
+    return jax.nn.relu(h + sc)
+
+
+def _stage_strides(num_stages, blocks_per_stage):
+    return [[2 if (b == 0 and s > 0) else 1 for b in range(blocks_per_stage)]
+            for s in range(num_stages)]
+
+
+def init_params(key, num_classes: int = 10, width: int = 64,
+                blocks_per_stage: int = 2):
+    """ResNet18 when width=64, blocks_per_stage=2."""
+    widths = [width, width * 2, width * 4, width * 8]
+    ks = jax.random.split(key, 2 + 4 * blocks_per_stage)
+    params = {"stem": _conv_init(ks[0], 3, 3, 3, width),
+              "stem_gn": _gn_init(width), "stages": []}
+    cin = width
+    ki = 1
+    for s, cout in enumerate(widths):
+        stage = []
+        for b in range(blocks_per_stage):
+            stride = 2 if (b == 0 and s > 0) else 1
+            stage.append(_block_init(ks[ki], cin, cout, stride))
+            cin = cout
+            ki += 1
+        params["stages"].append(stage)
+    params["fc"] = (jax.random.normal(ks[-1], (cin, num_classes)) *
+                    (1.0 / cin) ** 0.5)
+    params["fc_b"] = jnp.zeros((num_classes,))
+    return params
+
+
+def _head(params, x):
+    x = x.mean(axis=(1, 2))
+    return x @ params["fc"] + params["fc_b"]
+
+
+def forward_train(params, images, policy: CompressionPolicy = NO_POLICY,
+                  bstates: Optional[list] = None,
+                  ids: Optional[jnp.ndarray] = None):
+    """Returns (logits, new_fw_buffers).  Boundaries between the 4 stages."""
+    if ids is None:
+        ids = jnp.zeros((images.shape[0],), jnp.int32)
+    x = jax.nn.relu(_gn(params["stem_gn"], _conv(images, params["stem"])))
+    new_fw = []
+    n = len(params["stages"])
+    strides = _stage_strides(n, len(params["stages"][0]))
+    for s, stage in enumerate(params["stages"]):
+        for p, st_ in zip(stage, strides[s]):
+            x = _block_apply(p, x, st_)
+        if s < n - 1 and policy.num_boundaries > s:
+            bp = policy.at(s)
+            st = (bstates[s] if bstates is not None
+                  else {"fw": jnp.zeros((0,), x.dtype),
+                        "bw": jnp.zeros((0,), x.dtype)})
+            x, nf = boundary_apply(bp, x, st["fw"], st["bw"], ids)
+            new_fw.append(nf)
+    return _head(params, x), new_fw
+
+
+def forward_eval(params, images, policy: CompressionPolicy = NO_POLICY,
+                 compress: bool = True):
+    x = jax.nn.relu(_gn(params["stem_gn"], _conv(images, params["stem"])))
+    n = len(params["stages"])
+    strides = _stage_strides(n, len(params["stages"][0]))
+    for s, stage in enumerate(params["stages"]):
+        for p, st_ in zip(stage, strides[s]):
+            x = _block_apply(p, x, st_)
+        if s < n - 1 and policy.num_boundaries > s:
+            x = boundary_eval(policy.at(s), x, compress)
+    return _head(params, x)
+
+
+def boundary_shapes(width: int = 64, image: int = 32,
+                    ) -> List[Tuple[int, ...]]:
+    """Feature shapes at the 3 boundaries (for feedback buffer init)."""
+    return [(image, image, width),
+            (image // 2, image // 2, width * 2),
+            (image // 4, image // 4, width * 4)]

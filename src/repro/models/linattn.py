@@ -1,0 +1,134 @@
+"""Chunked linear-attention core — shared by RWKV6 (Finch) and Mamba2/SSD.
+
+Recurrence (per head, state S in R^{K x V}):
+    S_t = diag(exp(w_t)) S_{t-1} + k_t v_t^T          (w_t <= 0, log decay)
+    y_t = q_t (S_{t-1} + diag(u) k_t v_t^T)           [bonus mode, RWKV]
+    y_t = q_t S_t                                      [include-current, SSD]
+
+TPU adaptation: instead of a sequential scan over T steps we scan over
+chunks of L tokens; inside a chunk everything is matmuls (MXU-friendly)
+with *non-positive* exponents only — numerically safe without rescaling:
+
+    y_t  = (q_t . exp(cx_t)) S_0                      (inter-chunk)
+         + sum_j q_t k_j exp(cx_t - c_j) v_j          (intra-chunk, cx>=c_j)
+    S_L  = exp(c_L) . S_0 + sum_j (k_j exp(c_L - c_j)) v_j^T
+
+where c_t = cumsum(w)_t, cx_t = c_{t-1} (bonus) or c_t (include-current).
+This is the layout the Pallas kernel (kernels/linattn.py) mirrors.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+MIN_LOG_DECAY = -8.0     # clamp: exp(-8) ~ 3e-4 per step, effectively zero
+
+
+def _chunk(x, l):
+    b, h, t, f = x.shape
+    return x.reshape(b, h, t // l, l, f)
+
+
+def chunked_linear_attention(q, k, v, log_w, *, chunk: int = 32,
+                             bonus: Optional[jnp.ndarray] = None,
+                             initial_state: Optional[jnp.ndarray] = None
+                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """q,k,log_w: (B,H,T,K); v: (B,H,T,V); bonus u: (H,K) or None.
+
+    bonus given  => RWKV semantics (y_t reads S_{t-1} + u-weighted current).
+    bonus None   => SSD semantics  (y_t reads S_t).
+    Returns (y: (B,H,T,V), final_state: (B,H,K,V)).  Computation in fp32.
+    """
+    b, h, t, kd = q.shape
+    vd = v.shape[-1]
+    dt = v.dtype
+    q, k, v = (a.astype(jnp.float32) for a in (q, k, v))
+    log_w = jnp.clip(log_w.astype(jnp.float32), MIN_LOG_DECAY, 0.0)
+
+    l = min(chunk, t)
+    pad = (-t) % l
+    if pad:
+        zq = jnp.zeros((b, h, pad, kd), jnp.float32)
+        q = jnp.concatenate([q, zq], axis=2)
+        k = jnp.concatenate([k, zq], axis=2)
+        v = jnp.concatenate([v, jnp.zeros((b, h, pad, vd), jnp.float32)], axis=2)
+        log_w = jnp.concatenate([log_w, jnp.zeros((b, h, pad, kd), jnp.float32)],
+                                axis=2)
+
+    qc, kc, vc, wc = (_chunk(a, l) for a in (q, k, v, log_w))
+    nc = qc.shape[2]
+    include_current = bonus is None
+    # intra-chunk pair mask: j < t (bonus) or j <= t (include-current)
+    ti = jnp.arange(l)
+    pair_mask = (ti[None, :] < ti[:, None]) if not include_current \
+        else (ti[None, :] <= ti[:, None])                       # (L, L)
+
+    if initial_state is None:
+        s0 = jnp.zeros((b, h, kd, vd), jnp.float32)
+    else:
+        s0 = initial_state.astype(jnp.float32)
+
+    def body(s, xs):
+        qi, ki, vi, wi = xs                       # (B,H,L,*)
+        c = jnp.cumsum(wi, axis=2)                # (B,H,L,K)
+        cx = c if include_current else c - wi     # c_{t} or c_{t-1}
+        # inter-chunk
+        y = jnp.einsum("bhlk,bhkv->bhlv", qi * jnp.exp(cx), s)
+        # intra-chunk: exponent cx[t] - c[j]  (<= 0 wherever masked valid)
+        expo = cx[:, :, :, None, :] - c[:, :, None, :, :]       # (B,H,L,L,K)
+        expo = jnp.where(pair_mask[None, None, :, :, None], expo, NEG_INF)
+        att = jnp.einsum("bhtk,bhjk,bhtjk->bhtj", qi, ki, jnp.exp(expo))
+        y = y + jnp.einsum("bhtj,bhjv->bhtv", att, vi)
+        if bonus is not None:
+            ub = jnp.einsum("bhtk,hk,bhtk->bht", qi,
+                            bonus.astype(jnp.float32), ki)
+            y = y + ub[..., None] * vi
+        # state to end of chunk
+        c_last = c[:, :, -1:, :]                                # (B,H,1,K)
+        s_new = jnp.exp(c_last[:, :, 0, :])[..., None] * s
+        decayed_k = ki * jnp.exp(c_last - c)                    # (B,H,L,K)
+        s_new = s_new + jnp.einsum("bhlk,bhlv->bhkv", decayed_k, vi)
+        return s_new, y
+
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (qc, kc, vc, wc))
+    s_final, ys = jax.lax.scan(body, s0, xs)
+    y = jnp.moveaxis(ys, 0, 2).reshape(b, h, nc * l, vd)[:, :, :t]
+    return y.astype(dt), s_final
+
+
+def linear_attention_decode(q1, k1, v1, log_w1, state, *,
+                            bonus: Optional[jnp.ndarray] = None
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-step recurrence.  q1,k1,log_w1: (B,H,K); v1: (B,H,V);
+    state: (B,H,K,V)."""
+    f32 = jnp.float32
+    q1, k1, v1 = (a.astype(f32) for a in (q1, k1, v1))
+    log_w1 = jnp.clip(log_w1.astype(f32), MIN_LOG_DECAY, 0.0)
+    kv = k1[..., :, None] * v1[..., None, :]                   # (B,H,K,V)
+    if bonus is not None:
+        read = state + bonus.astype(f32)[None, :, :, None] * kv
+        new_state = jnp.exp(log_w1)[..., None] * state + kv
+    else:
+        new_state = jnp.exp(log_w1)[..., None] * state + kv
+        read = new_state
+    y = jnp.einsum("bhk,bhkv->bhv", q1, read)
+    return y, new_state
+
+
+def reference_linear_attention(q, k, v, log_w, *, bonus=None,
+                               initial_state=None):
+    """O(T) sequential oracle for tests (same signature, fp32)."""
+    b, h, t, kd = q.shape
+    vd = v.shape[-1]
+    s = (jnp.zeros((b, h, kd, vd), jnp.float32) if initial_state is None
+         else initial_state.astype(jnp.float32))
+    ys = []
+    for i in range(t):
+        y, s = linear_attention_decode(q[:, :, i], k[:, :, i], v[:, :, i],
+                                       log_w[:, :, i], s, bonus=bonus)
+        ys.append(y)
+    return jnp.stack(ys, axis=2).astype(v.dtype), s

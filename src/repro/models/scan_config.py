@@ -1,0 +1,19 @@
+"""Global switch: unroll layer scans during lowering.
+
+``lax.scan`` lowers to a while loop, and XLA's ``cost_analysis`` counts the
+loop body ONCE (not x trip count), which would corrupt the roofline FLOP /
+collective-byte terms.  The dry-run's roofline pass sets ``UNROLL = True``
+so layer stacks unroll into straight-line HLO with exact costs; everything
+else (training, smoke tests, multi-pod lowering-proof) keeps the compact
+scanned form.
+
+The inner chunk scan of linear-attention layers stays a loop either way;
+its recurrence einsums are <10% of those layers' FLOPs (projections happen
+outside the chunk loop) — noted in EXPERIMENTS.md §Roofline caveats.
+"""
+UNROLL = False
+
+
+def scan_unroll():
+    """Value for lax.scan(..., unroll=...)."""
+    return True if UNROLL else 1

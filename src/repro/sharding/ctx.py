@@ -1,0 +1,118 @@
+"""Mesh context for in-model sharding constraints.
+
+Model code calls :func:`constrain` with a logical spec; when a mesh has been
+installed (launcher / dry-run) this becomes
+``jax.lax.with_sharding_constraint``, otherwise it is a no-op — so smoke
+tests and single-device runs never touch device state.
+
+Logical axis names used by model code:
+  "batch"   -> ("pod", "data") (or ("data",) single-pod)
+  "model"   -> tensor-parallel axis
+  "expert"  -> expert-parallel axis (mapped onto "data")
+  "seq"     -> sequence/cache sharding for batch=1 decode (mapped onto "data")
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def set_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None) -> None:
+    _state.mesh = mesh
+    _state.rules = rules or default_rules(mesh)
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def get_rules() -> dict:
+    return getattr(_state, "rules", {})
+
+
+def default_rules(mesh: Optional[Mesh]) -> dict:
+    """Map logical axes -> mesh axes for the production meshes."""
+    if mesh is None:
+        return {}
+    names = mesh.axis_names
+    rules = {}
+    if "pod" in names:
+        rules["batch"] = ("pod", "data")
+    else:
+        rules["batch"] = ("data",)
+    if "model" in names:
+        rules["model"] = ("model",)
+    if "data" in names:
+        rules["expert"] = ("data",)
+        rules["seq"] = ("data",)
+    return rules
+
+
+class use_mesh:
+    """``with use_mesh(mesh):`` installs mesh + rules for model code."""
+
+    def __init__(self, mesh: Optional[Mesh], rules: Optional[dict] = None):
+        self.mesh, self.rules = mesh, rules
+
+    def __enter__(self):
+        self.prev = (get_mesh(), get_rules())
+        set_mesh(self.mesh, self.rules)
+        return self.mesh
+
+    def __exit__(self, *exc):
+        _state.mesh, _state.rules = self.prev
+        return False
+
+
+def _resolve(axis) -> Optional[Tuple[str, ...]]:
+    if axis is None:
+        return None
+    rules = get_rules()
+    if isinstance(axis, str):
+        got = rules.get(axis)
+        return got
+    out = []
+    for a in axis:
+        got = rules.get(a)
+        if got:
+            out.extend(got)
+    return tuple(out) or None
+
+
+def constrain(x, *logical_axes):
+    """Apply a sharding constraint by logical axis names (None = replicated).
+
+    A logical axis that does not divide the corresponding dim is dropped
+    (e.g. batch=1 decode cannot shard over "batch").
+    """
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = []
+    used = set()        # a mesh axis may shard at most ONE dim
+    for dim, logical in zip(x.shape, logical_axes):
+        resolved = _resolve(logical)
+        if resolved is None:
+            spec.append(None)
+            continue
+        # earlier dims win ties: e.g. ("batch","seq",...) with both mapping
+        # onto "data" shards batch when it divides, else falls back to seq
+        # (the batch=1 long-decode case).
+        resolved = tuple(a for a in resolved if a not in used)
+        size = 1
+        for a in resolved:
+            size *= axis_sizes[a]
+        if resolved and dim % size == 0 and dim >= size:
+            spec.append(resolved)
+            used.update(resolved)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,156 @@
+"""Parameter / batch / cache sharding rules for the production meshes.
+
+Strategy (DESIGN.md §5): DP over ("pod","data") for the batch, TP over
+"model" for heads / d_ff / vocab, FSDP weight sharding over "data",
+expert-parallel over "data" for MoE experts.  Rules are name+shape based and
+degrade per-dim to replication when a dim is not divisible by the axis.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, names) -> int:
+    s = 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for n in (names if isinstance(names, tuple) else (names,)):
+        s *= sizes[n]
+    return s
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _fit(dim: int, mesh: Mesh, names) -> Optional[tuple]:
+    if names is None:
+        return None
+    names = names if isinstance(names, tuple) else (names,)
+    return names if dim % _axis_size(mesh, names) == 0 else None
+
+
+# parameter matrices whose FIRST trailing dim is the model-sharded
+# contraction (outputs of TP regions): y = h @ W with h model-sharded.
+_OUT_NAMES = ("wo", "out_proj", "lora_B", "w_lora_B", "wv@cm", "proj")
+
+
+def _is_out(path: str) -> bool:
+    if path.endswith("cm/wv"):
+        return True
+    name = path.rsplit("/", 1)[-1]
+    return name in ("wo", "out_proj", "lora_B", "w_lora_B")
+
+
+def param_spec(path: str, shape, mesh: Mesh) -> P:
+    nd = len(shape)
+    if nd <= 1:
+        return P()
+    # embeddings / heads: (V, d) -> vocab over model, d FSDP over data
+    leaf = path.rsplit("/", 1)[-1]
+    if leaf in ("embed", "lm_head", "dec_pos"):
+        return P(_fit(shape[0], mesh, "model"), None)
+    if leaf == "router":
+        return P(*([None] * (nd - 2)), _fit(shape[-2], mesh, "model"), None)
+    if "/experts/" in path and nd >= 3:
+        # (..., E, in, out): experts over data (EP) + TP on in/out
+        lead = [None] * (nd - 3)
+        e = _fit(shape[-3], mesh, "data")
+        if _is_out(path):
+            return P(*lead, e, _fit(shape[-2], mesh, "model"), None)
+        return P(*lead, e, None, _fit(shape[-1], mesh, "model"))
+    # generic 2D-trailing matrices (+ leading scan dims)
+    lead = [None] * (nd - 2)
+    if _is_out(path):
+        return P(*lead, _fit(shape[-2], mesh, "model"),
+                 _fit(shape[-1], mesh, "data"))
+    return P(*lead, _fit(shape[-2], mesh, "data"),
+             _fit(shape[-1], mesh, "model"))
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def param_shardings(mesh: Mesh, params_tree):
+    """NamedSharding pytree for a params (or shape-struct) pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_tree)
+    out = [NamedSharding(mesh, param_spec(_path_str(p), l.shape, mesh))
+           for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_state_shardings(mesh: Mesh, opt_tree):
+    """Moments mirror params; scalar step replicated."""
+    def spec(path, leaf):
+        ps = _path_str(path)
+        if ps == "step" or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        # strip the leading "mu/" / "nu/" container name
+        sub = ps.split("/", 1)[1] if "/" in ps else ps
+        return NamedSharding(mesh, param_spec(sub, leaf.shape, mesh))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(opt_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(p, l) for p, l in flat])
+
+
+def batch_spec(shape, mesh: Mesh) -> P:
+    """(B, ...) data inputs: batch over ("pod","data") when divisible."""
+    b = _fit(shape[0], mesh, batch_axes(mesh))
+    return P(b, *([None] * (len(shape) - 1)))
+
+
+def batch_shardings(mesh: Mesh, tree):
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, batch_spec(l.shape, mesh)), tree)
+
+
+def cache_spec(path: str, shape, mesh: Mesh, batch_dim: int = 1) -> P:
+    """Decode-cache leaves.  Attention k/v: (G, B, C, KV, hd); recurrent
+    state (G, B, H, K, V); shift states (G, B, d).
+
+    Preference order: batch over DP axes; KV-heads over model; if KV does
+    not divide, the cache SEQ dim takes the model axis (flash-decode style);
+    with batch=1 (long_500k) the seq dim additionally takes the data axis.
+    """
+    nd = len(shape)
+    leaf = path.rsplit("/", 1)[-1]
+    b = shape[batch_dim]
+    bspec = _fit(b, mesh, batch_axes(mesh))
+    lead = [None] * batch_dim
+    if leaf in ("k", "v") and nd == batch_dim + 4:
+        _, c, kv, hd = shape[batch_dim:]
+        kvspec = _fit(kv, mesh, "model")
+        seq_axes = []
+        if bspec is None:
+            seq_axes.append("data")
+            if "pod" in mesh.axis_names:
+                seq_axes.insert(0, "pod")
+        if kvspec is None:
+            seq_axes.append("model")
+        seqspec = _fit(c, mesh, tuple(seq_axes)) if seq_axes else None
+        return P(*lead, bspec, seqspec, kvspec, None)
+    if leaf == "S" and nd == batch_dim + 4:          # rwkv state
+        return P(*lead, bspec, _fit(shape[batch_dim + 1], mesh, "model"),
+                 None, None)
+    if leaf == "ssm" and nd == batch_dim + 4:        # mamba state
+        return P(*lead, bspec, _fit(shape[batch_dim + 1], mesh, "model"),
+                 None, None)
+    rest = [None] * (nd - batch_dim - 1)
+    return P(*lead, bspec, *rest)
+
+
+def cache_shardings(mesh: Mesh, cache_tree, batch_dim: int = 1):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    out = [NamedSharding(mesh, cache_spec(_path_str(p), l.shape, mesh,
+                                          batch_dim))
+           for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def replicated(mesh: Mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

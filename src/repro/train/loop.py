@@ -1,0 +1,182 @@
+"""Experiment training loops reproducing the paper's protocol.
+
+``run_cnn_experiment`` mirrors Sec. 3.1 (ResNet/CIFAR-10): train with a
+compression policy, evaluate test accuracy BOTH with compression on and off
+(the paper's two right columns), support warm-starting from uncompressed
+baseline weights after N epochs ("warmup 20" rows).
+
+``run_lm_experiment`` mirrors Sec. 3.2 (GPT-2/Wikitext fine-tuning): first
+"pretrain" a tiny LM without compression, then fine-tune with TopK
+compression (index-reuse vs separate) and report eval loss / perplexity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.boundary import init_all_boundary_states
+from repro.core.policy import CompressionPolicy, NO_POLICY
+from repro.data.synthetic import ImageClassData, LMData
+from repro.models import cnn, transformer
+from repro.models.config import ModelConfig
+from repro.optim.optimizers import OptimizerConfig, init_opt_state
+from repro.train.steps import (make_cnn_eval_step, make_cnn_train_step,
+                               make_lm_eval_step, make_lm_train_step)
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    name: str
+    acc_off: float = 0.0           # eval with compression OFF
+    acc_on: float = 0.0            # eval with compression ON
+    loss_on: float = 0.0
+    loss_off: float = 0.0
+    train_curve: List[float] = dataclasses.field(default_factory=list)
+    seconds: float = 0.0
+
+    def row(self) -> str:
+        return (f"{self.name:32s}  off={self.acc_off:6.2f}%  "
+                f"on={self.acc_on:6.2f}%")
+
+
+def _cnn_eval(params, data, policy, compress, batch=100) -> tuple:
+    step = make_cnn_eval_step(policy, compress)
+    accs, losses = [], []
+    for x, y, _ in data.test_batches(batch):
+        a, l = step(params, jnp.asarray(x), jnp.asarray(y))
+        accs.append(float(a))
+        losses.append(float(l))
+    return 100.0 * float(np.mean(accs)), float(np.mean(losses))
+
+
+def run_cnn_experiment(policy: CompressionPolicy, *, epochs: int = 8,
+                       batch: int = 100, width: int = 16,
+                       data: Optional[ImageClassData] = None,
+                       warmup_params=None, name: str = "",
+                       opt: Optional[OptimizerConfig] = None,
+                       seed: int = 0) -> ExperimentResult:
+    """Train the ResNet with boundary compression; paper protocol.
+
+    ``warmup_params``: start from these (uncompressed-baseline) weights —
+    the paper's "warmup N" rows.
+    """
+    data = data or ImageClassData()
+    opt = opt or OptimizerConfig(kind="sgd", lr=0.02, momentum=0.9,
+                                 weight_decay=5e-4, schedule="cosine",
+                                 t_max=epochs * (data.num_train // batch))
+    params = warmup_params or cnn.init_params(
+        jax.random.PRNGKey(seed), width=width)
+    if warmup_params is not None:
+        params = jax.tree.map(jnp.asarray, warmup_params)
+    opt_state = init_opt_state(opt, params)
+    bstates = _cnn_bstates(policy, data, batch, width)
+    step = make_cnn_train_step(policy, opt)
+
+    t0 = time.time()
+    curve = []
+    for ep in range(epochs):
+        accs = []
+        for x, y, ids in data.epoch(batch, ep):
+            params, opt_state, bstates, m = step(
+                params, opt_state, bstates, jnp.asarray(x), jnp.asarray(y),
+                jnp.asarray(ids))
+            accs.append(float(m["acc"]))
+        curve.append(float(np.mean(accs)))
+    res = ExperimentResult(name=name or policy.boundary.name,
+                           train_curve=curve, seconds=time.time() - t0)
+    res.acc_off, res.loss_off = _cnn_eval(params, data, policy, False, batch)
+    res.acc_on, res.loss_on = _cnn_eval(params, data, policy, True, batch)
+    res.params = params
+    return res
+
+
+def _cnn_bstates(policy: CompressionPolicy, data: ImageClassData,
+                 batch: int, width: int):
+    shapes = cnn.boundary_shapes(width, data.image)
+    states = []
+    for i in range(policy.num_boundaries):
+        bp = policy.at(i)
+        from repro.core.boundary import init_boundary_state
+        states.append(init_boundary_state(
+            bp, shapes[i], batch=batch, num_samples=data.num_train))
+    return states
+
+
+# ---------------------------------------------------------------------------
+# LM fine-tuning (paper Sec. 3.2)
+# ---------------------------------------------------------------------------
+
+def _lm_eval(params, cfg, data, policy, compress, batch=16) -> float:
+    step = make_lm_eval_step(cfg, policy, compress)
+    losses = []
+    for toks, _ in data.test_batches(batch):
+        losses.append(float(step(params, {"tokens": jnp.asarray(toks)})))
+    return float(np.mean(losses))
+
+
+def run_lm_experiment(cfg: ModelConfig, policy: CompressionPolicy, *,
+                      pretrained_params=None, epochs: int = 2,
+                      batch: int = 16, data: Optional[LMData] = None,
+                      name: str = "",
+                      opt: Optional[OptimizerConfig] = None,
+                      seed: int = 0) -> ExperimentResult:
+    """Fine-tune a (pre-trained) tiny LM with boundary compression."""
+    data = data or LMData()
+    opt = opt or OptimizerConfig(kind="adamw", lr=3e-4, weight_decay=0.01,
+                                 schedule="constant", grad_clip=1.0)
+    params = pretrained_params or transformer.init_params(
+        jax.random.PRNGKey(seed), cfg)
+    params = jax.tree.map(jnp.asarray, params)
+    opt_state = init_opt_state(opt, params)
+    feat = (data.seq_len, cfg.d_model)
+    bstates = []
+    for i in range(policy.num_boundaries):
+        from repro.core.boundary import init_boundary_state
+        bstates.append(init_boundary_state(
+            policy.at(i), feat, batch=batch, num_samples=data.num_train,
+            dtype=jnp.bfloat16))
+    step = make_lm_train_step(cfg, policy, opt, remat=False, donate=False)
+
+    t0 = time.time()
+    curve = []
+    for ep in range(epochs):
+        for toks, ids in data.epoch(batch, ep):
+            params, opt_state, bstates, m = step(
+                params, opt_state, bstates, {"tokens": jnp.asarray(toks)},
+                jnp.asarray(ids))
+            curve.append(float(m["loss"]))
+    res = ExperimentResult(name=name or policy.boundary.name,
+                           train_curve=curve, seconds=time.time() - t0)
+    res.loss_on = _lm_eval(params, cfg, data, policy, True, batch)
+    res.loss_off = _lm_eval(params, cfg, data, policy, False, batch)
+    res.params = params
+    return res
+
+
+def pretrain_lm(cfg: ModelConfig, *, steps: int = 300, batch: int = 16,
+                data: Optional[LMData] = None, seed: int = 0):
+    """Uncompressed pre-training for the fine-tuning experiments."""
+    data = data or LMData()
+    opt = OptimizerConfig(kind="adamw", lr=1e-3, weight_decay=0.01,
+                          schedule="constant", grad_clip=1.0)
+    params = transformer.init_params(jax.random.PRNGKey(seed), cfg)
+    opt_state = init_opt_state(opt, params)
+    step = make_lm_train_step(cfg, NO_POLICY, opt, remat=False, donate=False)
+    n = 0
+    ep = 0
+    while n < steps:
+        for toks, ids in data.epoch(batch, ep):
+            params, opt_state, _, m = step(
+                params, opt_state, [], {"tokens": jnp.asarray(toks)},
+                jnp.asarray(ids))
+            n += 1
+            if n >= steps:
+                break
+        ep += 1
+    return params, float(m["loss"])

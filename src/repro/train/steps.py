@@ -1,0 +1,176 @@
+"""Train / eval steps wiring the paper's boundary compression into the
+optimizer loop.
+
+The boundary's backward-direction feedback buffers are updated inside
+backprop, so ``loss_fn`` takes them as a differentiated argument and the
+train step reads the update out of the gradient pytree (see
+core/boundary.py docstring).  Everything is jit-friendly and policy-static.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import CompressionPolicy, NO_POLICY
+from repro.models import encdec, transformer
+from repro.models.transformer import lm_loss
+from repro.optim.optimizers import OptimizerConfig, apply_updates, init_opt_state
+
+
+def _split_states(bstates):
+    fw = [s["fw"] for s in bstates]
+    bw = [s["bw"] for s in bstates]
+    return fw, bw
+
+
+def _merge_states(fw, bw):
+    return [{"fw": f, "bw": b} for f, b in zip(fw, bw)]
+
+
+# ---------------------------------------------------------------------------
+# LM train step (decoder-only + enc-dec)
+# ---------------------------------------------------------------------------
+
+def make_lm_train_step(cfg, policy: CompressionPolicy,
+                       opt: OptimizerConfig, aux_weight: float = 0.01,
+                       remat: bool = True, donate: bool = True,
+                       jit: bool = True, microbatches: int = 1):
+    """Returns jit'd ``step(params, opt_state, bstates, batch, ids)
+    -> (params, opt_state, bstates, metrics)``.
+
+    batch: {"tokens": (B,S)} (+ modality stubs); next-token LM loss.
+    ``microbatches > 1``: gradient accumulation — the global batch is split
+    along B and scanned, bounding per-device activation memory at
+    B/microbatches (feedback buffers and ids are sliced alongside, so the
+    paper's per-example semantics are preserved).
+    """
+    mod = encdec if cfg.enc_dec else transformer
+
+    def loss_fn(params, bw_bufs, fw_bufs, batch, ids):
+        bstates = _merge_states(fw_bufs, bw_bufs)
+        labels = jnp.roll(batch["tokens"], -1, axis=1)
+        mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+        # chunked loss from hidden states: (B,S,V) logits never
+        # materialized (see transformer.hidden_lm_loss) — both stacks
+        x, aux, new_fw = mod.forward_hidden(
+            params, batch, cfg, policy, bstates or None, ids,
+            remat=remat)
+        loss = transformer.hidden_lm_loss(params, x, labels, cfg, mask)
+        total = loss + aux_weight * aux
+        return total, (loss, aux, new_fw)
+
+    def step(params, opt_state, bstates, batch, ids):
+        fw_bufs, bw_bufs = _split_states(bstates)
+        (total, (loss, aux, new_fw)), (grads, new_bw) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(
+                params, bw_bufs, fw_bufs, batch, ids)
+        params, opt_state = apply_updates(opt, params, grads, opt_state)
+        new_states = _merge_states(new_fw if new_fw else fw_bufs, new_bw)
+        metrics = {"loss": loss, "aux": aux, "total": total}
+        return params, opt_state, new_states, metrics
+
+    def step_accum(params, opt_state, bstates, batch, ids):
+        mb = microbatches
+        if policy.num_boundaries and any(
+                policy.at(i).feedback == "aqsgd"
+                for i in range(policy.num_boundaries)):
+            raise NotImplementedError("aqsgd + gradient accumulation")
+        fw_bufs, bw_bufs = _split_states(bstates)
+        split = lambda t: jax.tree.map(
+            lambda a: a.reshape(mb, a.shape[0] // mb, *a.shape[1:]), t)
+        unsplit = lambda t: jax.tree.map(
+            lambda a: a.reshape(a.shape[0] * a.shape[1], *a.shape[2:]), t)
+        xs = (split(batch), split(ids), split(fw_bufs), split(bw_bufs))
+        grad0 = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, xs_i):
+            gacc, loss_a, aux_a = carry
+            b_i, id_i, fw_i, bw_i = xs_i
+            (_, (loss, aux, new_fw)), (g, new_bw) = jax.value_and_grad(
+                loss_fn, argnums=(0, 1), has_aux=True)(
+                    params, bw_i, fw_i, b_i, id_i)
+            gacc = jax.tree.map(
+                lambda a, gg: a + gg.astype(jnp.float32), gacc, g)
+            return (gacc, loss_a + loss, aux_a + aux), (new_fw, new_bw)
+
+        (gacc, loss_s, aux_s), (new_fw_s, new_bw_s) = jax.lax.scan(
+            body, (grad0, jnp.float32(0.0), jnp.float32(0.0)), xs)
+        grads = jax.tree.map(lambda g: (g / mb).astype(jnp.bfloat16), gacc)
+        params, opt_state = apply_updates(opt, params, grads, opt_state)
+        new_fw = [unsplit(b) for b in new_fw_s]
+        new_bw = [unsplit(b) for b in new_bw_s]
+        new_states = _merge_states(new_fw if new_fw else [b for b in fw_bufs],
+                                   new_bw)
+        metrics = {"loss": loss_s / mb, "aux": aux_s / mb,
+                   "total": (loss_s + aux_weight * aux_s) / mb}
+        return params, opt_state, new_states, metrics
+
+    if microbatches > 1:
+        step = step_accum
+
+    if not jit:
+        return step
+    donate_argnums = (0, 1) if donate else ()
+    return jax.jit(step, donate_argnums=donate_argnums)
+
+
+def make_lm_eval_step(cfg, policy: CompressionPolicy, compress: bool):
+    mod = encdec if cfg.enc_dec else transformer
+
+    @jax.jit
+    def step(params, batch):
+        logits = mod.forward_eval(params, batch, cfg, policy,
+                                  compress=compress)
+        labels = jnp.roll(batch["tokens"], -1, axis=1)
+        mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+        return lm_loss(logits, labels, mask)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Image-classification train step (paper's ResNet18/CIFAR-10 experiments)
+# ---------------------------------------------------------------------------
+
+def xent_loss(logits, labels):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+
+
+def make_cnn_train_step(policy: CompressionPolicy, opt: OptimizerConfig):
+    from repro.models import cnn
+
+    def loss_fn(params, bw_bufs, fw_bufs, images, labels, ids):
+        bstates = _merge_states(fw_bufs, bw_bufs)
+        logits, new_fw = cnn.forward_train(params, images, policy,
+                                           bstates or None, ids)
+        return xent_loss(logits, labels), (logits, new_fw)
+
+    @jax.jit
+    def step(params, opt_state, bstates, images, labels, ids):
+        fw_bufs, bw_bufs = _split_states(bstates)
+        (loss, (logits, new_fw)), (grads, new_bw) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(
+                params, bw_bufs, fw_bufs, images, labels, ids)
+        params, opt_state = apply_updates(opt, params, grads, opt_state)
+        acc = (logits.argmax(-1) == labels).mean()
+        new_states = _merge_states(new_fw if new_fw else fw_bufs, new_bw)
+        return params, opt_state, new_states, {"loss": loss, "acc": acc}
+
+    return step
+
+
+def make_cnn_eval_step(policy: CompressionPolicy, compress: bool):
+    from repro.models import cnn
+
+    @jax.jit
+    def step(params, images, labels):
+        logits = cnn.forward_eval(params, images, policy, compress=compress)
+        return (logits.argmax(-1) == labels).mean(), xent_loss(logits, labels)
+
+    return step

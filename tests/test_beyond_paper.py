@@ -1,0 +1,99 @@
+"""Beyond-paper features: int8 expert-dispatch quantization, enc-dec
+chunked hidden loss, pipeline payload wire-cost ordering."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get
+from repro.core.policy import NO_POLICY
+from repro.models import encdec, moe, transformer
+
+
+class TestDispatchQuant:
+    def _setup(self):
+        key = jax.random.PRNGKey(0)
+        params = moe.moe_init(key, 64, 128, 4, "swiglu")
+        x = jax.random.normal(key, (2, 32, 64)).astype(jnp.bfloat16)
+        return params, x
+
+    def test_output_close_to_unquantized(self):
+        params, x = self._setup()
+        y1, _ = moe.moe_apply(params, x, num_experts=4, top_k=2,
+                              mlp_kind="swiglu")
+        y2, _ = moe.moe_apply(params, x, num_experts=4, top_k=2,
+                              mlp_kind="swiglu", dispatch_quant=True)
+        scale = float(jnp.max(jnp.abs(y1.astype(jnp.float32)))) + 1e-9
+        err = float(jnp.max(jnp.abs((y1 - y2).astype(jnp.float32)))) / scale
+        assert err < 0.05, err
+
+    def test_gradients_flow_and_are_close(self):
+        params, x = self._setup()
+
+        def loss(x, dq):
+            y, aux = moe.moe_apply(params, x, num_experts=4, top_k=2,
+                                   mlp_kind="swiglu", dispatch_quant=dq)
+            return (y.astype(jnp.float32) ** 2).mean() + 0.01 * aux
+
+        g1 = jax.grad(loss)(x, False).astype(jnp.float32)
+        g2 = jax.grad(loss)(x, True).astype(jnp.float32)
+        assert bool(jnp.isfinite(g2).all())
+        denom = float(jnp.linalg.norm(g1.reshape(-1))) + 1e-9
+        rel = float(jnp.linalg.norm((g1 - g2).reshape(-1))) / denom
+        assert rel < 0.2, rel
+
+    def test_jit_and_smoke_config_flag(self):
+        import dataclasses
+        cfg = dataclasses.replace(get("mixtral-8x7b", smoke=True),
+                                  moe_dispatch_quant=True)
+        params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        toks = jnp.zeros((2, 8), jnp.int32)
+        logits = jax.jit(lambda p, b: transformer.forward_eval(
+            p, b, cfg, NO_POLICY))(params, {"tokens": toks})
+        assert logits.shape == (2, 8, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+class TestEncDecHiddenLoss:
+    def test_hidden_matches_logits_path(self):
+        cfg = get("whisper-small", smoke=True)
+        params = encdec.init_params(jax.random.PRNGKey(0), cfg)
+        batch = {"tokens": jnp.zeros((2, 8), jnp.int32),
+                 "enc_embeds": jnp.ones((2, cfg.enc_seq, cfg.d_model),
+                                        jnp.bfloat16)}
+        x, aux, _ = encdec.forward_hidden(params, batch, cfg, NO_POLICY,
+                                          None, None, remat=False)
+        logits_direct, _, _ = encdec.forward_train(params, batch, cfg,
+                                                   NO_POLICY, None, None,
+                                                   remat=False)
+        from repro.models.transformer import _lm_logits
+        np.testing.assert_allclose(
+            np.asarray(_lm_logits(params, x, cfg), np.float32),
+            np.asarray(logits_direct, np.float32), atol=1e-2)
+
+    def test_train_step_encdec_runs(self):
+        from repro.optim.optimizers import OptimizerConfig, init_opt_state
+        from repro.train.steps import make_lm_train_step
+        cfg = get("whisper-small", smoke=True)
+        params = encdec.init_params(jax.random.PRNGKey(0), cfg)
+        opt = OptimizerConfig(kind="adamw", lr=1e-3, schedule="constant")
+        ostate = init_opt_state(opt, params)
+        step = make_lm_train_step(cfg, NO_POLICY, opt, remat=False,
+                                  donate=False)
+        batch = {"tokens": jnp.ones((2, 8), jnp.int32),
+                 "enc_embeds": jnp.ones((2, cfg.enc_seq, cfg.d_model),
+                                        jnp.bfloat16)}
+        params, ostate, _, m = step(params, ostate, [], batch,
+                                    jnp.zeros((2,), jnp.int32))
+        assert np.isfinite(float(m["loss"]))
+
+
+class TestPipelineWireModel:
+    def test_scheme_byte_ordering(self):
+        from repro.core.pipeline import pack_payload, wire_bytes
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 1024))
+        b = {s: wire_bytes(pack_payload(x, s, 0.10))
+             for s in ("none", "q8", "q4", "topk")}
+        # q4 is half of q8 (plus shared tiny meta); topk10 = 0.1*(2+4)/2
+        assert b["q4"] < 0.6 * b["q8"]
+        assert b["topk"] < 0.4 * b["none"]

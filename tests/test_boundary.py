@@ -1,0 +1,199 @@
+"""Tests for the compression boundary (custom_vjp) and feedback state."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import compressors as C
+from repro.core.boundary import (boundary_apply, boundary_eval,
+                                 init_boundary_state)
+from repro.core.feedback import (aqsgd_message, ef21_message, ef_message,
+                                 efmixed_message)
+from repro.core.policy import (BoundaryPolicy, aqsgd_policy, ef_policy,
+                               quant_policy, topk_policy, NO_COMPRESSION)
+
+
+def _run_boundary(policy, x, state=None, ids=None):
+    if state is None:
+        state = init_boundary_state(policy, x.shape[1:], batch=x.shape[0])
+    if ids is None:
+        ids = jnp.zeros((x.shape[0],), jnp.int32)
+
+    def f(x, bw_buf):
+        y, new_fw = boundary_apply(policy, x, state["fw"], bw_buf, ids)
+        return (y ** 2).sum() / 2, (y, new_fw)
+
+    (loss, (y, new_fw)), (g_x, new_bw) = jax.value_and_grad(
+        f, argnums=(0, 1), has_aux=True)(x, state["bw"])
+    return y, g_x, new_fw, new_bw
+
+
+class TestPlainBoundary:
+    def test_identity_passthrough(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 16))
+        y, g_x, _, _ = _run_boundary(NO_COMPRESSION, x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x))
+        np.testing.assert_allclose(np.asarray(g_x), np.asarray(x))  # d/dx x^2/2 = x
+
+    def test_quant_boundary_compresses_both_directions(self):
+        pol = quant_policy(fw_bits=4, bw_bits=8)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
+        y, g_x, _, _ = _run_boundary(pol, x)
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(C.quantize_dequantize(x, 4)))
+        # backward cotangent is y; it gets 8-bit quantized
+        np.testing.assert_allclose(np.asarray(g_x),
+                                   np.asarray(C.quantize_dequantize(y, 8)),
+                                   rtol=1e-5)
+
+    def test_topk_separate_masks_differ(self):
+        pol = topk_policy(0.1)
+        x = jax.random.normal(jax.random.PRNGKey(2), (2, 512))
+        y, g_x, _, _ = _run_boundary(pol, x)
+        assert abs(float((y != 0).mean()) - 0.1) < 0.02
+        assert abs(float((g_x != 0).mean()) - 0.1) < 0.02
+
+    def test_topk_index_reuse(self):
+        """Paper Table 5: gradient must be masked by the FORWARD indices."""
+        pol = topk_policy(0.1, reuse_indices=True)
+        x = jax.random.normal(jax.random.PRNGKey(3), (2, 512))
+        ids = jnp.zeros((2,), jnp.int32)
+        state = init_boundary_state(pol, x.shape[1:], batch=2)
+
+        def f(x, bw):
+            y, _ = boundary_apply(pol, x, state["fw"], bw, ids)
+            # weight the cotangent so it is NOT aligned with the fw mask
+            w = jnp.arange(y.size, dtype=y.dtype).reshape(y.shape)[:, ::-1]
+            return (y * w).sum()
+
+        g_x = jax.grad(f)(x, state["bw"])
+        fw_mask = np.asarray(C.topk_mask(x, 0.1))
+        g = np.asarray(g_x)
+        assert np.all(g[~fw_mask] == 0)          # nothing outside fw mask
+        assert np.count_nonzero(g) > 0
+
+    def test_eval_modes(self):
+        pol = topk_policy(0.2)
+        x = jax.random.normal(jax.random.PRNGKey(4), (2, 64))
+        on = boundary_eval(pol, x, compress=True)
+        off = boundary_eval(pol, x, compress=False)
+        np.testing.assert_allclose(np.asarray(off), np.asarray(x))
+        np.testing.assert_allclose(np.asarray(on),
+                                   np.asarray(C.topk_compress(x, 0.2)))
+
+
+class TestFeedbackMessages:
+    def test_ef_accumulates_exactly(self):
+        """EF invariant: message + new_error == x + old_error."""
+        comp = C.topk(0.3)
+        x = jax.random.normal(jax.random.PRNGKey(5), (2, 100))
+        e = jax.random.normal(jax.random.PRNGKey(6), (2, 100)) * 0.1
+        m, e2 = ef_message(comp, x, e)
+        np.testing.assert_allclose(np.asarray(m + e2), np.asarray(x + e), rtol=1e-5)
+
+    def test_ef21_converges_on_constant_input(self):
+        """EF21 contraction: on a fixed x, g_t -> x (message error -> 0)."""
+        comp = C.topk(0.3)
+        x = jax.random.normal(jax.random.PRNGKey(7), (1, 64))
+        g = jnp.zeros_like(x)
+        errs = []
+        for _ in range(30):
+            m, g = ef21_message(comp, x, g)
+            errs.append(float(jnp.abs(m - x).max()))
+        assert errs[-1] < errs[0] * 0.05
+
+    def test_efmixed_sparsity_and_invariant(self):
+        comp = C.topk(0.2)
+        x = jax.random.normal(jax.random.PRNGKey(8), (2, 1000))
+        e = jax.random.normal(jax.random.PRNGKey(9), (2, 1000))
+        m, e2 = efmixed_message(comp, x, e)
+        # K/2 from input + K/2 from buffer => about K% nonzero (overlap possible)
+        frac = float((m != 0).mean())
+        assert 0.1 < frac <= 0.21
+        np.testing.assert_allclose(np.asarray(m + e2), np.asarray(x + e), rtol=1e-5)
+
+    def test_aqsgd_per_example_buffers(self):
+        comp = C.topk(0.5)
+        buf = jnp.zeros((10, 8))
+        x = jax.random.normal(jax.random.PRNGKey(10), (2, 8))
+        ids = jnp.array([3, 7], jnp.int32)
+        m, buf2 = aqsgd_message(comp, x, buf, ids)
+        # only rows 3 and 7 touched
+        untouched = np.asarray(buf2[jnp.array([0, 1, 2, 4, 5, 6, 8, 9])])
+        assert np.all(untouched == 0)
+        np.testing.assert_allclose(np.asarray(buf2[ids]), np.asarray(m))
+
+    def test_aqsgd_second_pass_smaller_error(self):
+        """Visiting the same example twice: 2nd message error < 1st (EF21
+        per-example contraction — the point of AQ-SGD)."""
+        comp = C.topk(0.3)
+        buf = jnp.zeros((4, 256))
+        x = jax.random.normal(jax.random.PRNGKey(11), (1, 256))
+        ids = jnp.array([2], jnp.int32)
+        m1, buf = aqsgd_message(comp, x, buf, ids)
+        m2, buf = aqsgd_message(comp, x, buf, ids)
+        assert float(jnp.abs(m2 - x).sum()) < float(jnp.abs(m1 - x).sum())
+
+
+class TestBoundaryWithFeedback:
+    def test_fw_buffer_threads_through(self):
+        pol = ef_policy(0.2, mode="ef")
+        x = jax.random.normal(jax.random.PRNGKey(12), (2, 128))
+        state = init_boundary_state(pol, x.shape[1:], batch=2)
+        ids = jnp.zeros((2,), jnp.int32)
+        w = jax.random.normal(jax.random.PRNGKey(99), x.shape)  # dense cotangent
+
+        def f(x, bw):
+            y, new_fw = boundary_apply(pol, x, state["fw"], bw, ids)
+            return (y * w).sum(), (y, new_fw)
+
+        (_, (y, new_fw)), (g_x, new_bw) = jax.value_and_grad(
+            f, argnums=(0, 1), has_aux=True)(x, state["bw"])
+        # EF invariant at the boundary level
+        np.testing.assert_allclose(np.asarray(y + new_fw), np.asarray(x), rtol=1e-5)
+        assert new_bw.shape == x.shape     # bw EF buffer updated via cotangent
+        # dense cotangent w compressed by top-20% leaves a nonzero error
+        assert float(jnp.abs(new_bw).sum()) > 0
+        np.testing.assert_allclose(np.asarray(g_x + new_bw), np.asarray(w), rtol=1e-5)
+
+    def test_bw_buffer_update_via_cotangent(self):
+        pol = ef_policy(0.2, mode="ef21")
+        x = jax.random.normal(jax.random.PRNGKey(13), (2, 128))
+        state = init_boundary_state(pol, x.shape[1:], batch=2)
+        ids = jnp.zeros((2,), jnp.int32)
+
+        def f(x, bw):
+            y, _ = boundary_apply(pol, x, state["fw"], bw, ids)
+            return (y ** 2).sum() / 2
+
+        g_x, new_bw = jax.grad(f, argnums=(0, 1))(x, state["bw"])
+        # EF21: new buffer == the message that was passed upstream == g_x
+        np.testing.assert_allclose(np.asarray(new_bw), np.asarray(g_x), rtol=1e-5)
+
+    def test_aqsgd_boundary(self):
+        pol = aqsgd_policy(0.5)
+        x = jax.random.normal(jax.random.PRNGKey(14), (2, 64))
+        state = init_boundary_state(pol, x.shape[1:], batch=2, num_samples=8)
+        ids = jnp.array([1, 5], jnp.int32)
+        y, g_x, new_fw, _ = _run_boundary(pol, x, state=state, ids=ids)
+        assert new_fw.shape == (8, 64)
+        np.testing.assert_allclose(np.asarray(new_fw[ids]), np.asarray(y))
+
+    def test_jit_and_grad_compose(self):
+        pol = ef_policy(0.3, mode="efmixed")
+        x = jax.random.normal(jax.random.PRNGKey(15), (2, 64))
+        state = init_boundary_state(pol, x.shape[1:], batch=2)
+        ids = jnp.zeros((2,), jnp.int32)
+
+        @jax.jit
+        def step(x, fw, bw):
+            def f(x, bw):
+                y, new_fw = boundary_apply(pol, x, fw, bw, ids)
+                return (y ** 2).sum(), new_fw
+            (loss, new_fw), (gx, new_bw) = jax.value_and_grad(
+                f, argnums=(0, 1), has_aux=True)(x, bw)
+            return loss, gx, new_fw, new_bw
+
+        loss, gx, new_fw, new_bw = step(x, state["fw"], state["bw"])
+        assert np.isfinite(float(loss))
+        assert gx.shape == x.shape

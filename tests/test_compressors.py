@@ -1,0 +1,112 @@
+"""Unit + property tests for compression operators (paper Sec. 2.2-2.3)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compressors as C
+
+
+class TestQuantization:
+    def test_roundtrip_8bit_close(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+        y = C.quantize_dequantize(x, 8)
+        span = float(x.max() - x.min())
+        assert np.max(np.abs(np.asarray(y - x))) <= span / 255 + 1e-6
+
+    @pytest.mark.parametrize("bits", [2, 4, 6, 8])
+    def test_levels(self, bits):
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 32))
+        codes, _, _ = C.quantize_kbit(x, bits)
+        assert int(codes.max()) <= (1 << bits) - 1
+        assert len(np.unique(np.asarray(codes))) <= (1 << bits)
+
+    def test_constant_tensor_safe(self):
+        x = jnp.full((3, 5), 2.5)
+        y = C.quantize_dequantize(x, 4)
+        np.testing.assert_allclose(np.asarray(y), 2.5, rtol=1e-6)
+
+    def test_endpoints_exact(self):
+        # min and max map to themselves
+        x = jnp.array([[-3.0, 0.0, 5.0]])
+        y = C.quantize_dequantize(x, 8)
+        assert np.isclose(float(y[0, 0]), -3.0, atol=1e-5)
+        assert np.isclose(float(y[0, 2]), 5.0, atol=1e-5)
+
+    @settings(max_examples=30, deadline=None)
+    @given(bits=st.sampled_from([2, 4, 6, 8]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_error_bound_property(self, bits, seed):
+        """|C(x) - x| <= span / (2^bits - 1) elementwise (half-step rounding
+        gives span/levels/2; we assert the loose bound)."""
+        x = jax.random.normal(jax.random.PRNGKey(seed), (16, 16)) * 3.0
+        y = C.quantize_dequantize(x, bits)
+        span = float(x.max() - x.min())
+        assert float(jnp.max(jnp.abs(y - x))) <= span / ((1 << bits) - 1) + 1e-5
+
+    def test_per_axis_scales(self):
+        x = jnp.stack([jnp.linspace(0, 1, 16), jnp.linspace(0, 100, 16)])
+        y_global = C.quantize_dequantize(x, 4)
+        y_rowwise = C.quantize_dequantize(x, 4, axis=(1,))
+        err_g = float(jnp.abs(y_global[0] - x[0]).max())
+        err_r = float(jnp.abs(y_rowwise[0] - x[0]).max())
+        assert err_r < err_g  # per-row scale is strictly better on row 0
+
+
+class TestTopK:
+    def test_keeps_largest(self):
+        x = jnp.array([[1.0, -5.0, 0.1, 3.0, -0.2, 0.05, 2.0, -4.0]])
+        y = C.topk_compress(x, 0.25)  # keep 2 of 8
+        nz = np.nonzero(np.asarray(y))[1]
+        assert set(nz.tolist()) == {1, 7}  # -5, -4 are largest by |.|
+
+    @pytest.mark.parametrize("k", [0.5, 0.3, 0.2, 0.1, 0.05])
+    def test_sparsity(self, k):
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, 1000))
+        y = C.topk_compress(x, k)
+        frac = float((y != 0).mean())
+        assert abs(frac - k) < 0.01
+
+    def test_per_example_independent(self):
+        x = jnp.stack([jnp.arange(8.0), jnp.arange(8.0)[::-1]])
+        m = C.topk_mask(x, 0.25)
+        assert np.asarray(m[0]).tolist() == [False] * 6 + [True] * 2
+        assert np.asarray(m[1]).tolist() == [True] * 2 + [False] * 6
+
+    def test_values_indices_roundtrip(self):
+        x = jax.random.normal(jax.random.PRNGKey(3), (2, 3, 32))
+        vals, idx = C.topk_values_indices(x, 0.25)
+        y = C.topk_scatter(vals, idx, x.shape)
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(C.topk_compress(x, 0.25)),
+                                   rtol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           k=st.sampled_from([0.5, 0.2, 0.1]),
+           n=st.sampled_from([64, 100, 256]))
+    def test_topk_is_best_k_sparse_approx(self, seed, k, n):
+        """C(x) minimizes ||x - y|| over k-sparse y  (biasedness property:
+        ||C(x)-x||^2 <= (1-k)||x||^2 on average; we check the exact argmin)."""
+        x = jax.random.normal(jax.random.PRNGKey(seed), (2, n))
+        y = C.topk_compress(x, k)
+        kept = max(1, int(round(k * n)))
+        # kept entries are the `kept` largest magnitudes
+        mags = np.sort(np.abs(np.asarray(x)), axis=-1)
+        err = np.asarray(jnp.sum((x - y) ** 2, axis=-1))
+        best = (mags[:, :-kept] ** 2).sum(-1)
+        np.testing.assert_allclose(err, best, rtol=1e-5)
+
+    def test_wire_bytes_model(self):
+        assert C.quant(4).wire_bytes_per_elem() == 0.5
+        assert C.quant(8).wire_bytes_per_elem() == 1.0
+        assert C.topk(0.1).wire_bytes_per_elem(2) == pytest.approx(0.6)
+        assert C.IDENTITY.wire_bytes_per_elem(2) == 2.0
+
+
+class TestGradFlow:
+    def test_quant_nondiff_outside_vjp(self):
+        # quantize_dequantize is piecewise constant -> grad ~ 0 through round
+        g = jax.grad(lambda x: C.quantize_dequantize(x, 4).sum())(jnp.ones((2, 2)))
+        assert np.all(np.isfinite(np.asarray(g)))

@@ -1,0 +1,72 @@
+"""Pin the 10 assigned architecture configs to the assignment sheet."""
+import pytest
+
+from repro.configs.registry import ARCHS, ASSIGNED, get
+
+# (layers, d_model, heads, kv, d_ff, vocab, family)
+SPEC = {
+    "glm4-9b":       (40, 4096, 32, 2, 13696, 151552, "dense"),
+    "granite-8b":    (36, 4096, 32, 8, 14336, 49152, "dense"),
+    "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048, "moe"),
+    "whisper-small": (12, 768, 12, 12, 3072, 51865, "audio"),
+    "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152, "dense"),
+    "mixtral-8x7b":  (32, 4096, 32, 8, 14336, 32000, "moe"),
+    "hymba-1.5b":    (32, 1600, 25, 5, 5504, 32001, "hybrid"),
+    "gemma2-27b":    (46, 4608, 32, 16, 36864, 256000, "dense"),
+    "pixtral-12b":   (40, 5120, 32, 8, 14336, 131072, "vlm"),
+    "rwkv6-3b":      (32, 2560, 0, 0, 8960, 65536, "ssm"),
+}
+
+
+def test_all_assigned_present():
+    assert sorted(ASSIGNED) == sorted(SPEC)
+
+
+@pytest.mark.parametrize("arch", sorted(SPEC))
+def test_config_matches_assignment(arch):
+    l, d, h, kv, ff, v, fam = SPEC[arch]
+    cfg = get(arch)
+    assert cfg.num_layers == l
+    assert cfg.d_model == d
+    if fam != "ssm":                      # rwkv6 is attention-free
+        assert cfg.num_heads == h
+        assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+    assert cfg.family == fam
+    assert cfg.source, f"{arch} must cite its source"
+
+
+def test_moe_shapes():
+    mix = get("mixtral-8x7b")
+    assert (mix.num_experts, mix.top_k) == (8, 2)
+    l4 = get("llama4-maverick-400b-a17b")
+    assert (l4.num_experts, l4.top_k) == (128, 1)
+
+
+def test_hymba_ssm_state():
+    assert get("hymba-1.5b").ssm_state == 16
+
+
+def test_smoke_reduction_bounds():
+    for arch in SPEC:
+        r = get(arch, smoke=True)
+        assert r.num_layers <= 2 * r.group_size
+        assert r.d_model <= 512
+        assert (r.num_experts or 0) <= 4
+
+
+def test_param_counts_in_ballpark():
+    """Analytic param counts should land near the advertised sizes."""
+    from repro.models.config import active_param_count, param_count
+    expect = {"glm4-9b": (9, 0.35), "granite-8b": (8, 0.35),
+              "starcoder2-7b": (7, 0.45), "gemma2-27b": (27, 0.35),
+              "pixtral-12b": (12, 0.35), "rwkv6-3b": (3, 0.45),
+              "hymba-1.5b": (1.5, 0.45), "mixtral-8x7b": (46.7, 0.25)}
+    for arch, (bn, tol) in expect.items():
+        n = param_count(get(arch)) / 1e9
+        assert abs(n - bn) / bn < tol, (arch, n, bn)
+    # llama4 maverick: ~400B total, ~17B active
+    l4 = get("llama4-maverick-400b-a17b")
+    assert 250e9 < param_count(l4) < 550e9
+    assert 10e9 < active_param_count(l4) < 25e9

@@ -1,0 +1,94 @@
+"""Hypothesis property tests on the error-feedback algebra (paper Sec 2.4,
+2.5) — the invariants that make compensation 'not lose information'."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compressors import topk, quant
+from repro.core.feedback import (aqsgd_message, ef21_message, ef_message,
+                                 efmixed_message)
+
+
+def _x(seed, b=2, n=64):
+    return jax.random.normal(jax.random.PRNGKey(seed), (b, n), jnp.float32)
+
+
+class TestEFInvariants:
+    @given(st.integers(0, 50), st.sampled_from([0.1, 0.25, 0.5]))
+    @settings(max_examples=15, deadline=None)
+    def test_ef_conserves_mass_exactly(self, seed, k):
+        """m + e' == x + e — nothing is ever lost, only delayed."""
+        x, e = _x(seed), _x(seed + 1)
+        m, e2 = ef_message(topk(k), x, e)
+        np.testing.assert_allclose(np.asarray(m + e2), np.asarray(x + e),
+                                   rtol=1e-6)
+
+    @given(st.integers(0, 50))
+    @settings(max_examples=10, deadline=None)
+    def test_ef21_buffer_is_last_message(self, seed):
+        x, g = _x(seed), _x(seed + 1)
+        m, g2 = ef21_message(topk(0.25), x, g)
+        np.testing.assert_array_equal(np.asarray(m), np.asarray(g2))
+
+    @given(st.integers(0, 30))
+    @settings(max_examples=10, deadline=None)
+    def test_ef21_contracts_on_constant_stream(self, seed):
+        """Repeatedly feeding the SAME x drives ||x - g|| -> 0 (the EF21
+        convergence mechanism the paper relies on)."""
+        x = _x(seed)
+        g = jnp.zeros_like(x)
+        errs = []
+        for _ in range(12):
+            _, g = ef21_message(topk(0.25), x, g)
+            errs.append(float(jnp.linalg.norm(x - g)))
+        assert errs[-1] < 0.25 * errs[0]
+        assert errs[-1] <= errs[0]
+
+    @given(st.integers(0, 30))
+    @settings(max_examples=10, deadline=None)
+    def test_efmixed_mass_identity(self, seed):
+        """EF-mixed keeps the same invariant as EF: m + e' == x + e."""
+        x, e = _x(seed), _x(seed + 1)
+        m, e2 = efmixed_message(topk(0.2), x, e)
+        np.testing.assert_allclose(np.asarray(m + e2), np.asarray(x + e),
+                                   rtol=1e-6)
+
+    @given(st.integers(0, 30))
+    @settings(max_examples=10, deadline=None)
+    def test_ef_with_quant_bounded_buffer(self, seed):
+        """With unbiased-ish quantization the EF buffer stays bounded by
+        one quantization step per element."""
+        x = _x(seed)
+        e = jnp.zeros_like(x)
+        comp = quant(8)
+        for _ in range(10):
+            _, e = ef_message(comp, x, e)
+        span = float(x.max() - x.min()) + 1.0
+        assert float(jnp.abs(e).max()) < span  # no runaway growth
+
+
+class TestAQSGDInvariants:
+    @given(st.integers(0, 20))
+    @settings(max_examples=10, deadline=None)
+    def test_per_example_isolation(self, seed):
+        """Updating examples {0,1} must not touch buffers of {2,3}."""
+        buf = jax.random.normal(jax.random.PRNGKey(seed), (4, 8))
+        x = _x(seed + 1, b=2, n=8)
+        ids = jnp.array([0, 1], jnp.int32)
+        _, buf2 = aqsgd_message(topk(0.5), x, buf, ids)
+        np.testing.assert_array_equal(np.asarray(buf[2:]),
+                                      np.asarray(buf2[2:]))
+
+    def test_second_visit_sends_smaller_residual(self):
+        """The AQ-SGD premise: activations drift slowly, so the residual
+        C(x - b) shrinks on revisits when x changes little."""
+        buf = jnp.zeros((2, 64))
+        x = _x(0, b=2)
+        m1, buf = aqsgd_message(topk(0.25), x, buf, jnp.array([0, 1]))
+        x2 = x + 0.01 * _x(1, b=2)
+        m2, _ = aqsgd_message(topk(0.25), x2, buf, jnp.array([0, 1]))
+        r1 = float(jnp.linalg.norm(m1 - x))
+        r2 = float(jnp.linalg.norm(m2 - x2))
+        assert r2 < r1

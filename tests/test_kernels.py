@@ -1,0 +1,124 @@
+"""Pallas kernel validation (interpret mode on CPU; TPU is the target).
+
+Sweeps shapes x dtypes, asserts allclose (mostly bit-exact) against the
+pure-jnp oracles in kernels/ref.py, plus property tests tying the bisection
+TopK to the exact sort-based TopK.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.ops import (quant_dequant_op, quant_dequant_st,
+                               topk_block_op, topk_block_st)
+from repro.kernels.quantize import (dequantize_wire, quant_dequant,
+                                    quantize_wire)
+from repro.kernels.topk_mask import topk_block
+
+SHAPES = [(8, 128), (32, 256), (64, 512), (256, 1024), (16, 384)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_quant_kernel_matches_ref(shape, dtype, bits):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape).astype(dtype)
+    got = np.asarray(quant_dequant(x, bits, block=(8, 128), interpret=True),
+                     np.float32)
+    want = np.asarray(ref.quant_dequant_ref(x, bits, block=(8, 128)),
+                      np.float32)
+    # XLA may fuse (x-min)/scale as (x-min)*(1/scale): a value sitting
+    # exactly on a rounding tie can land one level apart.  Allow <=0.1% of
+    # entries to differ by at most one quantization step.
+    step = float((x.max() - x.min()).astype(np.float32)) / ((1 << bits) - 1)
+    diff = np.abs(got - want)
+    assert diff.max() <= step * 1.01 + 1e-6
+    # bf16 inputs at 8 bits: step ~ bf16 ulp, so ties are denser
+    assert (diff > 1e-6).mean() <= 5e-3
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_topk_kernel_matches_ref(shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(1), shape).astype(dtype)
+    got = topk_block(x, 0.1, block=(8, 128), interpret=True)
+    want = ref.topk_block_ref(x, 0.1, block=(8, 128))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32))
+
+
+def test_quantize_wire_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(2), (32, 512))
+    codes, meta = quantize_wire(x, 8, block=(8, 128), interpret=True)
+    rcodes, rmeta = ref.quantize_wire_ref(x, 8, block=(8, 128))
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(rcodes))
+    np.testing.assert_allclose(np.asarray(meta), np.asarray(rmeta), rtol=1e-6)
+    y = dequantize_wire(codes, meta, block=(8, 128))
+    err = np.abs(np.asarray(y - x))
+    # per-tile 8-bit error bound
+    assert err.max() < (x.max() - x.min()) / 255 + 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       k=st.sampled_from([0.5, 0.3, 0.2, 0.1, 0.05]),
+       bn=st.sampled_from([128, 256, 512]))
+def test_bisection_topk_close_to_exact(seed, k, bn):
+    """Property: bisection TopK keeps the same entries as exact sort-based
+    TopK per tile (ties at the threshold may add a few extra)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (16, bn * 2))
+    approx = np.asarray(ref.topk_block_ref(x, k, block=(16, bn)))
+    exact = np.asarray(ref.topk_exact_block_ref(x, k, block=(16, bn)))
+    # every exact-kept entry is kept by the bisection
+    kept_exact = exact != 0
+    assert np.all(approx[kept_exact] == exact[kept_exact])
+    # and the bisection keeps at most a whisker more
+    n_extra = (approx != 0).sum() - kept_exact.sum()
+    assert 0 <= n_extra <= 0.01 * x.size + 16
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([2, 4, 6, 8]))
+def test_per_tile_quant_no_worse_than_global(seed, bits):
+    """Property: per-tile scaling error <= per-tensor scaling error."""
+    from repro.core.compressors import quantize_dequantize
+    x = jax.random.normal(jax.random.PRNGKey(seed), (32, 256)) \
+        * jnp.linspace(0.1, 10.0, 32)[:, None]     # heteroscedastic rows
+    tile = ref.quant_dequant_ref(x, bits, block=(8, 128))
+    glob = quantize_dequantize(x, bits)
+    assert (float(jnp.abs(tile - x).mean())
+            <= float(jnp.abs(glob - x).mean()) + 1e-7)
+
+
+class TestOpsWrappers:
+    def test_any_rank(self):
+        x = jax.random.normal(jax.random.PRNGKey(3), (4, 8, 256))
+        y = quant_dequant_op(x, 4)
+        assert y.shape == x.shape
+        z = topk_block_op(x, 0.2)
+        assert z.shape == x.shape
+        frac = float((z != 0).mean())
+        assert 0.19 < frac < 0.25
+
+    def test_fallback_when_not_128_divisible(self):
+        x = jax.random.normal(jax.random.PRNGKey(4), (4, 100))
+        y = quant_dequant_op(x, 8)
+        assert y.shape == x.shape
+        z = topk_block_op(x, 0.5)
+        assert abs(float((z != 0).mean()) - 0.5) < 0.1
+
+    def test_straight_through_grads(self):
+        x = jax.random.normal(jax.random.PRNGKey(5), (4, 256))
+        g1 = jax.grad(lambda x: quant_dequant_st(x, 4).sum())(x)
+        np.testing.assert_allclose(np.asarray(g1), 1.0)
+        g2 = jax.grad(lambda x: topk_block_st(x, 0.1).sum())(x)
+        np.testing.assert_allclose(np.asarray(g2), 1.0)
+
+    def test_jit_compiles_once(self):
+        x = jax.random.normal(jax.random.PRNGKey(6), (8, 512))
+        y1 = quant_dequant_op(x, 4)
+        y2 = quant_dequant_op(x + 1, 4)
+        assert y1.shape == y2.shape
