@@ -1,11 +1,15 @@
-"""HLO collective-bytes measurement of the REAL compressed pipeline.
+"""Bytes-on-wire of the REAL compressed pipeline, forward AND backward.
 
-The convergence experiments use the paper's simulated-MP boundary (inside
-one SPMD program — no inter-stage collective).  This benchmark lowers the
-actual ``shard_map`` pipeline (core/pipeline.py) on a production-mesh
-stage axis and reads the ``collective-permute`` bytes out of the compiled
-HLO for each wire scheme — the paper's compression ratio, visible in the
-collective roofline term.
+The differentiable pipeline (repro/transport/pipeline.py) ppermutes a packed
+payload forward (activations) and a packed payload backward (activation-
+gradients).  This benchmark measures both per wire scheme:
+
+  * exact payload bytes per hop (from the packed pytree's shapes/dtypes),
+    ASSERTED against each codec's ``wire_bytes_per_elem`` cost model to
+    within per-tensor-scale overhead;
+  * collective-permute bytes in the compiled HLO of the forward-only and
+    the value_and_grad programs — the compression ratio visible in the
+    collective roofline term.
 
 Run:
   PYTHONPATH=src python -m benchmarks.pipeline_wire          # 4-stage, GPT-2ish
@@ -13,7 +17,7 @@ Run:
 import os
 
 if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=256"
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 
 import json
 
@@ -23,13 +27,47 @@ import jax.numpy as jnp
 from repro.launch.dryrun import collective_bytes
 
 
-def measure(schemes=("none", "q8", "q4", "topk"), *, stages=4,
-            batch=32, seq=1024, d_model=768, d_ff=3072, k_frac=0.10):
-    """Returns one report per scheme: collective-permute bytes/step."""
-    from repro.core.pipeline import pipeline_forward
+def payload_bytes(scheme: str, feat_shape, k_frac: float):
+    """(fw, bw, fw_model, bw_model) bytes for ONE pipeline hop.
+
+    fw/bw are exact packed-payload bytes (eval_shape, no compute);
+    fw_model/bw_model come from the codec cost model (excl. scales).
+    """
+    from repro.transport.codecs import wire_bytes
+    from repro.transport.pipeline import (PipelineTransport,
+                                          _policy_for_scheme)
+    policy = _policy_for_scheme(scheme, k_frac)
+    transport = PipelineTransport(policy, "stage", 4)
+    x = jax.ShapeDtypeStruct(feat_shape, jnp.bfloat16)
+    fw_payload = jax.eval_shape(
+        lambda a: transport._fw_codec.pack(a, policy.fw.k_frac), x)
+    fw = wire_bytes(fw_payload)
+    n = 1
+    for s in feat_shape[1:]:
+        n *= s
+    if policy.reuse_indices:
+        # backward payload is values only (indices already at both ends);
+        # its length is the FORWARD pack's k — the reused indices
+        k = max(1, int(round(policy.fw.k_frac * n)))
+        bw = feat_shape[0] * k * 2
+    else:
+        bw_payload = jax.eval_shape(
+            lambda a: transport._bw_codec.pack(a, policy.bw.k_frac), x)
+        bw = wire_bytes(bw_payload)
+    fw_model, bw_model = transport.wire_bytes_per_example(n, elem_bytes=2)
+    return fw, bw, fw_model * feat_shape[0], bw_model * feat_shape[0]
+
+
+def measure(schemes=("none", "q8", "q4", "topk", "topk_reuse"), *, stages=4,
+            batch=8, seq=256, d_model=256, d_ff=1024, k_frac=0.10,
+            check: bool = True):
+    """One report per scheme: exact fw/bw payload bytes per hop (checked
+    against the codec cost model) + compiled-HLO collective-permute bytes
+    for the forward and the grad program."""
+    from repro.transport.pipeline import pipeline_apply
     n_dev = jax.device_count()
-    data = n_dev // stages
-    mesh = jax.make_mesh((stages, data), ("stage", "data"))
+    assert n_dev >= stages, (n_dev, stages)
+    mesh = jax.make_mesh((stages,), ("stage",))
 
     key = jax.random.PRNGKey(0)
     k1, k2 = jax.random.split(key)
@@ -46,26 +84,48 @@ def measure(schemes=("none", "q8", "q4", "topk"), *, stages=4,
 
     x = jax.ShapeDtypeStruct((batch, seq, d_model), jnp.bfloat16)
     params_s = jax.eval_shape(lambda: params)
+    mb_feat = (batch // stages, seq, d_model)
 
     reports = []
     for scheme in schemes:
         def run(p, xx):
-            return pipeline_forward(stage_fn, p, xx, mesh, "stage",
-                                    scheme=scheme, k_frac=k_frac)
-        lowered = jax.jit(run).lower(params_s, x)
-        compiled = lowered.compile()
-        coll = collective_bytes(compiled.as_text())
-        cp = coll.get("collective-permute", 0)
+            return pipeline_apply(stage_fn, p, xx, mesh, "stage",
+                                  scheme=scheme, k_frac=k_frac)
+
+        def loss(p, xx):
+            return jnp.sum(run(p, xx).astype(jnp.float32) ** 2)
+
+        fw_hlo = collective_bytes(
+            jax.jit(run).lower(params_s, x).compile().as_text()
+        ).get("collective-permute", 0)
+        grad_hlo = collective_bytes(
+            jax.jit(jax.grad(loss)).lower(params_s, x).compile().as_text()
+        ).get("collective-permute", 0)
+
+        fw, bw, fw_model, bw_model = payload_bytes(scheme, mb_feat, k_frac)
+        if check:
+            # cost model holds to within per-tensor-scale overhead
+            # (min/scale scalars, one q4 pad nibble column)
+            slack = 64 + 0.005 * max(fw_model, 1)
+            assert abs(fw - fw_model) <= slack, (scheme, fw, fw_model)
+            slack = 64 + 0.005 * max(bw_model, 1)
+            assert abs(bw - bw_model) <= slack, (scheme, bw, bw_model)
+
         reports.append({
-            "scheme": scheme, "stages": stages,
-            "collective_permute_bytes": cp,
-            "all_collectives": coll,
-            "ratio_vs_none": None,
+            "scheme": scheme, "stages": stages, "k_frac": k_frac,
+            "fw_payload_bytes": fw, "bw_payload_bytes": bw,
+            "fw_model_bytes": round(fw_model), "bw_model_bytes": round(bw_model),
+            "hlo_fw_collective_permute_bytes": fw_hlo,
+            "hlo_fwbw_collective_permute_bytes": grad_hlo,
+            "fw_ratio_vs_none": None, "bw_ratio_vs_none": None,
         })
-    base = reports[0]["collective_permute_bytes"] or 1
+    base_fw = reports[0]["fw_payload_bytes"] or 1
+    base_bw = reports[0]["bw_payload_bytes"] or 1
     for r in reports:
-        r["ratio_vs_none"] = round(base / max(r["collective_permute_bytes"],
-                                              1), 2)
+        r["fw_ratio_vs_none"] = round(base_fw / max(r["fw_payload_bytes"], 1),
+                                      2)
+        r["bw_ratio_vs_none"] = round(base_bw / max(r["bw_payload_bytes"], 1),
+                                      2)
     return reports
 
 

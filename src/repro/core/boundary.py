@@ -1,11 +1,15 @@
-"""Compression boundary: the paper's technique as a composable JAX module.
+"""Compression boundary: ``jax.custom_vjp`` around a SimulatedTransport.
 
 A boundary sits at a pipeline-stage cut.  In a real MP system the forward
 activation and the backward activation-gradient cross the network here; the
 paper compresses both.  Following the paper (Sec. 2.1) we integrate the
 boundary directly into the model with ``jax.custom_vjp`` — convergence-
-equivalent to the distributed system, while ``core/pipeline.py`` provides the
-real ``shard_map``/``ppermute`` path for performance work.
+equivalent to the distributed system.  The compression itself is delegated
+to :class:`repro.transport.simulated.SimulatedTransport`, which implements
+the shared ``Transport.fw/bw`` interface over the wire-codec registry
+(repro/transport/codecs.py) — the same registry the real differentiable
+``ppermute`` pipeline (repro/transport/pipeline.py) packs bytes with, so
+both paths see identical numbers at the boundary.
 
 Semantics (training):
   forward : y  = F(x)   where F is the fw compressor, optionally wrapped in
@@ -29,21 +33,14 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.compressors import apply_mask, topk_mask
-from repro.core.feedback import feedback_message
 from repro.core.policy import BoundaryPolicy
 
 
-def _fw_message(policy: BoundaryPolicy, x, fw_buf, ids):
-    """Forward message + new fw buffer + the TopK mask (for index reuse)."""
-    m, new_fw = feedback_message(policy.feedback, policy.fw, x, fw_buf, ids)
-    mask = None
-    if policy.reuse_indices:
-        # Mask of what the forward direction actually kept.  With plain TopK
-        # this is the TopK mask of x itself (paper Table 5).
-        src = x if policy.feedback == "none" else m
-        mask = topk_mask(src, policy.fw.k_frac)
-    return m, new_fw, mask
+def _transport(policy: BoundaryPolicy):
+    # Lazy: repro.core.__init__ imports this module, and the transport
+    # package imports repro.core.policy — a top-level import would cycle.
+    from repro.transport.simulated import simulated_transport
+    return simulated_transport(policy)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -54,25 +51,20 @@ def boundary_apply(policy: BoundaryPolicy, x, fw_buf, bw_buf, ids):
     ``ids``: (B,) int32 example ids (AQ-SGD only; zeros otherwise).
     The updated backward buffer is delivered as the cotangent of ``bw_buf``.
     """
-    m, new_fw, _ = _fw_message(policy, x, fw_buf, ids)
+    m, new_fw, _ = _transport(policy).fw(x, fw_buf, ids)
     return m, new_fw
 
 
 def _boundary_fwd(policy: BoundaryPolicy, x, fw_buf, bw_buf, ids):
-    m, new_fw, mask = _fw_message(policy, x, fw_buf, ids)
-    residuals = (mask, fw_buf, bw_buf, ids)
+    m, new_fw, ctx = _transport(policy).fw(x, fw_buf, ids)
+    residuals = (ctx, fw_buf, bw_buf, ids)
     return (m, new_fw), residuals
 
 
 def _boundary_bwd(policy: BoundaryPolicy, residuals, cotangents):
-    mask, fw_buf, bw_buf, ids = residuals
+    ctx, fw_buf, bw_buf, ids = residuals
     g_y, _g_new_fw = cotangents          # buffer output is aux — no gradient
-    if policy.reuse_indices:
-        # Paper Table 5: reuse the forward TopK indices on the gradient.
-        g_x = apply_mask(g_y, mask)
-        new_bw = jnp.zeros_like(bw_buf)
-    else:
-        g_x, new_bw = feedback_message(policy.bw_feedback, policy.bw, g_y, bw_buf)
+    g_x, new_bw = _transport(policy).bw(g_y, bw_buf, ctx)
     zero_fw = jax.tree.map(jnp.zeros_like, fw_buf)
     zero_ids = np.zeros(ids.shape, dtype=jax.dtypes.float0)
     return (g_x, zero_fw, new_bw, zero_ids)

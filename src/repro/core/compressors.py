@@ -169,18 +169,23 @@ class Compressor:
         raise ValueError(f"unknown compressor kind: {self.kind}")
 
     # -- wire-cost model (bytes per element of the uncompressed tensor) -----
-    def wire_bytes_per_elem(self, elem_bytes: int = 2) -> float:
+    def wire_bytes_per_elem(self, elem_bytes: int = 2,
+                            n: Optional[int] = None) -> float:
         """Bytes actually communicated per original element (bf16 baseline=2).
 
         quant: bits/8 (+ negligible per-tensor scale);
-        topk:  k_frac * (elem_bytes + 4) — value + int32 index.
+        topk:  k_frac * (elem_bytes + idx_bytes) — value + index, where the
+               index is uint16 when the flattened feature dim ``n`` fits in
+               16 bits (see transport/codecs.py), int32 otherwise (also the
+               conservative default when ``n`` is unknown).
         """
         if self.kind == "none":
             return float(elem_bytes)
         if self.kind == "quant":
             return self.bits / 8.0
         if self.kind == "topk":
-            return self.k_frac * (elem_bytes + 4)
+            idx_bytes = 2 if (n is not None and n <= (1 << 16)) else 4
+            return self.k_frac * (elem_bytes + idx_bytes)
         raise ValueError(self.kind)
 
     @property

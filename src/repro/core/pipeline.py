@@ -1,145 +1,20 @@
-"""BEYOND-PAPER: real pipeline parallelism with compressed stage handoffs.
+"""Compatibility shim — the real pipeline lives in repro.transport.
 
-The paper simulates MP on one device.  Here the stage boundary is an actual
-``jax.lax.ppermute`` over a mesh axis inside ``shard_map`` — GPipe-style
-microbatching, each device holding ``num_layers / stages`` layers.  The
-boundary tensor is PACKED before the ppermute:
+The wire packing (``pack_payload``/``unpack_payload``/``wire_bytes``) moved
+to :mod:`repro.transport.codecs` (a pluggable codec registry shared with the
+simulated boundary), and the ``shard_map``/``ppermute`` pipeline moved to
+:mod:`repro.transport.pipeline` — now DIFFERENTIABLE: the backward pass
+ppermutes a packed gradient payload in the reverse direction, so training
+runs through the real compressed wire (see transport/pipeline.py).
 
-  * ``none``  — raw bf16                        (2   bytes/elem)
-  * ``q8``    — uint8 codes + per-tile scales   (1   byte/elem)
-  * ``q4``    — two 4-bit codes packed per int8 (0.5 byte/elem)
-  * ``topk``  — (values, int32 indices) pair    (k*(2+4) bytes/elem)
-
-so the collective-permute bytes in the lowered HLO shrink by exactly the
-paper's compression ratio — measurable in §Roofline's collective term.
-
-This module implements the FORWARD pipeline (inference / activation
-streaming).  The simulated-MP path (core/boundary.py) remains the
-convergence-faithful training setup, as in the paper.
+This module re-exports the original names for existing callers.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Callable, Optional
+from repro.transport.codecs import (pack_payload, unpack_payload,  # noqa: F401
+                                    wire_bytes)
+from repro.transport.pipeline import (pipeline_apply,  # noqa: F401
+                                      pipeline_forward)
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from repro.core.compressors import (dequantize_kbit, quantize_kbit,
-                                    topk_scatter, topk_values_indices)
-
-
-# ---------------------------------------------------------------------------
-# Wire packing
-# ---------------------------------------------------------------------------
-
-def pack_payload(x: jnp.ndarray, scheme: str, k_frac: float = 0.1):
-    """x: (B, S, d) stage output -> wire pytree (static shapes)."""
-    b = x.shape[0]
-    flat = x.reshape(b, -1)
-    if scheme == "none":
-        return {"raw": x.astype(jnp.bfloat16)}
-    if scheme == "q8":
-        codes, mn, sc = quantize_kbit(flat.astype(jnp.float32), 8, axis=(1,))
-        return {"codes": codes, "min": mn, "scale": sc}
-    if scheme == "q4":
-        codes, mn, sc = quantize_kbit(flat.astype(jnp.float32), 4, axis=(1,))
-        even = codes[:, 0::2]
-        odd = codes[:, 1::2]
-        packed = (even | (odd << 4)).astype(jnp.uint8)
-        return {"codes4": packed, "min": mn, "scale": sc}
-    if scheme == "topk":
-        vals, idx = topk_values_indices(flat, k_frac)
-        return {"vals": vals.astype(jnp.bfloat16), "idx": idx}
-    raise ValueError(scheme)
-
-
-def unpack_payload(payload, shape, dtype=jnp.bfloat16):
-    b = shape[0]
-    n = 1
-    for s in shape[1:]:
-        n *= s
-    if "raw" in payload:
-        return payload["raw"].astype(dtype)
-    if "codes" in payload:
-        flat = dequantize_kbit(payload["codes"], payload["min"],
-                               payload["scale"])
-        return flat.reshape(shape).astype(dtype)
-    if "codes4" in payload:
-        packed = payload["codes4"]
-        even = packed & 0xF
-        odd = packed >> 4
-        codes = jnp.stack([even, odd], axis=-1).reshape(b, n)
-        flat = dequantize_kbit(codes, payload["min"], payload["scale"])
-        return flat.reshape(shape).astype(dtype)
-    if "vals" in payload:
-        return topk_scatter(payload["vals"].astype(jnp.float32),
-                            payload["idx"], shape, jnp.float32
-                            ).astype(dtype)
-    raise ValueError(list(payload))
-
-
-def wire_bytes(payload) -> int:
-    return sum(p.size * p.dtype.itemsize for p in jax.tree.leaves(payload))
-
-
-# ---------------------------------------------------------------------------
-# Pipelined forward over a mesh axis
-# ---------------------------------------------------------------------------
-
-def pipeline_forward(stage_fn: Callable, params_stacked, x, mesh: Mesh,
-                     axis: str, *, scheme: str = "none", k_frac: float = 0.1,
-                     microbatches: Optional[int] = None):
-    """Run ``stage_fn(stage_params, x) -> x`` as an S-stage GPipe pipeline
-    over mesh axis ``axis``, ppermute-ing PACKED payloads between stages.
-
-    params_stacked: pytree with leading dim S (one slice per stage), sharded
-    so stage s lives on axis index s.  x: (B, ...) global batch; microbatch
-    count defaults to S (minimum-bubble GPipe).
-    """
-    s_stages = mesh.shape[axis]
-    mb = microbatches or s_stages
-    b = x.shape[0]
-    assert b % mb == 0, (b, mb)
-
-    x_mb = x.reshape(mb, b // mb, *x.shape[1:])
-    feat_shape = x_mb.shape[1:]
-
-    def body(params_local, x_local):
-        # params_local: this stage's slice (leading dim 1); x_local: (mb, ...)
-        params_local = jax.tree.map(lambda a: a[0], params_local)
-        idx = jax.lax.axis_index(axis)
-        n_steps = mb + s_stages - 1
-        buf = jnp.zeros(feat_shape, x_local.dtype)
-        outs = jnp.zeros_like(x_local)
-
-        def step(carry, t):
-            buf, outs = carry
-            # stage 0 injects microbatch t; others consume the ppermute buf
-            inject = jnp.clip(t, 0, mb - 1)
-            x_in = jnp.where(idx == 0, x_local[inject], buf)
-            y = stage_fn(params_local, x_in)
-            payload = pack_payload(y, scheme, k_frac)
-            moved = jax.lax.ppermute(
-                payload, axis,
-                [(i, (i + 1) % s_stages) for i in range(s_stages)])
-            buf = unpack_payload(moved, feat_shape, x_local.dtype)
-            # the LAST stage's y at step t is microbatch t - (S-1)
-            emit = jnp.clip(t - (s_stages - 1), 0, mb - 1)
-            outs = jnp.where(t >= s_stages - 1, outs.at[emit].set(y), outs)
-            return (buf, outs), None
-
-        (_, outs), _ = jax.lax.scan(step, (buf, outs), jnp.arange(n_steps))
-        # only the LAST stage holds the pipeline output; psum delivers it
-        # replicated (cheap vs reconstructing a stage-stacked tensor, and
-        # in a real training step the loss lives on the last stage anyway)
-        outs = jnp.where(idx == s_stages - 1, outs, jnp.zeros_like(outs))
-        return jax.lax.psum(outs, axis)
-
-    pspec = jax.tree.map(lambda _: P(axis), params_stacked)
-    out = jax.shard_map(
-        body, mesh=mesh,
-        in_specs=(pspec, P()), out_specs=P(),
-        check_vma=False)(params_stacked, x_mb)
-    return out.reshape(b, *x.shape[1:])
+__all__ = ["pack_payload", "unpack_payload", "wire_bytes",
+           "pipeline_apply", "pipeline_forward"]

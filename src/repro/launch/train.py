@@ -10,12 +10,16 @@ Examples:
       --steps 200 --batch 8 --seq 128 --policy top10reuse
   PYTHONPATH=src python -m repro.launch.train --arch mixtral-8x7b --smoke \
       --steps 50 --policy q4q8 --microbatches 2 --ckpt /tmp/mix.npz
+  PYTHONPATH=src python -m repro.launch.train --arch gpt2-small --smoke \
+      --steps 50 --policy q4q8 --transport pipeline --stages 2
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import math
+import os
 import sys
 import time
 
@@ -87,6 +91,12 @@ def main(argv=None) -> int:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--policy", default="none", choices=sorted(POLICIES))
+    ap.add_argument("--transport", default="simulated",
+                    choices=("simulated", "pipeline"),
+                    help="simulated boundary (paper) or the real "
+                         "compressed shard_map/ppermute pipeline")
+    ap.add_argument("--stages", type=int, default=None,
+                    help="pipeline stage count (default: policy's)")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--no-remat", action="store_true")
@@ -100,6 +110,15 @@ def main(argv=None) -> int:
     cfg = get(args.arch, smoke=args.smoke)
     seq = min(args.seq, cfg.max_seq)
     policy = POLICIES[args.policy]()
+    if args.stages:
+        policy = dataclasses.replace(policy, num_stages=args.stages)
+    if (args.transport == "pipeline"
+            and "xla_force_host_platform_device_count"
+            not in os.environ.get("XLA_FLAGS", "")):
+        # Must land before first jax backend init (imports alone are fine).
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={policy.num_stages}")
     n_params = param_count(cfg)
     print(f"# arch={cfg.arch_id} params~{n_params/1e6:.1f}M "
           f"(active {active_param_count(cfg)/1e6:.1f}M) "
@@ -111,12 +130,23 @@ def main(argv=None) -> int:
     params = (encdec if cfg.enc_dec else transformer).init_params(
         jax.random.PRNGKey(args.seed), cfg)
     opt_state = init_opt_state(opt, params)
-    bstates = [init_boundary_state(policy.at(i), (seq, cfg.d_model),
-                                   batch=args.batch, dtype=jnp.bfloat16)
-               for i in range(policy.num_boundaries)]
+    bstates = ([] if args.transport == "pipeline" else
+               [init_boundary_state(policy.at(i), (seq, cfg.d_model),
+                                    batch=args.batch, dtype=jnp.bfloat16)
+                for i in range(policy.num_boundaries)])
+    if args.transport == "pipeline":
+        # --microbatches means GPipe microbatches here (not grad
+        # accumulation); remat is not applied inside the pipeline scan.
+        print(f"# pipeline transport: microbatches="
+              f"{args.microbatches if args.microbatches > 1 else policy.num_stages}"
+              f" (GPipe), remat off", flush=True)
     step_fn = make_lm_train_step(cfg, policy, opt, remat=not args.no_remat,
                                  donate=False,
-                                 microbatches=args.microbatches)
+                                 microbatches=args.microbatches,
+                                 transport=args.transport,
+                                 pipeline_microbatches=(
+                                     args.microbatches
+                                     if args.microbatches > 1 else None))
 
     stream = synthetic_stream(cfg, args.batch, seq, args.seed)
     metrics, t0 = [], time.time()

@@ -134,3 +134,61 @@ def boundary_shapes(width: int = 64, image: int = 32,
     return [(image, image, width),
             (image // 2, image // 2, width * 2),
             (image // 4, image // 4, width * 4)]
+
+
+# ---------------------------------------------------------------------------
+# Homogeneous-stage variant for the REAL pipeline (transport/pipeline.py)
+# ---------------------------------------------------------------------------
+# SPMD ppermute pipelining runs ONE program on every device, so the boundary
+# tensor (and the stage params pytree) must be identical across stages —
+# unlike the width-doubling ResNet above.  This variant keeps a constant
+# width/resolution through S stages of residual blocks; stem and head run
+# outside the pipeline (replicated, single-device-cheap).
+
+def init_pipeline_params(key, num_stages: int, num_classes: int = 10,
+                         width: int = 16, blocks_per_stage: int = 2):
+    """Stage params STACKED with leading dim ``num_stages``."""
+    ks = jax.random.split(key, 2 + num_stages)
+    params = {"stem": _conv_init(ks[0], 3, 3, 3, width),
+              "stem_gn": _gn_init(width)}
+    stages = []
+    for s in range(num_stages):
+        bks = jax.random.split(ks[1 + s], blocks_per_stage)
+        stages.append({f"b{i}": _block_init(bks[i], width, width, 1)
+                       for i in range(blocks_per_stage)})
+    params["stages"] = jax.tree.map(lambda *a: jnp.stack(a), *stages)
+    params["fc"] = (jax.random.normal(ks[-1], (width, num_classes)) *
+                    (1.0 / width) ** 0.5)
+    params["fc_b"] = jnp.zeros((num_classes,))
+    return params
+
+
+def pipeline_stage_apply(stage_params, x):
+    """One homogeneous stage: ``blocks_per_stage`` width-preserving
+    residual blocks.  Shape-preserving — the pipeline's ``stage_fn``."""
+    for i in range(len(stage_params)):
+        x = _block_apply(stage_params[f"b{i}"], x, 1)
+    return x
+
+
+def pipeline_stem(params, images):
+    return jax.nn.relu(_gn(params["stem_gn"], _conv(images, params["stem"])))
+
+
+def pipeline_head(params, x):
+    return _head(params, x)
+
+
+def pipeline_forward_eval(params, images, policy: CompressionPolicy = NO_POLICY,
+                          compress: bool = True):
+    """Single-device sequential eval of the pipeline model, applying the
+    fw compressor between stages when ``compress`` (wire-equivalent: the
+    codec round-trip equals C(x) — see transport/codecs.py)."""
+    x = pipeline_stem(params, images)
+    n = params["stages"]["b0"]["conv1"].shape[0]
+    for s in range(n):
+        x = pipeline_stage_apply(
+            jax.tree.map(lambda a: a[s], params["stages"]), x)
+        if s < n - 1 and policy.num_boundaries > s:
+            x = boundary_eval(policy.at(s), x, compress)
+    return pipeline_head(params, x)

@@ -177,6 +177,37 @@ def forward_train(params, batch, cfg: ModelConfig,
     return _lm_logits(params, x, cfg), aux, new_fw
 
 
+def stage_stack_fn(cfg: ModelConfig):
+    """``stage_fn(gp_stack, x) -> x`` applying a stacked slice of layer
+    groups — the per-stage body for the REAL pipeline transport
+    (transport/pipeline.py).  MoE aux losses are dropped on this path."""
+    kinds = cfg.layer_kinds()
+
+    def stage_fn(gp_stack, x):
+        def scan_fn(x, gp):
+            for i, kind in enumerate(kinds):
+                x, _ = B.block_train(gp[f"b{i}"], x, cfg, kind)
+            return x, None
+        x, _ = jax.lax.scan(scan_fn, x, gp_stack, unroll=scan_unroll())
+        return x
+
+    return stage_fn
+
+
+def stack_layer_stages(params, num_stages: int):
+    """Reshape the (num_groups, ...) layer stack to (S, groups/S, ...) for
+    the pipeline's stage-stacked params."""
+    def reshape(a):
+        g = a.shape[0]
+        if g % num_stages:
+            raise ValueError(
+                f"num_groups={g} is not divisible by num_stages="
+                f"{num_stages}; pick a stage count that divides the "
+                f"layer-group count (--stages for launch/train)")
+        return a.reshape(num_stages, g // num_stages, *a.shape[1:])
+    return jax.tree.map(reshape, params["layers"])
+
+
 def hidden_lm_loss(params, x, labels, cfg: ModelConfig,
                    mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Chunked cross-entropy straight from hidden states: the (B,S,V)

@@ -45,8 +45,9 @@ class ExperimentResult:
                 f"on={self.acc_on:6.2f}%")
 
 
-def _cnn_eval(params, data, policy, compress, batch=100) -> tuple:
-    step = make_cnn_eval_step(policy, compress)
+def _cnn_eval(params, data, policy, compress, batch=100,
+              transport="simulated") -> tuple:
+    step = make_cnn_eval_step(policy, compress, transport=transport)
     accs, losses = [], []
     for x, y, _ in data.test_batches(batch):
         a, l = step(params, jnp.asarray(x), jnp.asarray(y))
@@ -60,23 +61,41 @@ def run_cnn_experiment(policy: CompressionPolicy, *, epochs: int = 8,
                        data: Optional[ImageClassData] = None,
                        warmup_params=None, name: str = "",
                        opt: Optional[OptimizerConfig] = None,
-                       seed: int = 0) -> ExperimentResult:
+                       seed: int = 0, transport: str = "simulated",
+                       mesh=None, stage_axis: str = "stage",
+                       pipeline_microbatches: Optional[int] = None
+                       ) -> ExperimentResult:
     """Train the ResNet with boundary compression; paper protocol.
 
     ``warmup_params``: start from these (uncompressed-baseline) weights —
     the paper's "warmup N" rows.
+
+    ``transport="pipeline"`` trains the homogeneous-stage CNN variant
+    through the REAL compressed ``shard_map``/``ppermute`` pipeline
+    (needs ``device_count >= policy.num_stages``; same boundary policy at
+    every cut; no feedback buffers).
     """
     data = data or ImageClassData()
     opt = opt or OptimizerConfig(kind="sgd", lr=0.02, momentum=0.9,
                                  weight_decay=5e-4, schedule="cosine",
                                  t_max=epochs * (data.num_train // batch))
-    params = warmup_params or cnn.init_params(
-        jax.random.PRNGKey(seed), width=width)
-    if warmup_params is not None:
-        params = jax.tree.map(jnp.asarray, warmup_params)
+    if transport == "pipeline":
+        if warmup_params is not None:
+            raise ValueError("warmup_params: homogeneous pipeline CNN has "
+                             "a different param structure")
+        params = cnn.init_pipeline_params(
+            jax.random.PRNGKey(seed), policy.num_stages, width=width)
+        bstates = []
+    else:
+        params = warmup_params or cnn.init_params(
+            jax.random.PRNGKey(seed), width=width)
+        if warmup_params is not None:
+            params = jax.tree.map(jnp.asarray, warmup_params)
+        bstates = _cnn_bstates(policy, data, batch, width)
     opt_state = init_opt_state(opt, params)
-    bstates = _cnn_bstates(policy, data, batch, width)
-    step = make_cnn_train_step(policy, opt)
+    step = make_cnn_train_step(policy, opt, transport=transport, mesh=mesh,
+                               stage_axis=stage_axis,
+                               pipeline_microbatches=pipeline_microbatches)
 
     t0 = time.time()
     curve = []
@@ -90,8 +109,10 @@ def run_cnn_experiment(policy: CompressionPolicy, *, epochs: int = 8,
         curve.append(float(np.mean(accs)))
     res = ExperimentResult(name=name or policy.boundary.name,
                            train_curve=curve, seconds=time.time() - t0)
-    res.acc_off, res.loss_off = _cnn_eval(params, data, policy, False, batch)
-    res.acc_on, res.loss_on = _cnn_eval(params, data, policy, True, batch)
+    res.acc_off, res.loss_off = _cnn_eval(params, data, policy, False, batch,
+                                          transport)
+    res.acc_on, res.loss_on = _cnn_eval(params, data, policy, True, batch,
+                                        transport)
     res.params = params
     return res
 
@@ -125,8 +146,17 @@ def run_lm_experiment(cfg: ModelConfig, policy: CompressionPolicy, *,
                       batch: int = 16, data: Optional[LMData] = None,
                       name: str = "",
                       opt: Optional[OptimizerConfig] = None,
-                      seed: int = 0) -> ExperimentResult:
-    """Fine-tune a (pre-trained) tiny LM with boundary compression."""
+                      seed: int = 0, transport: str = "simulated",
+                      mesh=None, stage_axis: str = "stage",
+                      pipeline_microbatches: Optional[int] = None
+                      ) -> ExperimentResult:
+    """Fine-tune a (pre-trained) tiny LM with boundary compression.
+
+    ``transport="pipeline"`` runs the layer stack as a real compressed
+    ``ppermute`` pipeline (same params/policy as simulated — the
+    transformer's layer groups are homogeneous, so the pre-trained weights
+    carry over unchanged).
+    """
     data = data or LMData()
     opt = opt or OptimizerConfig(kind="adamw", lr=3e-4, weight_decay=0.01,
                                  schedule="constant", grad_clip=1.0)
@@ -136,12 +166,16 @@ def run_lm_experiment(cfg: ModelConfig, policy: CompressionPolicy, *,
     opt_state = init_opt_state(opt, params)
     feat = (data.seq_len, cfg.d_model)
     bstates = []
-    for i in range(policy.num_boundaries):
-        from repro.core.boundary import init_boundary_state
-        bstates.append(init_boundary_state(
-            policy.at(i), feat, batch=batch, num_samples=data.num_train,
-            dtype=jnp.bfloat16))
-    step = make_lm_train_step(cfg, policy, opt, remat=False, donate=False)
+    if transport == "simulated":
+        for i in range(policy.num_boundaries):
+            from repro.core.boundary import init_boundary_state
+            bstates.append(init_boundary_state(
+                policy.at(i), feat, batch=batch, num_samples=data.num_train,
+                dtype=jnp.bfloat16))
+    step = make_lm_train_step(cfg, policy, opt, remat=False, donate=False,
+                              transport=transport, mesh=mesh,
+                              stage_axis=stage_axis,
+                              pipeline_microbatches=pipeline_microbatches)
 
     t0 = time.time()
     curve = []

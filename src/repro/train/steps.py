@@ -1,10 +1,18 @@
 """Train / eval steps wiring the paper's boundary compression into the
 optimizer loop.
 
-The boundary's backward-direction feedback buffers are updated inside
-backprop, so ``loss_fn`` takes them as a differentiated argument and the
-train step reads the update out of the gradient pytree (see
-core/boundary.py docstring).  Everything is jit-friendly and policy-static.
+Two transports (see repro/transport/):
+
+  * ``transport="simulated"`` — the paper's single-device boundary
+    (core/boundary.py): the bw feedback buffers are updated inside
+    backprop, so ``loss_fn`` takes them as a differentiated argument and
+    the train step reads the update out of the gradient pytree.
+  * ``transport="pipeline"``  — the REAL ``shard_map``/``ppermute``
+    pipeline (transport/pipeline.py): packed payloads cross the wire in
+    both directions; needs ``device_count >= policy.num_stages`` and a
+    uniform per-cut policy (SPMD), no feedback buffers yet.
+
+Everything is jit-friendly and policy-static.
 """
 from __future__ import annotations
 
@@ -19,6 +27,30 @@ from repro.core.policy import CompressionPolicy, NO_POLICY
 from repro.models import encdec, transformer
 from repro.models.transformer import lm_loss
 from repro.optim.optimizers import OptimizerConfig, apply_updates, init_opt_state
+
+
+def _uniform_boundary(policy: CompressionPolicy):
+    """The single per-cut policy the SPMD pipeline runs at every cut."""
+    from repro.core.policy import BoundaryPolicy
+    if policy.num_boundaries == 0:
+        return BoundaryPolicy()
+    bps = [policy.at(i) for i in range(policy.num_boundaries)]
+    if any(bp != bps[0] for bp in bps):
+        raise ValueError("the SPMD pipeline transport needs the same "
+                         "boundary policy at every cut (one program)")
+    return bps[0]
+
+
+def _pipeline_mesh(policy: CompressionPolicy, mesh, stage_axis: str):
+    if mesh is not None:
+        return mesh
+    s = policy.num_stages
+    if jax.device_count() < s:
+        raise RuntimeError(
+            f"pipeline transport needs >= {s} devices, have "
+            f"{jax.device_count()} — set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={s} before jax init")
+    return jax.make_mesh((s,), (stage_axis,))
 
 
 def _split_states(bstates):
@@ -38,7 +70,10 @@ def _merge_states(fw, bw):
 def make_lm_train_step(cfg, policy: CompressionPolicy,
                        opt: OptimizerConfig, aux_weight: float = 0.01,
                        remat: bool = True, donate: bool = True,
-                       jit: bool = True, microbatches: int = 1):
+                       jit: bool = True, microbatches: int = 1,
+                       transport: str = "simulated", mesh=None,
+                       stage_axis: str = "stage",
+                       pipeline_microbatches: Optional[int] = None):
     """Returns jit'd ``step(params, opt_state, bstates, batch, ids)
     -> (params, opt_state, bstates, metrics)``.
 
@@ -47,8 +82,19 @@ def make_lm_train_step(cfg, policy: CompressionPolicy,
     along B and scanned, bounding per-device activation memory at
     B/microbatches (feedback buffers and ids are sliced alongside, so the
     paper's per-example semantics are preserved).
+
+    ``transport="pipeline"`` trains through the real ``ppermute`` path:
+    embed + loss run replicated, the layer stack runs as a compressed
+    GPipe pipeline over ``mesh``'s ``stage_axis`` (``pipeline_microbatches``
+    defaults to the stage count).
     """
     mod = encdec if cfg.enc_dec else transformer
+    if transport == "pipeline":
+        return _make_pipeline_lm_train_step(
+            cfg, policy, opt, mesh=mesh, stage_axis=stage_axis,
+            microbatches=pipeline_microbatches, jit=jit)
+    if transport != "simulated":
+        raise ValueError(f"unknown transport {transport!r}")
 
     def loss_fn(params, bw_bufs, fw_bufs, batch, ids):
         bstates = _merge_states(fw_bufs, bw_bufs)
@@ -119,6 +165,44 @@ def make_lm_train_step(cfg, policy: CompressionPolicy,
     return jax.jit(step, donate_argnums=donate_argnums)
 
 
+def _make_pipeline_lm_train_step(cfg, policy: CompressionPolicy,
+                                 opt: OptimizerConfig, *, mesh=None,
+                                 stage_axis: str = "stage",
+                                 microbatches: Optional[int] = None,
+                                 jit: bool = True):
+    """LM training through the real compressed ``ppermute`` pipeline.
+
+    Same ``step(params, opt_state, bstates, batch, ids)`` signature as the
+    simulated path (``bstates`` must be empty — no feedback buffers).
+    MoE aux losses are not threaded through the pipeline (stage_fn is
+    single-tensor); fine for the dense smoke archs this path targets.
+    """
+    if cfg.enc_dec:
+        raise NotImplementedError("pipeline transport: decoder-only archs")
+    from repro.transport.pipeline import pipeline_apply
+    bp = _uniform_boundary(policy)
+    mesh = _pipeline_mesh(policy, mesh, stage_axis)
+    s_stages = policy.num_stages
+
+    def loss_fn(params, batch):
+        labels = jnp.roll(batch["tokens"], -1, axis=1)
+        mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+        x = transformer._embed_input(params, batch, cfg)
+        stack = transformer.stack_layer_stages(params, s_stages)
+        x = pipeline_apply(transformer.stage_stack_fn(cfg), stack, x,
+                           mesh, stage_axis, policy=bp,
+                           microbatches=microbatches)
+        return transformer.hidden_lm_loss(params, x, labels, cfg, mask)
+
+    def step(params, opt_state, bstates, batch, ids):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = apply_updates(opt, params, grads, opt_state)
+        metrics = {"loss": loss, "aux": jnp.float32(0.0), "total": loss}
+        return params, opt_state, bstates, metrics
+
+    return jax.jit(step) if jit else step
+
+
 def make_lm_eval_step(cfg, policy: CompressionPolicy, compress: bool):
     mod = encdec if cfg.enc_dec else transformer
 
@@ -142,8 +226,18 @@ def xent_loss(logits, labels):
     return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
 
 
-def make_cnn_train_step(policy: CompressionPolicy, opt: OptimizerConfig):
+def make_cnn_train_step(policy: CompressionPolicy, opt: OptimizerConfig,
+                        transport: str = "simulated", mesh=None,
+                        stage_axis: str = "stage",
+                        pipeline_microbatches: Optional[int] = None):
     from repro.models import cnn
+
+    if transport == "pipeline":
+        return _make_pipeline_cnn_train_step(
+            policy, opt, mesh=mesh, stage_axis=stage_axis,
+            microbatches=pipeline_microbatches)
+    if transport != "simulated":
+        raise ValueError(f"unknown transport {transport!r}")
 
     def loss_fn(params, bw_bufs, fw_bufs, images, labels, ids):
         bstates = _merge_states(fw_bufs, bw_bufs)
@@ -165,12 +259,51 @@ def make_cnn_train_step(policy: CompressionPolicy, opt: OptimizerConfig):
     return step
 
 
-def make_cnn_eval_step(policy: CompressionPolicy, compress: bool):
+def _make_pipeline_cnn_train_step(policy: CompressionPolicy,
+                                  opt: OptimizerConfig, *, mesh=None,
+                                  stage_axis: str = "stage",
+                                  microbatches: Optional[int] = None):
+    """CNN training through the real compressed ``ppermute`` pipeline.
+
+    Uses the homogeneous-stage CNN (models/cnn.py ``init_pipeline_params``);
+    stem + head run replicated, the S residual stages pipeline over the
+    mesh with packed fw/bw payloads.  Signature matches the simulated step
+    (``bstates`` passes through unchanged).
+    """
     from repro.models import cnn
+    from repro.transport.pipeline import pipeline_apply
+    bp = _uniform_boundary(policy)
+    mesh = _pipeline_mesh(policy, mesh, stage_axis)
+
+    def loss_fn(params, images, labels):
+        x = cnn.pipeline_stem(params, images)
+        x = pipeline_apply(cnn.pipeline_stage_apply, params["stages"], x,
+                           mesh, stage_axis, policy=bp,
+                           microbatches=microbatches)
+        logits = cnn.pipeline_head(params, x)
+        return xent_loss(logits, labels), logits
+
+    @jax.jit
+    def step(params, opt_state, bstates, images, labels, ids):
+        (loss, logits), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, images, labels)
+        params, opt_state = apply_updates(opt, params, grads, opt_state)
+        acc = (logits.argmax(-1) == labels).mean()
+        return params, opt_state, bstates, {"loss": loss, "acc": acc}
+
+    return step
+
+
+def make_cnn_eval_step(policy: CompressionPolicy, compress: bool,
+                       transport: str = "simulated"):
+    from repro.models import cnn
+
+    fwd = (cnn.pipeline_forward_eval if transport == "pipeline"
+           else cnn.forward_eval)
 
     @jax.jit
     def step(params, images, labels):
-        logits = cnn.forward_eval(params, images, policy, compress=compress)
+        logits = fwd(params, images, policy, compress=compress)
         return (logits.argmax(-1) == labels).mean(), xent_loss(logits, labels)
 
     return step

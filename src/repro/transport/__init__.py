@@ -1,0 +1,25 @@
+"""Unified differentiable transport layer for stage-boundary compression.
+
+``Transport.fw(x) / Transport.bw(g)`` is the one interface both boundary
+implementations realize; ``codecs`` is the shared wire-format registry.
+
+  codecs     — pack/unpack wire formats + registry (none/q8/q4/topk, ...)
+  base       — the Transport interface + wire-cost accounting
+  simulated  — single-device convergence-faithful transport (paper Sec. 2.1)
+  pipeline   — real shard_map/ppermute pipeline, differentiable (beyond-paper)
+"""
+from repro.transport.base import Transport
+from repro.transport.codecs import (WireCodec, codec_for, get_codec,
+                                    pack_payload, register_codec,
+                                    registered_codecs, unpack_payload,
+                                    wire_bytes)
+from repro.transport.pipeline import (PipelineTransport, pipeline_apply,
+                                      pipeline_forward)
+from repro.transport.simulated import SimulatedTransport, simulated_transport
+
+__all__ = [
+    "Transport", "WireCodec", "codec_for", "get_codec", "pack_payload",
+    "register_codec", "registered_codecs", "unpack_payload", "wire_bytes",
+    "PipelineTransport", "pipeline_apply", "pipeline_forward",
+    "SimulatedTransport", "simulated_transport",
+]

@@ -1,0 +1,272 @@
+"""Wire codecs: the byte formats a stage boundary actually sends.
+
+One codec = one wire scheme.  ``pack`` maps a boundary tensor ``(B, ...)``
+to a payload pytree of arrays (static structure, static shapes — required
+inside ``lax.scan`` / ``ppermute``); ``unpack`` inverts it given the
+original shape.  Both the simulated boundary (core/boundary.py) and the
+real ``ppermute`` pipeline (transport/pipeline.py) consume THIS registry,
+so bytes-on-wire accounting and compression semantics cannot drift apart.
+
+Registered schemes:
+
+  * ``none`` — raw bf16                            (2    bytes/elem)
+  * ``q8``   — uint8 codes + per-tensor min/scale  (1    byte/elem)
+  * ``q4``   — two 4-bit codes packed per uint8    (0.5  byte/elem)
+  * ``topk`` — (bf16 values, uint16/int32 indices) (k*(2+idx) bytes/elem)
+
+Quantization uses PER-TENSOR min/max scales so that
+``codec.roundtrip(x) == quantize_dequantize(x, bits)`` exactly — the
+simulated boundary's C(x) and the real wire round-trip are bit-identical
+(tested in tests/test_transport.py).  TopK indices are ``uint16`` whenever
+the flattened per-example feature dim fits in 16 bits, ``int32`` otherwise.
+
+On TPU the ``q8`` pack/unpack routes through the fused Pallas wire kernels
+(kernels/quantize.py, per-tile scales) when the flattened shape tiles into
+128-lane blocks; elsewhere the pure-jnp path is used.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressors import (Compressor, dequantize_kbit,
+                                    quantize_kbit, topk_scatter,
+                                    topk_values_indices)
+
+# Index dtype threshold: a flattened feature dim of up to 2**16 entries has
+# indices 0..65535, exactly the uint16 range.
+_U16_MAX_N = 1 << 16
+
+
+def _flat_n(shape) -> int:
+    n = 1
+    for s in shape[1:]:
+        n *= s
+    return n
+
+
+class WireCodec:
+    """Base class: a named wire format with a bytes-per-element cost model.
+
+    ``pack(x, k_frac)``   : (B, ...) tensor -> payload dict (static shapes).
+    ``unpack(payload, shape, dtype)`` : payload -> (B, ...) tensor.
+    ``wire_bytes_per_elem(n, elem_bytes, k_frac)`` : cost model, excluding
+    the per-tensor scale overhead (O(1) bytes).
+    """
+
+    name: str = "?"
+
+    def pack(self, x: jnp.ndarray, k_frac: float = 1.0) -> dict:
+        raise NotImplementedError
+
+    def unpack(self, payload: dict, shape, dtype=jnp.bfloat16) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def wire_bytes_per_elem(self, n: int, elem_bytes: int = 2,
+                            k_frac: float = 1.0) -> float:
+        raise NotImplementedError
+
+    def roundtrip(self, x: jnp.ndarray, k_frac: float = 1.0,
+                  dtype=None) -> jnp.ndarray:
+        """pack -> unpack: the dense C(x) equivalent of this wire format."""
+        return self.unpack(self.pack(x, k_frac), x.shape,
+                           dtype or x.dtype)
+
+
+class NoneCodec(WireCodec):
+    """Raw bf16 — the uncompressed baseline wire format."""
+
+    name = "none"
+
+    def pack(self, x, k_frac: float = 1.0):
+        return {"raw": x.astype(jnp.bfloat16)}
+
+    def unpack(self, payload, shape, dtype=jnp.bfloat16):
+        return payload["raw"].astype(dtype)
+
+    def wire_bytes_per_elem(self, n, elem_bytes: int = 2,
+                            k_frac: float = 1.0) -> float:
+        return float(elem_bytes)
+
+
+def _pallas_tiling(flat_shape) -> Optional[Tuple[int, int]]:
+    """(bm, bn) for the Pallas wire kernels, or None when no tiling fits."""
+    m, n = flat_shape
+    bn = next((c for c in (2048, 1024, 512, 256, 128) if n % c == 0), None)
+    if bn is None:
+        return None
+    bm = max(1, min(256, m))
+    while m % bm:
+        bm -= 1
+    return bm, bn
+
+
+class QuantCodec(WireCodec):
+    """Uniform k-bit min-max quantization; 4-bit packs two codes per byte.
+
+    Per-tensor scales (paper Sec. 2.2) on the jnp path; on TPU the 8-bit
+    variant uses the fused Pallas wire kernels with per-tile scales
+    (kernels/quantize.py — strictly more accurate at the same wire cost).
+    """
+
+    def __init__(self, bits: int):
+        assert bits in (4, 8), bits
+        self.bits = bits
+        self.name = f"q{bits}"
+
+    def pack(self, x, k_frac: float = 1.0):
+        b = x.shape[0]
+        flat = x.reshape(b, -1)
+        if self.bits == 8 and _use_pallas_wire():
+            tiling = _pallas_tiling(flat.shape)
+            if tiling is not None:
+                from repro.kernels.quantize import quantize_wire
+                codes, meta = quantize_wire(flat.astype(jnp.float32), 8,
+                                            block=tiling)
+                return {"codes": codes, "tile_meta": meta}
+        codes, mn, sc = quantize_kbit(flat.astype(jnp.float32), self.bits,
+                                      axis=None)
+        if self.bits == 4:
+            n = flat.shape[1]
+            if n % 2:                       # odd feature dim: pad one code
+                codes = jnp.pad(codes, ((0, 0), (0, 1)))
+            even = codes[:, 0::2]
+            odd = codes[:, 1::2]
+            packed = (even | (odd << 4)).astype(jnp.uint8)
+            return {"codes4": packed, "min": mn, "scale": sc}
+        return {"codes": codes, "min": mn, "scale": sc}
+
+    def unpack(self, payload, shape, dtype=jnp.bfloat16):
+        b = shape[0]
+        n = _flat_n(shape)
+        if "codes4" in payload:
+            packed = payload["codes4"]
+            even = packed & 0xF
+            odd = packed >> 4
+            codes = jnp.stack([even, odd], axis=-1).reshape(b, -1)[:, :n]
+            flat = dequantize_kbit(codes, payload["min"], payload["scale"])
+            return flat.reshape(shape).astype(dtype)
+        if "tile_meta" in payload:
+            from repro.kernels.quantize import dequantize_wire
+            codes, meta = payload["codes"], payload["tile_meta"]
+            gm, gn = meta.shape[0], meta.shape[1] // 2
+            block = (codes.shape[0] // gm, codes.shape[1] // gn)
+            flat = dequantize_wire(codes, meta, jnp.float32, block=block)
+            return flat.reshape(shape).astype(dtype)
+        flat = dequantize_kbit(payload["codes"], payload["min"],
+                               payload["scale"])
+        return flat.reshape(shape).astype(dtype)
+
+    def wire_bytes_per_elem(self, n, elem_bytes: int = 2,
+                            k_frac: float = 1.0) -> float:
+        return self.bits / 8.0
+
+
+class TopKCodec(WireCodec):
+    """(values, indices) of the largest-|.| k_frac entries per example.
+
+    Values ride as bf16; indices are uint16 when the flattened feature dim
+    fits in 16 bits (n <= 65536), int32 otherwise — for the paper's typical
+    boundary (seq x d_model bf16, 10% kept) that is 0.1*(2+2)=0.4 bytes per
+    original element instead of 0.6.
+    """
+
+    name = "topk"
+
+    def pack(self, x, k_frac: float = 0.1):
+        b = x.shape[0]
+        flat = x.reshape(b, -1)
+        vals, idx = topk_values_indices(flat, k_frac)
+        if flat.shape[1] <= _U16_MAX_N:
+            idx = idx.astype(jnp.uint16)
+        return {"vals": vals.astype(jnp.bfloat16), "idx": idx}
+
+    def unpack(self, payload, shape, dtype=jnp.bfloat16):
+        idx = payload["idx"].astype(jnp.int32)
+        return topk_scatter(payload["vals"].astype(jnp.float32), idx,
+                            shape, jnp.float32).astype(dtype)
+
+    def wire_bytes_per_elem(self, n, elem_bytes: int = 2,
+                            k_frac: float = 0.1) -> float:
+        idx_bytes = 2 if n <= _U16_MAX_N else 4
+        return k_frac * (elem_bytes + idx_bytes)
+
+
+def _use_pallas_wire() -> bool:
+    from repro.core.compressors import _use_pallas
+    return _use_pallas()
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, WireCodec] = {}
+
+
+def register_codec(codec: WireCodec) -> WireCodec:
+    """Add a codec to the registry (future schemes plug in here)."""
+    _REGISTRY[codec.name] = codec
+    return codec
+
+
+def get_codec(name: str) -> WireCodec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown wire scheme {name!r}; "
+                         f"registered: {sorted(_REGISTRY)}") from None
+
+
+def registered_codecs() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+register_codec(NoneCodec())
+register_codec(QuantCodec(8))
+register_codec(QuantCodec(4))
+register_codec(TopKCodec())
+
+
+def codec_for(comp: Compressor) -> WireCodec:
+    """The wire codec realizing a :class:`Compressor` on the network.
+
+    ``codec_for(c).roundtrip(x)`` equals ``c(x)`` on the jnp backend —
+    the invariant that makes the simulated boundary wire-faithful.
+    """
+    if comp.kind == "none":
+        return get_codec("none")
+    if comp.kind == "quant":
+        if comp.bits not in (4, 8):
+            raise ValueError(f"no wire codec for {comp.bits}-bit quantization"
+                             " (registered: q4, q8)")
+        return get_codec(f"q{comp.bits}")
+    if comp.kind == "topk":
+        return get_codec("topk")
+    raise ValueError(f"no wire codec for compressor kind {comp.kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Functional wrappers (the original core/pipeline.py API)
+# ---------------------------------------------------------------------------
+
+def pack_payload(x: jnp.ndarray, scheme: str, k_frac: float = 0.1) -> dict:
+    """x: (B, ...) stage output -> wire pytree (static shapes)."""
+    return get_codec(scheme).pack(x, k_frac)
+
+
+def unpack_payload(payload: dict, shape, dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Inverse of :func:`pack_payload` (dispatches on payload keys)."""
+    for key, name in (("raw", "none"), ("codes4", "q4"), ("vals", "topk"),
+                      ("codes", "q8"), ("tile_meta", "q8")):
+        if key in payload:
+            return get_codec(name).unpack(payload, shape, dtype)
+    raise ValueError(list(payload))
+
+
+def wire_bytes(payload) -> int:
+    """Actual bytes-on-wire of a packed payload."""
+    return sum(p.size * p.dtype.itemsize for p in jax.tree.leaves(payload))

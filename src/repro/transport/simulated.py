@@ -1,0 +1,61 @@
+"""Single-device simulated transport (the paper's Sec. 2.1 setup).
+
+Implements the :class:`Transport` interface with NO collective: the
+"wire" is a dense compress-decompress round-trip inside one program,
+convergence-equivalent to the distributed system.  The dense C(x) equals
+the registered wire codec's ``roundtrip`` on the jnp backend (tested), so
+simulated training and the real packed ``ppermute`` pipeline
+(transport/pipeline.py) see the SAME numbers at the boundary.
+
+core/boundary.py wraps this class in ``jax.custom_vjp`` so the backward
+direction (``bw``) runs on the activation-gradient during backprop.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressors import apply_mask, topk_mask
+from repro.core.feedback import feedback_message
+from repro.core.policy import BoundaryPolicy
+from repro.transport.base import Transport
+
+
+class SimulatedTransport(Transport):
+    """Feedback-wrapped compressors at one cut, no real communication."""
+
+    def __init__(self, policy: BoundaryPolicy):
+        self.policy = policy
+
+    def fw(self, x, fw_buf=None, ids=None) -> Tuple[jnp.ndarray, Any, Any]:
+        """Forward message + new fw buffer + ctx (TopK mask for reuse)."""
+        p = self.policy
+        m, new_fw = feedback_message(p.feedback, p.fw, x, fw_buf, ids)
+        mask = None
+        if p.reuse_indices:
+            # Mask of what the forward direction actually kept.  With plain
+            # TopK this is the TopK mask of x itself (paper Table 5).
+            src = x if p.feedback == "none" else m
+            mask = topk_mask(src, p.fw.k_frac)
+        return m, new_fw, mask
+
+    def bw(self, g, bw_buf=None, ctx=None) -> Tuple[jnp.ndarray, Any]:
+        """Backward gradient message + new bw buffer.
+
+        ``ctx`` is the forward TopK mask when ``reuse_indices`` is set
+        (paper Table 5: the gradient reuses the forward indices, so no
+        fresh TopK — and no index bytes — in the backward direction).
+        """
+        p = self.policy
+        if p.reuse_indices:
+            return apply_mask(g, ctx), jnp.zeros_like(bw_buf)
+        return feedback_message(p.bw_feedback, p.bw, g, bw_buf)
+
+
+@lru_cache(maxsize=None)
+def simulated_transport(policy: BoundaryPolicy) -> SimulatedTransport:
+    """Cached per-policy instance (policies are frozen/hashable)."""
+    return SimulatedTransport(policy)

@@ -1,0 +1,39 @@
+"""Shared test helpers.
+
+``hypothesis_or_stubs`` lets the suite run (with property tests skipped)
+when ``hypothesis`` is not installed — the tier-1 command must never die at
+collection time on an optional dev dependency.  Install the full dev set
+with ``pip install -r requirements-dev.txt`` to run the property tests too.
+"""
+import pytest
+
+
+def hypothesis_or_stubs():
+    """Returns ``(given, settings, st)`` — real hypothesis if available,
+    otherwise stubs that mark each property test as skipped.
+
+    Usage (top of a test module)::
+
+        from conftest import hypothesis_or_stubs
+        given, settings, st = hypothesis_or_stubs()
+    """
+    try:
+        from hypothesis import given, settings, strategies as st
+        return given, settings, st
+    except ImportError:
+        pass
+
+    def given(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class _StrategyStubs:
+        """Stand-in for ``hypothesis.strategies``: every attribute is a
+        callable returning None (the stubbed ``given`` never runs them)."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    return given, settings, _StrategyStubs()

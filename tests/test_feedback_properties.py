@@ -4,7 +4,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from hypothesis import given, settings, strategies as st
+from conftest import hypothesis_or_stubs
+given, settings, st = hypothesis_or_stubs()
 
 from repro.core.compressors import topk, quant
 from repro.core.feedback import (aqsgd_message, ef21_message, ef_message,

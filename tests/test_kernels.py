@@ -8,7 +8,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import hypothesis_or_stubs
+given, settings, st = hypothesis_or_stubs()
 
 from repro.kernels import ref
 from repro.kernels.ops import (quant_dequant_op, quant_dequant_st,

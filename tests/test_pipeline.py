@@ -16,7 +16,8 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from hypothesis import given, settings, strategies as st
+from conftest import hypothesis_or_stubs
+given, settings, st = hypothesis_or_stubs()
 
 from repro.core.pipeline import pack_payload, unpack_payload, wire_bytes
 

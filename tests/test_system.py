@@ -8,7 +8,8 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from hypothesis import given, settings, strategies as st
+from conftest import hypothesis_or_stubs
+given, settings, st = hypothesis_or_stubs()
 
 from repro.checkpoint import io as ckpt
 from repro.core.policy import (BoundaryPolicy, CompressionPolicy, NO_POLICY,
