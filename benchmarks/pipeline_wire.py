@@ -58,6 +58,63 @@ def payload_bytes(scheme: str, feat_shape, k_frac: float):
     return fw, bw, fw_model * feat_shape[0], bw_model * feat_shape[0]
 
 
+def feedback_payload_bytes(feedback: str, bw_feedback: str, feat_shape,
+                           k_frac: float, num_samples: int = 64):
+    """(fw, bw, fw_model, bw_model) bytes for one hop under an
+    error-feedback mode (TopK compressors, paper Tables 3-4).
+
+    The compensated message costs the SAME wire bytes as the plain
+    compressor — EF packs x+e (one payload), EF-mixed packs two half-K
+    payloads, EF21/AQ-SGD pack the delta — which is asserted against the
+    feedback-free codec cost model below.
+    """
+    from repro.core.policy import BoundaryPolicy
+    from repro.core.compressors import topk
+    from repro.transport.codecs import wire_bytes
+    from repro.transport.pipeline import PipelineTransport
+    import jax.numpy as jnp
+    policy = BoundaryPolicy(fw=topk(k_frac), bw=topk(k_frac),
+                            feedback=feedback, bw_feedback=bw_feedback)
+    transport = PipelineTransport(policy, "stage", 4)
+    x = jax.ShapeDtypeStruct(feat_shape, jnp.bfloat16)
+    fw = wire_bytes(transport.fw_payload_struct(x))
+    bw = wire_bytes(transport.bw_payload_struct(x))
+    n = 1
+    for s in feat_shape[1:]:
+        n *= s
+    fw_model, bw_model = transport.wire_bytes_per_example(n, elem_bytes=2)
+    return fw, bw, fw_model * feat_shape[0], bw_model * feat_shape[0]
+
+
+def measure_feedback(modes=(("none", "none"), ("ef", "ef"),
+                            ("ef21", "ef21"), ("efmixed", "efmixed"),
+                            ("aqsgd", "none")), *, batch=8, seq=256,
+                     d_model=256, stages=4, k_frac=0.10,
+                     check: bool = True):
+    """Per-feedback-mode fw+bw payload bytes (AQ-SGD message vs plain
+    TopK), asserted against the codec cost models: error compensation is
+    wire-cost-free."""
+    mb_feat = (batch // stages, seq, d_model)
+    reports = []
+    for fb, bw_fb in modes:
+        fw, bw, fw_model, bw_model = feedback_payload_bytes(
+            fb, bw_fb, mb_feat, k_frac)
+        if check:
+            # slack: per-tensor scales + the max(1, round(k/2 * n))
+            # rounding of EF-mixed's two half-K payloads
+            slack = 64 + 0.005 * max(fw_model, 1)
+            assert abs(fw - fw_model) <= slack, (fb, fw, fw_model)
+            slack = 64 + 0.005 * max(bw_model, 1)
+            assert abs(bw - bw_model) <= slack, (bw_fb, bw, bw_model)
+        reports.append({
+            "feedback": fb, "bw_feedback": bw_fb, "scheme": "topk",
+            "k_frac": k_frac, "fw_payload_bytes": fw,
+            "bw_payload_bytes": bw, "fw_model_bytes": round(fw_model),
+            "bw_model_bytes": round(bw_model),
+        })
+    return reports
+
+
 def measure(schemes=("none", "q8", "q4", "topk", "topk_reuse"), *, stages=4,
             batch=8, seq=256, d_model=256, d_ff=1024, k_frac=0.10,
             check: bool = True):
@@ -133,11 +190,14 @@ def main():
     reports = measure()
     for r in reports:
         print(json.dumps(r))
+    fb_reports = measure_feedback()
+    for r in fb_reports:
+        print(json.dumps(r))
     os.makedirs(os.path.join(os.path.dirname(__file__), "results"),
                 exist_ok=True)
     with open(os.path.join(os.path.dirname(__file__), "results",
                            "pipeline_wire.json"), "w") as f:
-        json.dump(reports, f, indent=1)
+        json.dump({"schemes": reports, "feedback": fb_reports}, f, indent=1)
 
 
 if __name__ == "__main__":

@@ -25,6 +25,20 @@ import jax.numpy as jnp
 from repro.core.compressors import Compressor, topk_compress
 
 
+# Modes whose wire message is a compressed DELTA against the buffer
+# (m = buf + C(x - buf)): the receiver cannot reconstruct m from the payload
+# alone, so a real transport keeps a receiver-side MIRROR of the sender's
+# buffer (Wang et al. AQ-SGD Sec. 3: both machines store the activation
+# buffer).  EF / EF-mixed messages decode directly from the payload.
+DELTA_CODED_MODES = ("ef21", "aqsgd")
+
+
+def needs_recv_mirror(mode: str) -> bool:
+    """True when a real (packed-wire) transport of this mode must keep a
+    receiver-side replica of the compensation buffer."""
+    return mode in DELTA_CODED_MODES
+
+
 def ef_message(comp: Compressor, x: jnp.ndarray, e: jnp.ndarray
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     xe = x + e

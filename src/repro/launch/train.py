@@ -30,8 +30,8 @@ import jax.numpy as jnp
 from repro.checkpoint import io as ckpt_io
 from repro.configs.registry import ARCHS, get
 from repro.core.boundary import init_boundary_state
-from repro.core.policy import (CompressionPolicy, NO_POLICY, ef_policy,
-                               quant_policy, topk_policy)
+from repro.core.policy import (CompressionPolicy, NO_POLICY, aqsgd_policy,
+                               ef_policy, quant_policy, topk_policy)
 from repro.models import encdec, transformer
 from repro.models.config import active_param_count, param_count
 from repro.optim.optimizers import OptimizerConfig, init_opt_state
@@ -50,7 +50,8 @@ POLICIES = {
 }
 
 
-def synthetic_stream(cfg, batch: int, seq: int, seed: int = 0):
+def synthetic_stream(cfg, batch: int, seq: int, seed: int = 0,
+                     num_samples: int = 4096):
     """Deterministic order-2 Markov token stream (see data/synthetic.py),
     vocab-clipped to the model's vocabulary."""
     rng = np.random.RandomState(seed)
@@ -65,7 +66,9 @@ def synthetic_stream(cfg, batch: int, seq: int, seed: int = 0):
         for t in range(2, seq):
             out[:, t] = succ[out[:, t - 2], out[:, t - 1],
                              r.randint(0, 4, batch)]
-        ids = np.arange(batch, dtype=np.int32) + batch * step
+        # ids cycle over a bounded "dataset" so AQ-SGD's per-example
+        # buffers revisit rows (the premise of the compensation)
+        ids = (np.arange(batch, dtype=np.int32) + batch * step) % num_samples
         yield out, ids
         step += 1
 
@@ -97,6 +100,16 @@ def main(argv=None) -> int:
                          "compressed shard_map/ppermute pipeline")
     ap.add_argument("--stages", type=int, default=None,
                     help="pipeline stage count (default: policy's)")
+    ap.add_argument("--feedback", default="none",
+                    choices=("none", "ef", "ef21", "efmixed", "aqsgd"),
+                    help="error-feedback mode (paper Tables 3-4); replaces "
+                         "the boundary with TopK(--k-frac) + this "
+                         "compensation, on either transport")
+    ap.add_argument("--k-frac", type=float, default=0.1,
+                    help="TopK kept fraction for --feedback boundaries")
+    ap.add_argument("--num-samples", type=int, default=4096,
+                    help="AQ-SGD per-example buffer size; the synthetic "
+                         "stream's ids cycle modulo this")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--no-remat", action="store_true")
@@ -110,6 +123,11 @@ def main(argv=None) -> int:
     cfg = get(args.arch, smoke=args.smoke)
     seq = min(args.seq, cfg.max_seq)
     policy = POLICIES[args.policy]()
+    if args.feedback != "none":
+        bp = (aqsgd_policy(args.k_frac) if args.feedback == "aqsgd"
+              else ef_policy(args.k_frac, args.feedback))
+        stages = policy.num_stages if policy.num_boundaries else 4
+        policy = CompressionPolicy(num_stages=stages, boundary=bp)
     if args.stages:
         policy = dataclasses.replace(policy, num_stages=args.stages)
     if (args.transport == "pipeline"
@@ -122,7 +140,8 @@ def main(argv=None) -> int:
     n_params = param_count(cfg)
     print(f"# arch={cfg.arch_id} params~{n_params/1e6:.1f}M "
           f"(active {active_param_count(cfg)/1e6:.1f}M) "
-          f"B={args.batch} S={seq} policy={args.policy} "
+          f"B={args.batch} S={seq} policy={args.policy}"
+          f"{'' if args.feedback == 'none' else '+' + args.feedback} "
           f"devices={jax.device_count()}", flush=True)
 
     opt = OptimizerConfig(kind="adamw", lr=args.lr, weight_decay=0.01,
@@ -130,10 +149,19 @@ def main(argv=None) -> int:
     params = (encdec if cfg.enc_dec else transformer).init_params(
         jax.random.PRNGKey(args.seed), cfg)
     opt_state = init_opt_state(opt, params)
-    bstates = ([] if args.transport == "pipeline" else
-               [init_boundary_state(policy.at(i), (seq, cfg.d_model),
-                                    batch=args.batch, dtype=jnp.bfloat16)
-                for i in range(policy.num_boundaries)])
+    if args.transport == "pipeline":
+        from repro.train.loop import _pipeline_bstates
+        bstates = _pipeline_bstates(
+            policy, (seq, cfg.d_model), batch=args.batch,
+            microbatches=(args.microbatches if args.microbatches > 1
+                          else None),
+            num_samples=args.num_samples, dtype=jnp.bfloat16)
+    else:
+        bstates = [init_boundary_state(policy.at(i), (seq, cfg.d_model),
+                                       batch=args.batch,
+                                       num_samples=args.num_samples,
+                                       dtype=jnp.bfloat16)
+                   for i in range(policy.num_boundaries)]
     if args.transport == "pipeline":
         # --microbatches means GPipe microbatches here (not grad
         # accumulation); remat is not applied inside the pipeline scan.
@@ -148,7 +176,8 @@ def main(argv=None) -> int:
                                      args.microbatches
                                      if args.microbatches > 1 else None))
 
-    stream = synthetic_stream(cfg, args.batch, seq, args.seed)
+    stream = synthetic_stream(cfg, args.batch, seq, args.seed,
+                              num_samples=args.num_samples)
     metrics, t0 = [], time.time()
     tokens_per_step = args.batch * seq
     for step in range(1, args.steps + 1):

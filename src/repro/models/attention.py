@@ -87,7 +87,11 @@ def _causal_mask(s: int, window: Optional[int], positions) -> jnp.ndarray:
 
 def attn_train(params, x, *, num_heads, num_kv_heads, head_dim,
                pos_embed="rope", rope_theta=10_000.0, window=None,
-               attn_softcap=None, positions=None):
+               attn_softcap=None, positions=None, pad_mask=None):
+    """``pad_mask``: optional (B, S) bool, True = real token.  Pad keys are
+    masked out of every query's context (left-padded serving batches —
+    RoPE logits depend only on position differences, so masking alone
+    makes a padded prompt exactly equal to the same prompt unpadded)."""
     b, s, d = x.shape
     if positions is None:
         positions = jnp.arange(s)
@@ -96,6 +100,8 @@ def attn_train(params, x, *, num_heads, num_kv_heads, head_dim,
         q = apply_rope(q, positions[None], rope_theta)
         k = apply_rope(k, positions[None], rope_theta)
     mask = _causal_mask(s, window, positions)
+    if pad_mask is not None:
+        mask = mask & pad_mask[:, None, :]          # (B, S, S)
     out = _sdpa(q, k, v, mask, attn_softcap)
     out = out.reshape(b, s, num_heads * head_dim)
     return out @ params["wo"]
@@ -115,11 +121,13 @@ def init_cache(batch: int, cache_len: int, num_kv_heads: int, head_dim: int,
 
 def attn_decode(params, x1, cache, pos, *, num_heads, num_kv_heads, head_dim,
                 pos_embed="rope", rope_theta=10_000.0, window=None,
-                attn_softcap=None):
+                attn_softcap=None, pad_len=None):
     """One-token decode.  x1: (B, 1, d); pos: scalar int32 (current index).
 
     ``window`` set => the cache is a ring buffer of length ``cache["k"].shape[1]
     == window`` and slots hold RoPE-rotated keys at their absolute positions.
+    ``pad_len``: optional (B,) int32 — cache slots holding absolute
+    positions < pad_len[b] are left-padding and masked out.
     """
     b = x1.shape[0]
     c = cache["k"].shape[1]
@@ -136,12 +144,20 @@ def attn_decode(params, x1, cache, pos, *, num_heads, num_kv_heads, head_dim,
     idx = jnp.arange(c)
     if window is None:
         valid = idx <= pos                              # absolute layout
+        abs_pos = idx
     else:
         # ring layout: slot i holds absolute position p_i where
         # p_i = pos - ((slot - i) mod c); valid iff p_i > pos - window
         age = (slot - idx) % c
         valid = age < jnp.minimum(pos + 1, c)
-    mask = valid[None, None, None, :]                   # (1,1,1,C) -> bcast
+        abs_pos = pos - age
+    if pad_len is None:
+        mask = valid[None, None, None, :]               # (1,1,1,C) -> bcast
+    else:
+        # (B,1,1,1,C): batch must align with dim 0 of the (b,kv,g,s,t)
+        # logits, not broadcast against kv heads
+        mask = (valid[None] & (abs_pos[None] >= pad_len[:, None])
+                )[:, None, None, None, :]
     out = _sdpa(q, ck, cv, mask, attn_softcap)
     out = out.reshape(b, 1, num_heads * head_dim)
     return out @ params["wo"], {"k": ck, "v": cv}
@@ -149,8 +165,9 @@ def attn_decode(params, x1, cache, pos, *, num_heads, num_kv_heads, head_dim,
 
 def attn_prefill(params, x, *, cache_len, num_heads, num_kv_heads, head_dim,
                  pos_embed="rope", rope_theta=10_000.0, window=None,
-                 attn_softcap=None):
-    """Full-sequence forward that also fills the cache (inference prefill)."""
+                 attn_softcap=None, pad_mask=None):
+    """Full-sequence forward that also fills the cache (inference prefill).
+    ``pad_mask``: optional (B, S) bool, True = real token (see attn_train)."""
     b, s, d = x.shape
     positions = jnp.arange(s)
     q, k, v = _project_qkv(params, x, num_heads, num_kv_heads, head_dim)
@@ -158,6 +175,8 @@ def attn_prefill(params, x, *, cache_len, num_heads, num_kv_heads, head_dim,
         q = apply_rope(q, positions[None], rope_theta)
         k = apply_rope(k, positions[None], rope_theta)
     mask = _causal_mask(s, window, positions)
+    if pad_mask is not None:
+        mask = mask & pad_mask[:, None, :]              # (B, S, S)
     out = _sdpa(q, k, v, mask, attn_softcap)
     out = out.reshape(b, s, num_heads * head_dim)
     ring = window is not None

@@ -73,12 +73,13 @@ def _maybe_post(p, name, h, cfg):
     return norm_apply(p[name], h, cfg.norm) if cfg.post_norm else h
 
 
-def _ffn(p, h, cfg: ModelConfig, moe: bool):
+def _ffn(p, h, cfg: ModelConfig, moe: bool, dropless: bool = False):
     if moe:
         return moe_apply(p["moe"], h, num_experts=cfg.num_experts,
                          top_k=cfg.top_k, mlp_kind=cfg.mlp,
                          capacity_factor=cfg.capacity_factor,
-                         dispatch_quant=cfg.moe_dispatch_quant)
+                         dispatch_quant=cfg.moe_dispatch_quant,
+                         dropless=dropless)
     return mlp_apply(p["mlp"], h, cfg.mlp), jnp.float32(0.0)
 
 
@@ -92,20 +93,26 @@ def _attn_block_train(p, x, cfg: ModelConfig, kind: str):
     return x, aux
 
 
-def _attn_block_prefill(p, x, cfg: ModelConfig, kind: str, cache_len: int):
+def _attn_block_prefill(p, x, cfg: ModelConfig, kind: str, cache_len: int,
+                        pad_mask=None):
     moe = kind == "moe"
     h, cache = A.attn_prefill(p["attn"], norm_apply(p["ln1"], x, cfg.norm),
-                              cache_len=cache_len, **_attn_kwargs(cfg, kind))
+                              cache_len=cache_len, pad_mask=pad_mask,
+                              **_attn_kwargs(cfg, kind))
     x = x + _maybe_post(p, "pn1", h, cfg)
-    h, aux = _ffn(p, norm_apply(p["ln2"], x, cfg.norm), cfg, moe)
+    # inference: dropless routing so decode continuations match prefill
+    h, aux = _ffn(p, norm_apply(p["ln2"], x, cfg.norm), cfg, moe,
+                  dropless=True)
     x = x + _maybe_post(p, "pn2", h, cfg)
     return x, cache, aux
 
 
-def _attn_block_decode(p, x1, cache, pos, cfg: ModelConfig, kind: str):
+def _attn_block_decode(p, x1, cache, pos, cfg: ModelConfig, kind: str,
+                       pad_len=None):
     moe = kind == "moe"
     h, cache = A.attn_decode(p["attn"], norm_apply(p["ln1"], x1, cfg.norm),
-                             cache, pos, **_attn_kwargs(cfg, kind))
+                             cache, pos, pad_len=pad_len,
+                             **_attn_kwargs(cfg, kind))
     x1 = x1 + _maybe_post(p, "pn1", h, cfg)
     h, _ = _ffn(p, norm_apply(p["ln2"], x1, cfg.norm), cfg, moe)
     x1 = x1 + _maybe_post(p, "pn2", h, cfg)
@@ -393,9 +400,13 @@ def block_train(p, x, cfg: ModelConfig, kind: str):
     raise ValueError(kind)
 
 
-def block_prefill(p, x, cfg: ModelConfig, kind: str, cache_len: int):
+def block_prefill(p, x, cfg: ModelConfig, kind: str, cache_len: int,
+                  pad_mask=None):
+    """``pad_mask``: (B, S) bool, True = real token — masks left-padding
+    out of attention (serving).  Recurrent kinds (rwkv, hymba's SSM) carry
+    state through pad positions and do not support left-padding."""
     if kind in ATTN_KINDS:
-        return _attn_block_prefill(p, x, cfg, kind, cache_len)
+        return _attn_block_prefill(p, x, cfg, kind, cache_len, pad_mask)
     if kind == "rwkv":
         y, cache = _rwkv_block_train(p, x, cfg)
         return y, cache, jnp.float32(0.0)
@@ -404,6 +415,7 @@ def block_prefill(p, x, cfg: ModelConfig, kind: str, cache_len: int):
         state = _hymba_block_cache(cfg, kind, b, 0, x.dtype)["ssm"]
         xn = norm_apply(p["ln1"], x, cfg.norm)
         h_attn, kv = A.attn_prefill(p["attn"], xn, cache_len=cache_len,
+                                    pad_mask=pad_mask,
                                     **_attn_kwargs(cfg, "dense"))
         h_ssm, new_s = _hymba_ssm_train(p["ssm"], xn, cfg, state)
         h = 0.5 * (norm_apply(p["ln_attn_out"], h_attn, cfg.norm)
@@ -414,9 +426,12 @@ def block_prefill(p, x, cfg: ModelConfig, kind: str, cache_len: int):
     raise ValueError(kind)
 
 
-def block_decode(p, x1, cache, pos, cfg: ModelConfig, kind: str):
+def block_decode(p, x1, cache, pos, cfg: ModelConfig, kind: str,
+                 pad_len=None):
+    """``pad_len``: (B,) int32 — cache slots before it are left-padding
+    (attention kinds only; see block_prefill)."""
     if kind in ATTN_KINDS:
-        return _attn_block_decode(p, x1, cache, pos, cfg, kind)
+        return _attn_block_decode(p, x1, cache, pos, cfg, kind, pad_len)
     if kind == "rwkv":
         return _rwkv_block_decode(p, x1, cache, pos, cfg)
     if kind == "hymba":

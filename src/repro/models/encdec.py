@@ -191,8 +191,14 @@ def init_caches(cfg: ModelConfig, batch: int, cache_len: int, dtype=DTYPE):
 
 def prefill(params, batch, cfg: ModelConfig,
             policy: CompressionPolicy = NO_POLICY, cache_len: int = 0,
-            compress: bool = True):
-    """Returns (last-token logits, (self_caches, memory))."""
+            compress: bool = True, pad_len=None):
+    """Returns (last-token logits, (self_caches, memory)).
+
+    ``pad_len`` is accepted for engine-API uniformity but must be zeros:
+    the whisper decoder uses ABSOLUTE learned positions, so left-padding
+    shifts real tokens to wrong position embeddings — a mask cannot fix
+    that.  Serve enc-dec prompts start-aligned (equal decoder lengths).
+    """
     memory = encode(params, batch["enc_embeds"], cfg)
     if policy.num_boundaries and compress:
         memory = policy.at(0).fw(memory)
@@ -221,7 +227,8 @@ def prefill(params, batch, cfg: ModelConfig,
 
 
 def decode_step(params, token, state, pos, cfg: ModelConfig,
-                policy: CompressionPolicy = NO_POLICY, compress: bool = True):
+                policy: CompressionPolicy = NO_POLICY, compress: bool = True,
+                pad_len=None):
     caches, memory = state
     x = params["embed"][token][:, None].astype(DTYPE) + \
         jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, 0).astype(DTYPE)

@@ -109,12 +109,65 @@ def _quant_dispatch(t: jnp.ndarray, spec) -> jnp.ndarray:
     return qdq(t)
 
 
+def _moe_apply_dense(params, x: jnp.ndarray, *, num_experts: int,
+                     top_k: int, mlp_kind: str, dispatch_quant: bool = False
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dropless dense routing (inference paths).
+
+    The grouped capacity heuristic is LENGTH-DEPENDENT: C = ceil(cf * g *
+    k / E) and the group composition both change with the total token
+    count, so the same token can be dropped in one forward and routed in
+    another — decode (t = B tokens per group, C collapses to 1) drifted
+    from prefill, and a 30-token prefill drops different tokens than a
+    32-token one.  Inference therefore routes densely: every expert runs
+    on every token, combined with the (renormalized) top-k gates —
+    identical expert math to the capacity path for kept tokens, and
+    nothing is ever dropped.  (A production server would realize the same
+    dropless semantics with grouped GEMMs instead of the dense E-way
+    fan-out; capacity routing stays on the training path, where bounded
+    expert work is the point.)
+    """
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    logits = xt.astype(jnp.float32) @ params["router"]           # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)            # (T,k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+    combine = jnp.sum(
+        jax.nn.one_hot(gate_idx, num_experts, dtype=jnp.float32)
+        * gate_vals[..., None], axis=1)                          # (T,E)
+    top1 = jax.nn.one_hot(gate_idx[..., 0], num_experts, dtype=jnp.float32)
+    aux = num_experts * jnp.sum(probs.mean(0) * top1.mean(0))
+    ex_in = xt
+    if dispatch_quant:
+        # same wire semantics as _quant_dispatch: the token vectors the
+        # experts receive are int8-quantized along d (straight-through)
+        from repro.core.compressors import quantize_dequantize
+        qdq = quantize_dequantize(ex_in.astype(jnp.float32), 8,
+                                  axis=(1,)).astype(ex_in.dtype)
+        ex_in = ex_in + jax.lax.stop_gradient(qdq - ex_in)
+    ex_out = jax.vmap(lambda p: mlp_apply(p, ex_in, mlp_kind))(
+        params["experts"])                                       # (E,T,d)
+    y = jnp.einsum("etd,te->td", ex_out, combine.astype(ex_out.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if "shared" in params:
+        y = y + mlp_apply(params["shared"], xt, mlp_kind)
+    return y.reshape(b, s, d), aux
+
+
 def moe_apply(params, x: jnp.ndarray, *, num_experts: int, top_k: int,
               mlp_kind: str, capacity_factor: float = 1.25,
-              group_size: int = GROUP_SIZE,
-              dispatch_quant: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """x: (B, S, d).  Returns (y, aux_loss)."""
+              group_size: int = GROUP_SIZE, dispatch_quant: bool = False,
+              dropless: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d).  Returns (y, aux_loss).  ``dropless`` (inference)
+    switches to dense routing — see :func:`_moe_apply_dense`; single-token
+    decode always routes densely (capacity degenerates to C=1 there)."""
     b, s, d = x.shape
+    if dropless or s == 1:
+        return _moe_apply_dense(params, x, num_experts=num_experts,
+                                top_k=top_k, mlp_kind=mlp_kind,
+                                dispatch_quant=dispatch_quant)
     t = b * s
     g = min(group_size, t)
     while t % g:

@@ -266,19 +266,25 @@ def init_caches(cfg: ModelConfig, batch: int, cache_len: int, dtype=DTYPE):
 
 def prefill(params, batch, cfg: ModelConfig,
             policy: CompressionPolicy = NO_POLICY, cache_len: int = 0,
-            compress: bool = True):
+            compress: bool = True, pad_len=None):
+    """``pad_len``: optional (B,) int32 — the first pad_len[b] positions
+    are left-padding (mixed-length serving batches) and are masked out of
+    attention in every layer."""
     kinds = cfg.layer_kinds()
     x = _embed_input(params, batch, cfg)
     cache_len = cache_len or x.shape[1]
     segs = segment_bounds(cfg.num_groups, policy.num_stages)
     cache_segs = []
+    pad_mask = None
+    if pad_len is not None:
+        pad_mask = jnp.arange(x.shape[1])[None, :] >= pad_len[:, None]
 
     for si, (g0, g1) in enumerate(segs):
         def scan_fn(x, gp):
             cs = {}
             for i, kind in enumerate(kinds):
                 x, c, _ = B.block_prefill(gp[f"b{i}"], x, cfg, kind,
-                                          cache_len)
+                                          cache_len, pad_mask=pad_mask)
                 cs[f"b{i}"] = c
             return constrain(x, "batch", "model", None), cs
         x, cseg = jax.lax.scan(scan_fn, x,
@@ -292,8 +298,10 @@ def prefill(params, batch, cfg: ModelConfig,
 
 
 def decode_step(params, token, caches, pos, cfg: ModelConfig,
-                policy: CompressionPolicy = NO_POLICY, compress: bool = True):
-    """token: (B,) int32; pos: scalar int32.  Returns (logits, new_caches)."""
+                policy: CompressionPolicy = NO_POLICY, compress: bool = True,
+                pad_len=None):
+    """token: (B,) int32; pos: scalar int32.  Returns (logits, new_caches).
+    ``pad_len``: optional (B,) int32 left-padding lengths (see prefill)."""
     kinds = cfg.layer_kinds()
     x = params["embed"][token][:, None].astype(DTYPE)
     x = constrain(x, "batch", None, "model")
@@ -305,7 +313,7 @@ def decode_step(params, token, caches, pos, cfg: ModelConfig,
             new_c = {}
             for i, kind in enumerate(kinds):
                 x, c = B.block_decode(gp[f"b{i}"], x, cache[f"b{i}"], pos,
-                                      cfg, kind)
+                                      cfg, kind, pad_len=pad_len)
                 new_c[f"b{i}"] = c
             return constrain(x, "batch", "model", None), new_c
         x, nseg = jax.lax.scan(scan_fn, x, (_slice_groups(params["layers"], g0, g1),

@@ -45,13 +45,14 @@ class ServeEngine:
         self.mod = encdec if cfg.enc_dec else transformer
         cfg_, pol_, mod_ = cfg, policy, self.mod
 
-        def _prefill(params, batch):
+        def _prefill(params, batch, pad_len):
             return mod_.prefill(params, batch, cfg_, pol_,
-                                cache_len=max_seq, compress=compress)
+                                cache_len=max_seq, compress=compress,
+                                pad_len=pad_len)
 
-        def _decode(params, token, caches, pos):
+        def _decode(params, token, caches, pos, pad_len):
             return mod_.decode_step(params, token, caches, pos, cfg_, pol_,
-                                    compress=compress)
+                                    compress=compress, pad_len=pad_len)
 
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode, donate_argnums=(2,))
@@ -70,21 +71,37 @@ class ServeEngine:
 
     def generate(self, requests: List[Request]) -> List[Request]:
         assert len(requests) <= self.max_batch
-        # left-align prompts to a common length (static batch)
+        # left-align prompts to a common length (static batch); the
+        # per-request pad length masks the padding out of attention, so a
+        # short prompt generates exactly what it would alone (RoPE archs —
+        # recurrent rwkv/hymba state and abs-position enc-dec decoders do
+        # not support left-padding; serve those with equal-length prompts)
         plen = max(len(r.prompt) for r in requests)
         b = len(requests)
+        if plen != min(len(r.prompt) for r in requests):
+            unsupported = ({"rwkv", "hymba"} & set(self.cfg.layer_kinds())
+                           or ({"enc-dec"} if self.cfg.enc_dec else set()))
+            if unsupported:
+                raise ValueError(
+                    f"mixed-length prompts need left-padding, which "
+                    f"{sorted(unsupported)} layers cannot mask (recurrent "
+                    f"state / absolute positions carry the padding) — "
+                    f"batch equal-length prompts for this arch")
         prompts = np.zeros((b, plen), np.int32)
         for i, r in enumerate(requests):
             prompts[i, plen - len(r.prompt):] = r.prompt  # left-pad
+        pad_len = jnp.asarray(
+            [plen - len(r.prompt) for r in requests], jnp.int32)
         steps = max(r.max_new_tokens for r in requests)
 
-        logits, caches = self._prefill(self.params, self._make_batch(prompts))
+        logits, caches = self._prefill(self.params, self._make_batch(prompts),
+                                       pad_len)
         token = jnp.argmax(logits[:, -1] if logits.ndim == 3 else logits,
                            axis=-1).astype(jnp.int32)
         outs = [token]
         for i in range(steps - 1):
             logits, caches = self._decode(self.params, token, caches,
-                                          jnp.int32(plen + i))
+                                          jnp.int32(plen + i), pad_len)
             token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             outs.append(token)
         gen = np.stack([np.asarray(t) for t in outs], axis=1)   # (B, steps)

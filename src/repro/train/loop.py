@@ -73,7 +73,8 @@ def run_cnn_experiment(policy: CompressionPolicy, *, epochs: int = 8,
     ``transport="pipeline"`` trains the homogeneous-stage CNN variant
     through the REAL compressed ``shard_map``/``ppermute`` pipeline
     (needs ``device_count >= policy.num_stages``; same boundary policy at
-    every cut; no feedback buffers).
+    every cut; EF/EF21/EF-mixed/AQ-SGD feedback buffers ride the pipeline
+    scan carry).
     """
     data = data or ImageClassData()
     opt = opt or OptimizerConfig(kind="sgd", lr=0.02, momentum=0.9,
@@ -85,7 +86,10 @@ def run_cnn_experiment(policy: CompressionPolicy, *, epochs: int = 8,
                              "a different param structure")
         params = cnn.init_pipeline_params(
             jax.random.PRNGKey(seed), policy.num_stages, width=width)
-        bstates = []
+        bstates = _pipeline_bstates(policy, (data.image, data.image, width),
+                                    batch=batch,
+                                    microbatches=pipeline_microbatches,
+                                    num_samples=data.num_train)
     else:
         params = warmup_params or cnn.init_params(
             jax.random.PRNGKey(seed), width=width)
@@ -115,6 +119,22 @@ def run_cnn_experiment(policy: CompressionPolicy, *, epochs: int = 8,
                                         transport)
     res.params = params
     return res
+
+
+def _pipeline_bstates(policy: CompressionPolicy, feat_shape, *, batch: int,
+                      microbatches=None, num_samples: int = 0,
+                      dtype=jnp.float32):
+    """Feedback state for the real pipeline transport: the stage-stacked
+    ``init_feedback_state`` pytree, or ``[]`` for feedback-free policies
+    (pass-through, PR-1 behaviour)."""
+    from repro.core.policy import BoundaryPolicy
+    bp = policy.at(0) if policy.num_boundaries else BoundaryPolicy()
+    if not (bp.needs_fw_buffer or bp.needs_bw_buffer):
+        return []
+    from repro.transport.pipeline import init_feedback_state
+    return init_feedback_state(bp, feat_shape, num_stages=policy.num_stages,
+                               batch=batch, microbatches=microbatches,
+                               num_samples=num_samples, dtype=dtype)
 
 
 def _cnn_bstates(policy: CompressionPolicy, data: ImageClassData,
@@ -172,6 +192,11 @@ def run_lm_experiment(cfg: ModelConfig, policy: CompressionPolicy, *,
             bstates.append(init_boundary_state(
                 policy.at(i), feat, batch=batch, num_samples=data.num_train,
                 dtype=jnp.bfloat16))
+    elif transport == "pipeline":
+        bstates = _pipeline_bstates(policy, feat, batch=batch,
+                                    microbatches=pipeline_microbatches,
+                                    num_samples=data.num_train,
+                                    dtype=jnp.bfloat16)
     step = make_lm_train_step(cfg, policy, opt, remat=False, donate=False,
                               transport=transport, mesh=mesh,
                               stage_axis=stage_axis,

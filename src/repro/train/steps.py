@@ -10,7 +10,12 @@ Two transports (see repro/transport/):
   * ``transport="pipeline"``  — the REAL ``shard_map``/``ppermute``
     pipeline (transport/pipeline.py): packed payloads cross the wire in
     both directions; needs ``device_count >= policy.num_stages`` and a
-    uniform per-cut policy (SPMD), no feedback buffers yet.
+    uniform per-cut policy (SPMD).  Feedback buffers (EF/EF21/EF-mixed/
+    AQ-SGD) ride the pipeline scan carry: ``bstates`` is the
+    ``init_feedback_state`` pytree ({"fw","bw"} of stage-stacked buffers)
+    instead of the simulated per-boundary list; bw buffer updates are read
+    out of the gradient w.r.t. ``bstates["bw"]``, mirroring the simulated
+    path's cotangent trick.
 
 Everything is jit-friendly and policy-static.
 """
@@ -173,7 +178,10 @@ def _make_pipeline_lm_train_step(cfg, policy: CompressionPolicy,
     """LM training through the real compressed ``ppermute`` pipeline.
 
     Same ``step(params, opt_state, bstates, batch, ids)`` signature as the
-    simulated path (``bstates`` must be empty — no feedback buffers).
+    simulated path.  With a feedback-free policy ``bstates`` passes through
+    (``[]``); with EF/EF21/EF-mixed/AQ-SGD it is the
+    :func:`repro.transport.pipeline.init_feedback_state` pytree and the
+    step returns the updated buffers (bw side read from the gradient).
     MoE aux losses are not threaded through the pipeline (stage_fn is
     single-tensor); fine for the dense smoke archs this path targets.
     """
@@ -183,23 +191,43 @@ def _make_pipeline_lm_train_step(cfg, policy: CompressionPolicy,
     bp = _uniform_boundary(policy)
     mesh = _pipeline_mesh(policy, mesh, stage_axis)
     s_stages = policy.num_stages
+    needs_state = bp.needs_fw_buffer or bp.needs_bw_buffer
 
-    def loss_fn(params, batch):
+    def forward(params, batch, fw_state, bw_state, ids):
         labels = jnp.roll(batch["tokens"], -1, axis=1)
         mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
         x = transformer._embed_input(params, batch, cfg)
         stack = transformer.stack_layer_stages(params, s_stages)
-        x = pipeline_apply(transformer.stage_stack_fn(cfg), stack, x,
-                           mesh, stage_axis, policy=bp,
-                           microbatches=microbatches)
-        return transformer.hidden_lm_loss(params, x, labels, cfg, mask)
+        new_fw = None
+        if needs_state:
+            x, new_fw = pipeline_apply(
+                transformer.stage_stack_fn(cfg), stack, x, mesh, stage_axis,
+                policy=bp, microbatches=microbatches,
+                fw_state=fw_state, bw_state=bw_state, ids=ids)
+        else:
+            x = pipeline_apply(transformer.stage_stack_fn(cfg), stack, x,
+                               mesh, stage_axis, policy=bp,
+                               microbatches=microbatches)
+        loss = transformer.hidden_lm_loss(params, x, labels, cfg, mask)
+        return loss, new_fw
 
     def step(params, opt_state, bstates, batch, ids):
-        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        loss, grads = jax.value_and_grad(
+            lambda p: forward(p, batch, None, None, ids)[0])(params)
         params, opt_state = apply_updates(opt, params, grads, opt_state)
         metrics = {"loss": loss, "aux": jnp.float32(0.0), "total": loss}
         return params, opt_state, bstates, metrics
 
+    def step_feedback(params, opt_state, bstates, batch, ids):
+        def loss_fn(params, bw_state):
+            return forward(params, batch, bstates["fw"], bw_state, ids)
+        (loss, new_fw), (grads, new_bw) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(params, bstates["bw"])
+        params, opt_state = apply_updates(opt, params, grads, opt_state)
+        metrics = {"loss": loss, "aux": jnp.float32(0.0), "total": loss}
+        return params, opt_state, {"fw": new_fw, "bw": new_bw}, metrics
+
+    step = step_feedback if needs_state else step
     return jax.jit(step) if jit else step
 
 
@@ -267,31 +295,53 @@ def _make_pipeline_cnn_train_step(policy: CompressionPolicy,
 
     Uses the homogeneous-stage CNN (models/cnn.py ``init_pipeline_params``);
     stem + head run replicated, the S residual stages pipeline over the
-    mesh with packed fw/bw payloads.  Signature matches the simulated step
-    (``bstates`` passes through unchanged).
+    mesh with packed fw/bw payloads.  Signature matches the simulated step;
+    with a feedback policy ``bstates`` is the ``init_feedback_state``
+    pytree and comes back updated (bw side via the gradient), otherwise it
+    passes through unchanged.
     """
     from repro.models import cnn
     from repro.transport.pipeline import pipeline_apply
     bp = _uniform_boundary(policy)
     mesh = _pipeline_mesh(policy, mesh, stage_axis)
+    needs_state = bp.needs_fw_buffer or bp.needs_bw_buffer
 
-    def loss_fn(params, images, labels):
+    def forward(params, images, labels, fw_state, bw_state, ids):
         x = cnn.pipeline_stem(params, images)
-        x = pipeline_apply(cnn.pipeline_stage_apply, params["stages"], x,
-                           mesh, stage_axis, policy=bp,
-                           microbatches=microbatches)
+        new_fw = None
+        if needs_state:
+            x, new_fw = pipeline_apply(
+                cnn.pipeline_stage_apply, params["stages"], x, mesh,
+                stage_axis, policy=bp, microbatches=microbatches,
+                fw_state=fw_state, bw_state=bw_state, ids=ids)
+        else:
+            x = pipeline_apply(cnn.pipeline_stage_apply, params["stages"],
+                               x, mesh, stage_axis, policy=bp,
+                               microbatches=microbatches)
         logits = cnn.pipeline_head(params, x)
-        return xent_loss(logits, labels), logits
+        return xent_loss(logits, labels), (logits, new_fw)
 
     @jax.jit
     def step(params, opt_state, bstates, images, labels, ids):
-        (loss, logits), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params, images, labels)
+        (loss, (logits, _)), grads = jax.value_and_grad(
+            forward, has_aux=True)(params, images, labels, None, None, ids)
         params, opt_state = apply_updates(opt, params, grads, opt_state)
         acc = (logits.argmax(-1) == labels).mean()
         return params, opt_state, bstates, {"loss": loss, "acc": acc}
 
-    return step
+    @jax.jit
+    def step_feedback(params, opt_state, bstates, images, labels, ids):
+        def loss_fn(params, bw_state):
+            return forward(params, images, labels, bstates["fw"],
+                           bw_state, ids)
+        (loss, (logits, new_fw)), (grads, new_bw) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(params, bstates["bw"])
+        params, opt_state = apply_updates(opt, params, grads, opt_state)
+        acc = (logits.argmax(-1) == labels).mean()
+        return (params, opt_state, {"fw": new_fw, "bw": new_bw},
+                {"loss": loss, "acc": acc})
+
+    return step_feedback if needs_state else step
 
 
 def make_cnn_eval_step(policy: CompressionPolicy, compress: bool,

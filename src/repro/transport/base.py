@@ -18,10 +18,18 @@ Two implementations exist:
     ``jax.custom_vjp`` boundary in core/boundary.py.
   * :class:`repro.transport.pipeline.PipelineTransport` — the real
     ``shard_map``/``ppermute`` path: packed payloads on the wire in both
-    directions (transport/pipeline.py).
+    directions, with per-stage feedback buffers threaded through the
+    pipeline scan (``fw_hop``/``bw_hop`` extend fw/bw with the buffer
+    slice bookkeeping; delta-coded modes add receiver-side mirrors).
 
 Both consume the same wire-codec registry (transport/codecs.py), so the
 simulated C(x) and the real packed bytes round-trip identically.
+
+Error feedback is wire-cost-free: EF packs the compensated tensor
+``x + e`` (same codec, same bytes), EF-mixed packs two half-K payloads
+(k/2 + k/2 = k), and EF21/AQ-SGD pack the delta ``x - buf`` (again one
+codec payload) — so :meth:`Transport.wire_bytes_per_example` holds for
+every feedback mode, which the pipeline_wire benchmark asserts.
 """
 from __future__ import annotations
 

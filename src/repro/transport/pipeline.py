@@ -15,20 +15,47 @@ residuals on both ends of the wire: the backward payload is VALUES ONLY
 (gathered with the receiver's indices, scattered with the sender's), saving
 the index bytes in the gradient direction.
 
+Error feedback (paper Sec. 2.4/2.5, Tables 3-4) over the real wire:
+per-stage EF / EF21 / EF-mixed / AQ-SGD buffers ride the ``lax.scan`` carry,
+sharded ``P(axis)`` so each stage owns the buffer of the cut it sends
+across.  What gets packed onto the wire is the COMPENSATED message:
+
+  * EF        — payload = pack(x + e); the receiver's unpack IS m = C(x+e).
+  * EF-mixed  — two half-K payloads, pack(x, K/2) + pack(e, K/2).
+  * EF21      — payload = pack(x - g), a compressed delta; the receiver
+                reconstructs m = g + unpack(payload) from a local MIRROR of
+                the sender's buffer (both start at zero and apply identical
+                deltas, so they never diverge — the AQ-SGD system design).
+  * AQ-SGD    — per-example EF21: the ``(num_samples, *feat)`` buffer is
+                gathered/scattered by the example ids of the microbatch in
+                flight, on both the sender and the receiver mirror.
+
+The backward hop symmetrically applies ``bw_feedback`` to the gradient
+payload.  Backward-direction buffers are only touched during backprop, so
+their updates are delivered AS THE COTANGENT of the ``bw_state`` argument —
+the same functional-state trick core/boundary.py uses (take ``grad`` w.r.t.
+``bw_state`` in the train step and read the new buffers out of the gradient
+pytree).  Buffer rows are per-example, hence disjoint across microbatches:
+each scan step contributes exactly one (masked) slice and the cotangent sum
+over steps reassembles the full updated buffer.
+
 Scheduling: at step t every device runs its stage; stage 0 injects
 microbatch t, others consume the hop buffer; the last stage emits
 microbatch t-(S-1).  Gradients retrace exactly the valid pipeline paths
-(the fill/drain garbage paths get zero cotangent through the masks).
+(the fill/drain garbage paths get zero cotangent through the masks; the
+wrap-around cut S-1 -> 0 carries garbage that both directions explicitly
+ignore).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Optional, Tuple
+from typing import Callable, Optional
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.feedback import needs_recv_mirror
 from repro.core.policy import (BoundaryPolicy, quant_policy, topk_policy)
 from repro.transport.base import Transport
 from repro.transport.codecs import codec_for
@@ -61,19 +88,91 @@ def _policy_for_scheme(scheme: str, k_frac: float) -> BoundaryPolicy:
                          f"known: {sorted(SCHEME_POLICIES)}") from None
 
 
+def _zeros_f0(x):
+    """float0 cotangent for an integer/bool primal (custom_vjp contract)."""
+    return np.zeros(jnp.shape(x), dtype=jax.dtypes.float0)
+
+
+# ---------------------------------------------------------------------------
+# Feedback state
+# ---------------------------------------------------------------------------
+
+def init_feedback_state(policy: BoundaryPolicy, feat_shape, *,
+                        num_stages: int, batch: int,
+                        microbatches: Optional[int] = None,
+                        num_samples: int = 0, dtype=jnp.float32):
+    """Per-stage feedback buffers for the real pipeline.
+
+    Returns ``{"fw": {"send", "recv"}, "bw": {"send", "recv"}}`` of arrays
+    with leading dim ``num_stages`` (shard ``P(axis)``: stage s's slice is
+    the buffer of cut s for ``send`` / the mirror of cut s-1 for ``recv``).
+
+    Global modes (ef/ef21/efmixed) keep ``(S, mb, B/mb, *feat)`` — the
+    simulated ``(B, *feat)`` buffer split by microbatch; AQ-SGD keeps
+    ``(S, num_samples, *feat)``.  Unused buffers are size-0 placeholders
+    ``(S, 0)`` so the pytree structure is policy-stable.
+    """
+    mb = microbatches or num_stages
+    if batch % mb:
+        raise ValueError(f"batch {batch} not divisible by microbatches {mb}")
+    mbsz = batch // mb
+
+    def buf(mode: str, mirror: bool):
+        if mode == "none" or (mirror and not needs_recv_mirror(mode)):
+            return jnp.zeros((num_stages, 0), dtype)
+        if mode == "aqsgd":
+            assert num_samples > 0, "aqsgd needs the dataset size"
+            return jnp.zeros((num_stages, num_samples, *feat_shape), dtype)
+        return jnp.zeros((num_stages, mb, mbsz, *feat_shape), dtype)
+
+    return {"fw": {"send": buf(policy.feedback, False),
+                   "recv": buf(policy.feedback, True)},
+            "bw": {"send": buf(policy.bw_feedback, False),
+                   "recv": buf(policy.bw_feedback, True)}}
+
+
+def _empty_state(num_stages: int, dtype):
+    z = jnp.zeros((num_stages, 0), dtype)
+    return {"send": z, "recv": z}
+
+
+def _gather(buf, jc, ids, mode):
+    """One microbatch's slice of a feedback buffer (size-0 passes through)."""
+    if mode == "none":
+        return buf
+    return buf[ids] if mode == "aqsgd" else buf[jc]
+
+
+def _scatter(buf, jc, ids, mode, new_slice, old_slice, valid):
+    """Masked functional update of one microbatch's slice."""
+    if mode == "none":
+        return buf
+    upd = jnp.where(valid, new_slice, old_slice).astype(buf.dtype)
+    return buf.at[ids].set(upd) if mode == "aqsgd" else buf.at[jc].set(upd)
+
+
 class PipelineTransport(Transport):
     """The real wire at one stage cut: packed ``ppermute`` both directions.
 
     ``fw``/``bw`` are SPMD collectives — they must run inside a
     ``shard_map`` over ``axis``.  :func:`pipeline_apply` composes them into
-    a ``custom_vjp`` so the backward hop runs during backprop.
+    a ``custom_vjp`` so the backward hop runs during backprop, with
+    feedback buffers threaded through the scan carry (fw) and through
+    cotangents (bw).
     """
 
     def __init__(self, policy: BoundaryPolicy, axis: str, num_stages: int):
-        if policy.feedback != "none" or policy.bw_feedback != "none":
+        if policy.reuse_indices and (policy.feedback != "none"
+                                     or policy.bw_feedback != "none"):
             raise NotImplementedError(
-                "feedback buffers are not threaded through the real "
-                "pipeline yet — use the simulated transport for EF/AQ-SGD")
+                "reuse_indices composes the backward payload from the "
+                "forward TopK indices, which no longer index the message "
+                "under feedback compensation — run one or the other on the "
+                "real pipeline")
+        for mode, comp, nm in ((policy.feedback, policy.fw, "fw"),
+                               (policy.bw_feedback, policy.bw, "bw")):
+            if mode == "efmixed" and comp.kind != "topk":
+                raise ValueError(f"EF-mixed needs a TopK {nm} compressor")
         self.policy = policy
         self.axis = axis
         self.num_stages = num_stages
@@ -82,9 +181,98 @@ class PipelineTransport(Transport):
         self.perm_fw = [(i, (i + 1) % num_stages) for i in range(num_stages)]
         self.perm_bw = [(i, (i - 1) % num_stages) for i in range(num_stages)]
 
+    # -- wire framing (shared with benchmarks: eval_shape-able) -------------
+
+    def pack_fw_message(self, y, buf_slice):
+        """Compensated forward payload + the local decode m (what the
+        receiver will see) + the new send-buffer slice."""
+        p, kf = self.policy, self.policy.fw.k_frac
+        pack = self._fw_codec.pack
+        unpack = lambda pl: self._fw_codec.unpack(pl, y.shape, y.dtype)
+        if p.feedback == "none":
+            payload = pack(y, kf)
+            return payload, None, buf_slice
+        if p.feedback == "ef":
+            xe = y + buf_slice.astype(y.dtype)
+            payload = pack(xe, kf)
+            m = unpack(payload)
+            return payload, m, xe - m
+        if p.feedback == "efmixed":
+            e = buf_slice.astype(y.dtype)
+            payload = {"x": pack(y, kf / 2.0), "e": pack(e, kf / 2.0)}
+            m = (self._fw_codec.unpack(payload["x"], y.shape, y.dtype)
+                 + self._fw_codec.unpack(payload["e"], y.shape, y.dtype))
+            return payload, m, (y + e) - m
+        # delta-coded: ef21 / aqsgd — wire carries C(x - buf) only
+        b = buf_slice.astype(y.dtype)
+        payload = pack(y - b, kf)
+        return payload, None, b + unpack(payload)
+
+    def unpack_fw_message(self, moved, shape, dtype, recv_slice):
+        """Receiver-side decode of :meth:`pack_fw_message`'s payload.
+        Returns (message, new recv-mirror slice or None)."""
+        p = self.policy
+        if p.feedback in ("none", "ef"):
+            return self._fw_codec.unpack(moved, shape, dtype), None
+        if p.feedback == "efmixed":
+            return (self._fw_codec.unpack(moved["x"], shape, dtype)
+                    + self._fw_codec.unpack(moved["e"], shape, dtype)), None
+        m = recv_slice.astype(dtype) + self._fw_codec.unpack(moved, shape,
+                                                             dtype)
+        return m, m
+
+    def pack_bw_message(self, g, buf_slice):
+        """Compensated gradient payload + new bw send-buffer slice."""
+        p, kb = self.policy, self.policy.bw.k_frac
+        pack = self._bw_codec.pack
+        unpack = lambda pl: self._bw_codec.unpack(pl, g.shape, g.dtype)
+        if p.bw_feedback == "none":
+            return pack(g, kb), buf_slice
+        if p.bw_feedback == "ef":
+            ge = g + buf_slice.astype(g.dtype)
+            payload = pack(ge, kb)
+            return payload, ge - unpack(payload)
+        if p.bw_feedback == "efmixed":
+            e = buf_slice.astype(g.dtype)
+            payload = {"g": pack(g, kb / 2.0), "e": pack(e, kb / 2.0)}
+            m = (self._bw_codec.unpack(payload["g"], g.shape, g.dtype)
+                 + self._bw_codec.unpack(payload["e"], g.shape, g.dtype))
+            return payload, (g + e) - m
+        b = buf_slice.astype(g.dtype)                       # ef21
+        payload = pack(g - b, kb)
+        return payload, b + unpack(payload)
+
+    def unpack_bw_message(self, moved, shape, dtype, recv_slice):
+        p = self.policy
+        if p.bw_feedback in ("none", "ef"):
+            return self._bw_codec.unpack(moved, shape, dtype), None
+        if p.bw_feedback == "efmixed":
+            return (self._bw_codec.unpack(moved["g"], shape, dtype)
+                    + self._bw_codec.unpack(moved["e"], shape, dtype)), None
+        m = recv_slice.astype(dtype) + self._bw_codec.unpack(moved, shape,
+                                                             dtype)
+        return m, m
+
+    def fw_payload_struct(self, x_struct, buf_struct=None):
+        """eval_shape of the forward wire payload (feedback framing incl.)
+        — the benchmark's exact bytes-on-wire source."""
+        buf = buf_struct or jax.ShapeDtypeStruct(x_struct.shape,
+                                                 x_struct.dtype)
+        return jax.eval_shape(lambda y, b: self.pack_fw_message(y, b)[0],
+                              x_struct, buf)
+
+    def bw_payload_struct(self, g_struct, buf_struct=None):
+        buf = buf_struct or jax.ShapeDtypeStruct(g_struct.shape,
+                                                 g_struct.dtype)
+        return jax.eval_shape(lambda g, b: self.pack_bw_message(g, b)[0],
+                              g_struct, buf)
+
+    # -- SPMD hops ----------------------------------------------------------
+
     def fw(self, x, fw_buf=None, ids=None):
-        """Pack x, ppermute to the next stage, unpack.  ``ctx`` carries the
-        (sent, received) TopK indices when ``reuse_indices`` is set."""
+        """Plain (feedback-free) hop: pack x, ppermute to the next stage,
+        unpack.  ``ctx`` carries the (sent, received) TopK indices when
+        ``reuse_indices`` is set."""
         payload = self._fw_codec.pack(x, self.policy.fw.k_frac)
         moved = jax.lax.ppermute(payload, self.axis, self.perm_fw)
         out = self._fw_codec.unpack(moved, x.shape, x.dtype)
@@ -93,9 +281,37 @@ class PipelineTransport(Transport):
             ctx = (payload["idx"], moved["idx"])
         return out, fw_buf, ctx
 
+    def fw_hop(self, y, fw_st, ids_s, ids_r, jc_s, jc_r, vs, vr):
+        """Feedback-compensated forward hop inside the pipeline scan.
+
+        ``fw_st``: this stage's local {"send","recv"} buffers; ``jc_*`` the
+        clipped microbatch indices (send / receive side of this step);
+        ``ids_*`` the AQ-SGD example ids; ``vs``/``vr`` validity masks.
+        """
+        mode = self.policy.feedback
+        if mode == "none":
+            out, _, ctx = self.fw(y)
+            return out, fw_st, ctx
+        send_sl = _gather(fw_st["send"], jc_s, ids_s, mode)
+        payload, _, new_send = self.pack_fw_message(y, send_sl)
+        moved = jax.lax.ppermute(payload, self.axis, self.perm_fw)
+        recv_sl = (_gather(fw_st["recv"], jc_r, ids_r, mode)
+                   if needs_recv_mirror(mode) else None)
+        out, new_recv = self.unpack_fw_message(moved, y.shape, y.dtype,
+                                               recv_sl)
+        new_st = {
+            "send": _scatter(fw_st["send"], jc_s, ids_s, mode,
+                             new_send, send_sl, vs),
+            "recv": (fw_st["recv"] if new_recv is None else
+                     _scatter(fw_st["recv"], jc_r, ids_r, mode,
+                              new_recv, recv_sl, vr)),
+        }
+        return out, new_st, None
+
     def bw(self, g, bw_buf=None, ctx=None):
-        """Pack the activation-gradient, ppermute to the PREVIOUS stage,
-        unpack.  With ``reuse_indices`` the payload is values only."""
+        """Plain backward hop: pack the activation-gradient, ppermute to
+        the PREVIOUS stage, unpack.  With ``reuse_indices`` the payload is
+        values only."""
         if self.policy.reuse_indices:
             idx_sent, idx_recv = ctx
             b = g.shape[0]
@@ -113,23 +329,82 @@ class PipelineTransport(Transport):
         moved = jax.lax.ppermute(payload, self.axis, self.perm_bw)
         return self._bw_codec.unpack(moved, g.shape, g.dtype), bw_buf
 
-    def make_send(self) -> Callable:
-        """``send(y)``: the differentiable wire hop (fw forward, bw on the
-        cotangent), for use inside the pipeline body."""
+    def bw_hop(self, g, bw_send_sl, bw_recv_sl, vs, vr, ctx):
+        """Feedback-compensated backward hop (runs inside ``send``'s VJP).
+
+        Device d sends the gradient of its RECEIVED activation (cut d-1,
+        microbatch ``jc_r``, buffer slice ``bw_send_sl``) and receives the
+        gradient of its SENT activation (cut d, microbatch ``jc_s``, mirror
+        slice ``bw_recv_sl``).  Returns ``(g_y, new_send_sl, new_recv_sl)``
+        where the slice updates are masked cotangent CONTRIBUTIONS (zero on
+        invalid steps — the per-step sum reassembles the buffer).
+        """
+        mode = self.policy.bw_feedback
+        if mode == "none" or self.policy.reuse_indices:
+            g_y, _ = self.bw(g, ctx=ctx)
+            new_send = jnp.zeros_like(bw_send_sl)
+            new_recv = jnp.zeros_like(bw_recv_sl)
+        else:
+            payload, new_send = self.pack_bw_message(g, bw_send_sl)
+            moved = jax.lax.ppermute(payload, self.axis, self.perm_bw)
+            g_y, new_recv = self.unpack_bw_message(
+                moved, g.shape, g.dtype,
+                bw_recv_sl if needs_recv_mirror(mode) else None)
+            new_send = jnp.where(vr, new_send, 0.0).astype(bw_send_sl.dtype)
+            new_recv = (jnp.zeros_like(bw_recv_sl) if new_recv is None else
+                        jnp.where(vs, new_recv, 0.0).astype(
+                            bw_recv_sl.dtype))
+        # Without feedback a garbage-path payload is C(0) = 0 and dies on
+        # its own; a COMPENSATED message is C(0 + e) != 0 — the buffer
+        # leaks onto fill/drain paths and the ring wrap-around.  Mask the
+        # received gradient by this stage's own step validity (``vs``: the
+        # microbatch whose gradient lands here) and by not being the last
+        # stage (whose real cotangent comes from the loss through ``outs``,
+        # never from the ring).
+        is_last = jax.lax.axis_index(self.axis) == self.num_stages - 1
+        g_y = jnp.where(vs & ~is_last, g_y, jnp.zeros_like(g_y))
+        return g_y, new_send, new_recv
+
+    def make_send(self, fw_template=None) -> Callable:
+        """``send(y, fw_st, ...)``: the differentiable wire hop — fw hop in
+        the primal (returning the updated fw buffers for the scan carry),
+        bw hop on the cotangent (returning the bw buffer updates as the
+        cotangents of the ``bw_*_sl`` slice arguments).
+
+        ``fw_template``: ShapeDtypeStructs of the local fw state (for zero
+        cotangents) — default size-0 (no feedback).
+        """
         transport = self
+        fw_template = fw_template or {
+            "send": jax.ShapeDtypeStruct((0,), jnp.float32),
+            "recv": jax.ShapeDtypeStruct((0,), jnp.float32)}
 
         @jax.custom_vjp
-        def send(y):
-            out, _, _ = transport.fw(y)
-            return out
+        def send(y, fw_st, bw_send_sl, bw_recv_sl, ids_s, ids_r,
+                 jc_s, jc_r, vs, vr):
+            out, new_fw, _ = transport.fw_hop(y, fw_st, ids_s, ids_r,
+                                              jc_s, jc_r, vs, vr)
+            return out, new_fw
 
-        def send_fwd(y):
-            out, _, ctx = transport.fw(y)
-            return out, ctx
+        def send_fwd(y, fw_st, bw_send_sl, bw_recv_sl, ids_s, ids_r,
+                     jc_s, jc_r, vs, vr):
+            out, new_fw, ctx = transport.fw_hop(y, fw_st, ids_s, ids_r,
+                                                jc_s, jc_r, vs, vr)
+            # residuals stay O(slice): never the full fw buffers
+            return (out, new_fw), (bw_send_sl, bw_recv_sl, vs, vr, ctx,
+                                   ids_s, ids_r, jc_s, jc_r)
 
-        def send_bwd(ctx, g):
-            g_out, _ = transport.bw(g, ctx=ctx)
-            return (g_out,)
+        def send_bwd(res, cots):
+            bw_send_sl, bw_recv_sl, vs, vr, ctx, ids_s, ids_r, jc_s, jc_r = res
+            g, _g_new_fw = cots          # fw buffers are forward-only state
+            g_y, new_bw_send, new_bw_recv = transport.bw_hop(
+                g, bw_send_sl, bw_recv_sl, vs, vr, ctx)
+            zero_fw = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                   fw_template)
+            return (g_y, zero_fw, new_bw_send, new_bw_recv,
+                    _zeros_f0(ids_s), _zeros_f0(ids_r),
+                    _zeros_f0(jc_s), _zeros_f0(jc_r),
+                    _zeros_f0(vs), _zeros_f0(vr))
 
         send.defvjp(send_fwd, send_bwd)
         return send
@@ -142,7 +417,8 @@ class PipelineTransport(Transport):
 def pipeline_apply(stage_fn: Callable, params_stacked, x, mesh: Mesh,
                    axis: str, *, policy: Optional[BoundaryPolicy] = None,
                    scheme: Optional[str] = None, k_frac: float = 0.1,
-                   microbatches: Optional[int] = None):
+                   microbatches: Optional[int] = None,
+                   fw_state=None, bw_state=None, ids=None):
     """Run ``stage_fn(stage_params, x) -> x`` as an S-stage GPipe pipeline
     over mesh axis ``axis``, ppermute-ing PACKED payloads between stages —
     differentiable end to end (compressed gradient payloads hop backward).
@@ -152,52 +428,108 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x, mesh: Mesh,
     count defaults to S (minimum-bubble GPipe).  ``policy`` (a
     :class:`BoundaryPolicy`) or ``scheme`` (a codec name) selects the wire
     format; every cut uses the same policy (SPMD: one program).
+
+    Feedback state: when the policy carries EF/EF21/EF-mixed/AQ-SGD
+    buffers, pass ``fw_state``/``bw_state`` from
+    :func:`init_feedback_state` (and ``ids``: (B,) example ids for AQ-SGD).
+    The return value becomes ``(out, new_fw_state)`` and the updated
+    backward buffers arrive as the COTANGENT of ``bw_state`` (take ``grad``
+    w.r.t. it — see train/steps.py).  Passing size-0 state with
+    ``feedback='none'`` is allowed (it rides the carry untouched), so the
+    calling convention can be policy-independent.
     """
     if policy is None:
         policy = _policy_for_scheme(scheme or "none", k_frac)
     s_stages = mesh.shape[axis]
     transport = PipelineTransport(policy, axis, s_stages)
-    send = transport.make_send()
 
     mb = microbatches or s_stages
     b = x.shape[0]
     if b % mb:
         raise ValueError(f"batch {b} is not divisible by microbatch count "
                          f"{mb} (defaults to the stage count)")
+    mbsz = b // mb
 
-    x_mb = x.reshape(mb, b // mb, *x.shape[1:])
+    with_state = fw_state is not None or bw_state is not None
+    if (policy.needs_fw_buffer or policy.needs_bw_buffer) and not with_state:
+        raise ValueError(
+            f"policy {policy.name!r} carries feedback buffers: pass "
+            f"fw_state/bw_state from init_feedback_state()")
+    if fw_state is None:
+        fw_state = _empty_state(s_stages, x.dtype)
+    if bw_state is None:
+        bw_state = _empty_state(s_stages, x.dtype)
+    if ids is None:
+        ids = jnp.zeros((b,), jnp.int32)
+    ids_mb = ids.reshape(mb, mbsz).astype(jnp.int32)
+
+    x_mb = x.reshape(mb, mbsz, *x.shape[1:])
     feat_shape = x_mb.shape[1:]
 
-    def body(params_local, x_local):
+    local_fw = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), fw_state)
+    send = transport.make_send(local_fw)
+    bw_mode = policy.bw_feedback
+
+    def body(params_local, x_local, fw_st, bw_st, ids_all):
         # params_local: this stage's slice (leading dim 1); x_local: (mb, ...)
         params_local = jax.tree.map(lambda a: a[0], params_local)
+        fw_st = jax.tree.map(lambda a: a[0], fw_st)
+        bw_st = jax.tree.map(lambda a: a[0], bw_st)
         idx = jax.lax.axis_index(axis)
         n_steps = mb + s_stages - 1
         buf = jnp.zeros(feat_shape, x_local.dtype)
         outs = jnp.zeros_like(x_local)
 
         def step(carry, t):
-            buf, outs = carry
+            buf, outs, fw_st = carry
             # stage 0 injects microbatch t; others consume the hop buffer
             inject = jnp.clip(t, 0, mb - 1)
             x_in = jnp.where(idx == 0, x_local[inject], buf)
             y = stage_fn(params_local, x_in)
-            buf = send(y)
+            # microbatch bookkeeping for this step's send/receive sides:
+            # stage idx computes (and fw-sends / bw-receives) microbatch
+            # t-idx and fw-receives / bw-sends microbatch t-idx+1
+            j_s = t - idx
+            j_r = j_s + 1
+            vs = (j_s >= 0) & (j_s < mb)
+            vr = (j_r >= 0) & (j_r < mb)
+            jc_s = jnp.clip(j_s, 0, mb - 1)
+            jc_r = jnp.clip(j_r, 0, mb - 1)
+            ids_s = ids_all[jc_s]
+            ids_r = ids_all[jc_r]
+            # bw buffer slices gather OUTSIDE send: their cotangents
+            # scatter-add the per-step updates back into the full buffers
+            bss = (bw_st["send"] if bw_mode == "none"
+                   else bw_st["send"][jc_r])
+            brs = (bw_st["recv"] if not needs_recv_mirror(bw_mode)
+                   else bw_st["recv"][jc_s])
+            buf, fw_st = send(y, fw_st, bss, brs, ids_s, ids_r,
+                              jc_s, jc_r, vs, vr)
             # the LAST stage's y at step t is microbatch t - (S-1)
             emit = jnp.clip(t - (s_stages - 1), 0, mb - 1)
             outs = jnp.where(t >= s_stages - 1, outs.at[emit].set(y), outs)
-            return (buf, outs), None
+            return (buf, outs, fw_st), None
 
-        (_, outs), _ = jax.lax.scan(step, (buf, outs), jnp.arange(n_steps))
+        (_, outs, fw_st), _ = jax.lax.scan(
+            step, (buf, outs, fw_st), jnp.arange(n_steps))
         # only the LAST stage holds the pipeline output; return it stage-
         # stacked (out_specs P(axis)) so the global slice [-1] is exactly
         # that stage's buffer — transposition-unambiguous (the cotangent
         # lands on stage S-1 alone, no psum involved).
-        return outs[None]
+        return outs[None], jax.tree.map(lambda a: a[None], fw_st)
 
     pspec = jax.tree.map(lambda _: P(axis), params_stacked)
-    out = _shard_map(body, mesh, (pspec, P()), P(axis))(params_stacked, x_mb)
-    return out[-1].reshape(b, *x.shape[1:])
+    st_spec = lambda st: jax.tree.map(lambda _: P(axis), st)
+    out, new_fw = _shard_map(
+        body, mesh,
+        (pspec, P(), st_spec(fw_state), st_spec(bw_state), P()),
+        (P(axis), st_spec(fw_state)),
+    )(params_stacked, x_mb, fw_state, bw_state, ids_mb)
+    out = out[-1].reshape(b, *x.shape[1:])
+    if with_state:
+        return out, new_fw
+    return out
 
 
 def pipeline_forward(stage_fn, params_stacked, x, mesh, axis, *,

@@ -31,8 +31,16 @@ class SimulatedTransport(Transport):
         self.policy = policy
 
     def fw(self, x, fw_buf=None, ids=None) -> Tuple[jnp.ndarray, Any, Any]:
-        """Forward message + new fw buffer + ctx (TopK mask for reuse)."""
+        """Forward message + new fw buffer + ctx (TopK mask for reuse).
+
+        The single buffer here stands for BOTH ends of the wire: the real
+        transport keeps a receiver-side mirror for the delta-coded modes
+        (ef21/aqsgd — see core.feedback.needs_recv_mirror), which this
+        single-program boundary collapses into one array.
+        """
         p = self.policy
+        if p.feedback == "aqsgd" and ids is None:
+            raise ValueError("aqsgd feedback needs per-example ids")
         m, new_fw = feedback_message(p.feedback, p.fw, x, fw_buf, ids)
         mask = None
         if p.reuse_indices:
