@@ -9,7 +9,12 @@ gradients).  This benchmark measures both per wire scheme:
     within per-tensor-scale overhead;
   * collective-permute bytes in the compiled HLO of the forward-only and
     the value_and_grad programs — the compression ratio visible in the
-    collective roofline term.
+    collective roofline term;
+  * a per-SCHEDULE section (gpipe / 1f1b / interleaved): analytic bubble
+    fraction, per-microbatch wire bytes across all cuts, and the compiled
+    collective-permute LAUNCH count — asserting interleaved's smaller
+    bubble and that the fused 1F1B hop at most halves steady-state
+    launches.
 
 Run:
   PYTHONPATH=src python -m benchmarks.pipeline_wire          # 4-stage, GPT-2ish
@@ -115,6 +120,91 @@ def measure_feedback(modes=(("none", "none"), ("ef", "ef"),
     return reports
 
 
+def measure_schedules(*, stages=4, batch=16, seq=32, d_model=64, d_ff=128,
+                      mb=8, v=2, scheme="q8", k_frac=0.10,
+                      check: bool = True):
+    """Per-schedule report (ISSUE 3): analytic bubble fraction, collective-
+    permute LAUNCH count of the compiled fw+bw program, and fw+bw payload
+    bytes per microbatch (per-hop payload x wire cuts).
+
+    The scan body lowers ONCE into the while loop, so the HLO launch count
+    IS the per-steady-state-tick launch count (x2: one fw loop, one bw
+    loop, plus O(1) ops outside).  Asserted here:
+
+      * interleaved (v) bubble fraction < GPipe's — (S-1)/(v*mb+S-1) vs
+        (S-1)/(mb+S-1);
+      * the fused 1F1B hop at most HALVES steady-state collective
+        launches vs the same schedule unfused (q8 payloads: the codes +
+        min + scale leaves ride one byte buffer instead of three
+        collectives per direction).
+    """
+    import dataclasses
+    from repro.launch.dryrun import collective_counts
+    from repro.transport.pipeline import pipeline_apply
+    from repro.transport.schedules import get_schedule
+    n_dev = jax.device_count()
+    assert n_dev >= stages, (n_dev, stages)
+    mesh = jax.make_mesh((stages,), ("stage",))
+    key = jax.random.PRNGKey(0)
+
+    def stage_fn(p, h):
+        return h + (jax.nn.gelu((h @ p["w1"]).astype(jnp.float32))
+                    .astype(jnp.bfloat16) @ p["w2"])
+
+    def params_struct(n_slices):
+        return {
+            "w1": jax.ShapeDtypeStruct((n_slices, d_model, d_ff),
+                                       jnp.bfloat16),
+            "w2": jax.ShapeDtypeStruct((n_slices, d_ff, d_model),
+                                       jnp.bfloat16),
+        }
+
+    x = jax.ShapeDtypeStruct((batch, seq, d_model), jnp.bfloat16)
+
+    def launches(sched, n_slices):
+        def loss(p, xx):
+            out = pipeline_apply(stage_fn, p, xx, mesh, "stage",
+                                 scheme=scheme, k_frac=k_frac,
+                                 microbatches=mb, schedule=sched)
+            return jnp.sum(out.astype(jnp.float32) ** 2)
+        hlo = jax.jit(jax.grad(loss)).lower(
+            params_struct(n_slices), x).compile().as_text()
+        return collective_counts(hlo).get("collective-permute", 0)
+
+    mb_feat = (batch // mb, seq, d_model)
+    fw_hop, bw_hop, _, _ = payload_bytes(scheme, mb_feat, k_frac)
+    configs = [
+        (get_schedule("gpipe"), stages),
+        (get_schedule("1f1b"), stages),
+        (get_schedule("interleaved", v), stages * v),
+    ]
+    reports = []
+    for sched, n_slices in configs:
+        rep = sched.describe(mb, stages)
+        rep.update({
+            "scheme": scheme, "stages": stages, "microbatches": mb,
+            "collective_permute_launches": launches(sched, n_slices),
+            "fw_payload_bytes_per_hop": fw_hop,
+            "bw_payload_bytes_per_hop": bw_hop,
+            "fw_wire_bytes_per_microbatch":
+                fw_hop * sched.wire_cuts(stages),
+            "bw_wire_bytes_per_microbatch":
+                bw_hop * sched.wire_cuts(stages),
+        })
+        reports.append(rep)
+    unfused = dataclasses.replace(get_schedule("1f1b"), fused_wire=False)
+    unfused_launches = launches(unfused, stages)
+    reports[1]["collective_permute_launches_unfused"] = unfused_launches
+    if check:
+        by = {r["schedule"]: r for r in reports}
+        assert (by["interleaved"]["bubble_fraction"]
+                < by["gpipe"]["bubble_fraction"]), reports
+        fused_launches = by["1f1b"]["collective_permute_launches"]
+        assert fused_launches * 2 <= unfused_launches, (
+            fused_launches, unfused_launches)
+    return reports
+
+
 def measure(schemes=("none", "q8", "q4", "topk", "topk_reuse"), *, stages=4,
             batch=8, seq=256, d_model=256, d_ff=1024, k_frac=0.10,
             check: bool = True):
@@ -193,11 +283,15 @@ def main():
     fb_reports = measure_feedback()
     for r in fb_reports:
         print(json.dumps(r))
+    sched_reports = measure_schedules()
+    for r in sched_reports:
+        print(json.dumps(r))
     os.makedirs(os.path.join(os.path.dirname(__file__), "results"),
                 exist_ok=True)
     with open(os.path.join(os.path.dirname(__file__), "results",
                            "pipeline_wire.json"), "w") as f:
-        json.dump({"schemes": reports, "feedback": fb_reports}, f, indent=1)
+        json.dump({"schemes": reports, "feedback": fb_reports,
+                   "schedules": sched_reports}, f, indent=1)
 
 
 if __name__ == "__main__":

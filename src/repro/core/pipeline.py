@@ -1,20 +1,29 @@
-"""Compatibility shim — the real pipeline lives in repro.transport.
+"""DEPRECATED compatibility shim — the real pipeline lives in repro.transport.
 
 The wire packing (``pack_payload``/``unpack_payload``/``wire_bytes``) moved
 to :mod:`repro.transport.codecs` (a pluggable codec registry shared with the
 simulated boundary), and the ``shard_map``/``ppermute`` pipeline moved to
-:mod:`repro.transport.pipeline` — now DIFFERENTIABLE: the backward pass
-ppermutes a packed gradient payload in the reverse direction, so training
-runs through the real compressed wire (see transport/pipeline.py).
+:mod:`repro.transport.pipeline` — now DIFFERENTIABLE (the backward pass
+ppermutes a packed gradient payload in the reverse direction) and
+SCHEDULED (:mod:`repro.transport.schedules`: gpipe / 1f1b / interleaved).
 
-This module re-exports the original names for existing callers.
+This module re-exports the original names for existing callers and emits a
+DeprecationWarning on import; switch to ``repro.transport``.
 """
 from __future__ import annotations
+
+import warnings
 
 from repro.transport.codecs import (pack_payload, unpack_payload,  # noqa: F401
                                     wire_bytes)
 from repro.transport.pipeline import (pipeline_apply,  # noqa: F401
                                       pipeline_forward)
+
+warnings.warn(
+    "repro.core.pipeline is a deprecated shim: import pack_payload/"
+    "unpack_payload/wire_bytes and pipeline_apply/pipeline_forward from "
+    "repro.transport instead",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = ["pack_payload", "unpack_payload", "wire_bytes",
            "pipeline_apply", "pipeline_forward"]

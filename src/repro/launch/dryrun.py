@@ -80,6 +80,23 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
     return totals
 
 
+def collective_counts(hlo_text: str) -> Dict[str, int]:
+    """Number of collective LAUNCHES per op kind in (optimized) HLO —
+    each op instance is one collective launch on the interconnect (a
+    ``lax.scan`` body appears once, so counts are per steady-state tick
+    times the number of loops).  Async ``-start``/``-done`` pairs count
+    once."""
+    counts: Dict[str, int] = {}
+    launch_re = re.compile(
+        r"= .+? (all-gather|all-reduce|reduce-scatter|all-to-all|"
+        r"collective-permute)(-start)?\(")
+    for line in hlo_text.splitlines():
+        m = launch_re.search(line.strip())
+        if m:
+            counts[m.group(1)] = counts.get(m.group(1), 0) + 1
+    return counts
+
+
 def lower_one(arch: str, shape_name: str, multi_pod: bool,
               policy_name: str = "none", compile_: bool = True,
               remat: bool = True, unroll: bool = False,

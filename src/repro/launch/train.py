@@ -9,9 +9,15 @@ Examples:
   PYTHONPATH=src python -m repro.launch.train --arch gpt2-small --smoke \
       --steps 200 --batch 8 --seq 128 --policy top10reuse
   PYTHONPATH=src python -m repro.launch.train --arch mixtral-8x7b --smoke \
-      --steps 50 --policy q4q8 --microbatches 2 --ckpt /tmp/mix.npz
+      --steps 50 --policy q4q8 --grad-accum 2 --ckpt /tmp/mix.npz
   PYTHONPATH=src python -m repro.launch.train --arch gpt2-small --smoke \
       --steps 50 --policy q4q8 --transport pipeline --stages 2
+  PYTHONPATH=src python -m repro.launch.train --arch gpt2-small --smoke \
+      --steps 50 --transport pipeline --stages 2 --schedule 1f1b \
+      --pipeline-microbatches 16
+  PYTHONPATH=src python -m repro.launch.train --arch gpt2-small --smoke \
+      --steps 50 --policy q4q8 --transport pipeline --stages 2 \
+      --schedule interleaved --virtual-stages 2
 """
 from __future__ import annotations
 
@@ -100,6 +106,20 @@ def main(argv=None) -> int:
                          "compressed shard_map/ppermute pipeline")
     ap.add_argument("--stages", type=int, default=None,
                     help="pipeline stage count (default: policy's)")
+    ap.add_argument("--schedule", default="gpipe",
+                    choices=("gpipe", "1f1b", "interleaved"),
+                    help="pipeline schedule: gpipe (minimum-tick skew "
+                         "scan), 1f1b (rematerialized ticks + fused "
+                         "single-buffer hops; use with "
+                         "--pipeline-microbatches >> stages), interleaved "
+                         "(--virtual-stages slices per device: 1/v the "
+                         "bubble, v*S-1 compressed cuts)")
+    ap.add_argument("--virtual-stages", type=int, default=None,
+                    help="virtual stage slices per device for "
+                         "--schedule interleaved (default 2)")
+    ap.add_argument("--pipeline-microbatches", type=int, default=None,
+                    help="GPipe/1F1B microbatch count for the pipeline "
+                         "transport (default: the stage count)")
     ap.add_argument("--feedback", default="none",
                     choices=("none", "ef", "ef21", "efmixed", "aqsgd"),
                     help="error-feedback mode (paper Tables 3-4); replaces "
@@ -111,7 +131,13 @@ def main(argv=None) -> int:
                     help="AQ-SGD per-example buffer size; the synthetic "
                          "stream's ids cycle modulo this")
     ap.add_argument("--lr", type=float, default=1e-3)
-    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-accum", type=int, default=1,
+                    help="gradient-accumulation splits of the global batch "
+                         "(bounds activation memory at B/grad_accum)")
+    ap.add_argument("--microbatches", type=int, default=None,
+                    help="DEPRECATED alias for --grad-accum (and, with "
+                         "--transport pipeline, for "
+                         "--pipeline-microbatches)")
     ap.add_argument("--no-remat", action="store_true")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
@@ -122,6 +148,28 @@ def main(argv=None) -> int:
 
     cfg = get(args.arch, smoke=args.smoke)
     seq = min(args.seq, cfg.max_seq)
+    grad_accum = args.grad_accum
+    pipeline_mb = args.pipeline_microbatches
+    if args.microbatches is not None:
+        import warnings
+        if args.transport == "pipeline":
+            if pipeline_mb is not None:
+                ap.error("--microbatches (deprecated) conflicts with "
+                         "--pipeline-microbatches — drop --microbatches")
+            warnings.warn("--microbatches is deprecated: use "
+                          "--pipeline-microbatches for the pipeline "
+                          "microbatch count", DeprecationWarning)
+            if args.microbatches > 1:
+                pipeline_mb = args.microbatches
+        else:
+            if grad_accum != 1:
+                ap.error("--microbatches (deprecated) conflicts with "
+                         "--grad-accum — drop --microbatches")
+            warnings.warn("--microbatches is deprecated: use --grad-accum "
+                          "for gradient accumulation", DeprecationWarning)
+            grad_accum = args.microbatches
+    virtual_stages = (args.virtual_stages if args.virtual_stages is not None
+                      else (2 if args.schedule == "interleaved" else 1))
     policy = POLICIES[args.policy]()
     if args.feedback != "none":
         bp = (aqsgd_policy(args.k_frac) if args.feedback == "aqsgd"
@@ -153,9 +201,9 @@ def main(argv=None) -> int:
         from repro.train.loop import _pipeline_bstates
         bstates = _pipeline_bstates(
             policy, (seq, cfg.d_model), batch=args.batch,
-            microbatches=(args.microbatches if args.microbatches > 1
-                          else None),
-            num_samples=args.num_samples, dtype=jnp.bfloat16)
+            microbatches=pipeline_mb,
+            num_samples=args.num_samples, dtype=jnp.bfloat16,
+            virtual_stages=virtual_stages)
     else:
         bstates = [init_boundary_state(policy.at(i), (seq, cfg.d_model),
                                        batch=args.batch,
@@ -163,18 +211,19 @@ def main(argv=None) -> int:
                                        dtype=jnp.bfloat16)
                    for i in range(policy.num_boundaries)]
     if args.transport == "pipeline":
-        # --microbatches means GPipe microbatches here (not grad
-        # accumulation); remat is not applied inside the pipeline scan.
-        print(f"# pipeline transport: microbatches="
-              f"{args.microbatches if args.microbatches > 1 else policy.num_stages}"
-              f" (GPipe), remat off", flush=True)
+        from repro.transport.schedules import get_schedule
+        sched = get_schedule(args.schedule, virtual_stages)
+        mb_eff = pipeline_mb or policy.num_stages
+        print(f"# pipeline transport: schedule={args.schedule} "
+              f"microbatches={mb_eff} "
+              f"{sched.describe(mb_eff, policy.num_stages)}", flush=True)
     step_fn = make_lm_train_step(cfg, policy, opt, remat=not args.no_remat,
                                  donate=False,
-                                 microbatches=args.microbatches,
+                                 grad_accum=grad_accum,
                                  transport=args.transport,
-                                 pipeline_microbatches=(
-                                     args.microbatches
-                                     if args.microbatches > 1 else None))
+                                 pipeline_microbatches=pipeline_mb,
+                                 schedule=args.schedule,
+                                 virtual_stages=virtual_stages)
 
     stream = synthetic_stream(cfg, args.batch, seq, args.seed,
                               num_samples=args.num_samples)

@@ -183,12 +183,16 @@ def pipeline_forward_eval(params, images, policy: CompressionPolicy = NO_POLICY,
                           compress: bool = True):
     """Single-device sequential eval of the pipeline model, applying the
     fw compressor between stages when ``compress`` (wire-equivalent: the
-    codec round-trip equals C(x) — see transport/codecs.py)."""
+    codec round-trip equals C(x) — see transport/codecs.py).  With more
+    stacked slices than the policy's boundary count (interleaved virtual
+    stages), every cut still compresses — matching the SPMD wire, which
+    runs the same uniform policy at all ``S*v - 1`` cuts."""
     x = pipeline_stem(params, images)
     n = params["stages"]["b0"]["conv1"].shape[0]
     for s in range(n):
         x = pipeline_stage_apply(
             jax.tree.map(lambda a: a[s], params["stages"]), x)
-        if s < n - 1 and policy.num_boundaries > s:
-            x = boundary_eval(policy.at(s), x, compress)
+        if s < n - 1 and policy.num_boundaries > 0:
+            x = boundary_eval(policy.at(min(s, policy.num_boundaries - 1)),
+                              x, compress)
     return pipeline_head(params, x)

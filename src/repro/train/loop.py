@@ -63,7 +63,8 @@ def run_cnn_experiment(policy: CompressionPolicy, *, epochs: int = 8,
                        opt: Optional[OptimizerConfig] = None,
                        seed: int = 0, transport: str = "simulated",
                        mesh=None, stage_axis: str = "stage",
-                       pipeline_microbatches: Optional[int] = None
+                       pipeline_microbatches: Optional[int] = None,
+                       schedule: str = "gpipe", virtual_stages: int = 1
                        ) -> ExperimentResult:
     """Train the ResNet with boundary compression; paper protocol.
 
@@ -74,7 +75,8 @@ def run_cnn_experiment(policy: CompressionPolicy, *, epochs: int = 8,
     through the REAL compressed ``shard_map``/``ppermute`` pipeline
     (needs ``device_count >= policy.num_stages``; same boundary policy at
     every cut; EF/EF21/EF-mixed/AQ-SGD feedback buffers ride the pipeline
-    scan carry).
+    scan carry) under ``schedule`` (gpipe | 1f1b | interleaved — the
+    latter builds ``num_stages * virtual_stages`` logical stage slices).
     """
     data = data or ImageClassData()
     opt = opt or OptimizerConfig(kind="sgd", lr=0.02, momentum=0.9,
@@ -85,11 +87,13 @@ def run_cnn_experiment(policy: CompressionPolicy, *, epochs: int = 8,
             raise ValueError("warmup_params: homogeneous pipeline CNN has "
                              "a different param structure")
         params = cnn.init_pipeline_params(
-            jax.random.PRNGKey(seed), policy.num_stages, width=width)
+            jax.random.PRNGKey(seed), policy.num_stages * virtual_stages,
+            width=width)
         bstates = _pipeline_bstates(policy, (data.image, data.image, width),
                                     batch=batch,
                                     microbatches=pipeline_microbatches,
-                                    num_samples=data.num_train)
+                                    num_samples=data.num_train,
+                                    virtual_stages=virtual_stages)
     else:
         params = warmup_params or cnn.init_params(
             jax.random.PRNGKey(seed), width=width)
@@ -99,7 +103,9 @@ def run_cnn_experiment(policy: CompressionPolicy, *, epochs: int = 8,
     opt_state = init_opt_state(opt, params)
     step = make_cnn_train_step(policy, opt, transport=transport, mesh=mesh,
                                stage_axis=stage_axis,
-                               pipeline_microbatches=pipeline_microbatches)
+                               pipeline_microbatches=pipeline_microbatches,
+                               schedule=schedule,
+                               virtual_stages=virtual_stages)
 
     t0 = time.time()
     curve = []
@@ -123,7 +129,7 @@ def run_cnn_experiment(policy: CompressionPolicy, *, epochs: int = 8,
 
 def _pipeline_bstates(policy: CompressionPolicy, feat_shape, *, batch: int,
                       microbatches=None, num_samples: int = 0,
-                      dtype=jnp.float32):
+                      dtype=jnp.float32, virtual_stages: int = 1):
     """Feedback state for the real pipeline transport: the stage-stacked
     ``init_feedback_state`` pytree, or ``[]`` for feedback-free policies
     (pass-through, PR-1 behaviour)."""
@@ -134,7 +140,8 @@ def _pipeline_bstates(policy: CompressionPolicy, feat_shape, *, batch: int,
     from repro.transport.pipeline import init_feedback_state
     return init_feedback_state(bp, feat_shape, num_stages=policy.num_stages,
                                batch=batch, microbatches=microbatches,
-                               num_samples=num_samples, dtype=dtype)
+                               num_samples=num_samples, dtype=dtype,
+                               virtual_stages=virtual_stages)
 
 
 def _cnn_bstates(policy: CompressionPolicy, data: ImageClassData,
@@ -168,14 +175,15 @@ def run_lm_experiment(cfg: ModelConfig, policy: CompressionPolicy, *,
                       opt: Optional[OptimizerConfig] = None,
                       seed: int = 0, transport: str = "simulated",
                       mesh=None, stage_axis: str = "stage",
-                      pipeline_microbatches: Optional[int] = None
+                      pipeline_microbatches: Optional[int] = None,
+                      schedule: str = "gpipe", virtual_stages: int = 1
                       ) -> ExperimentResult:
     """Fine-tune a (pre-trained) tiny LM with boundary compression.
 
     ``transport="pipeline"`` runs the layer stack as a real compressed
     ``ppermute`` pipeline (same params/policy as simulated — the
     transformer's layer groups are homogeneous, so the pre-trained weights
-    carry over unchanged).
+    carry over unchanged) under ``schedule`` (gpipe | 1f1b | interleaved).
     """
     data = data or LMData()
     opt = opt or OptimizerConfig(kind="adamw", lr=3e-4, weight_decay=0.01,
@@ -196,11 +204,14 @@ def run_lm_experiment(cfg: ModelConfig, policy: CompressionPolicy, *,
         bstates = _pipeline_bstates(policy, feat, batch=batch,
                                     microbatches=pipeline_microbatches,
                                     num_samples=data.num_train,
-                                    dtype=jnp.bfloat16)
+                                    dtype=jnp.bfloat16,
+                                    virtual_stages=virtual_stages)
     step = make_lm_train_step(cfg, policy, opt, remat=False, donate=False,
                               transport=transport, mesh=mesh,
                               stage_axis=stage_axis,
-                              pipeline_microbatches=pipeline_microbatches)
+                              pipeline_microbatches=pipeline_microbatches,
+                              schedule=schedule,
+                              virtual_stages=virtual_stages)
 
     t0 = time.time()
     curve = []

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Callable, Optional, Tuple
 
 import jax
@@ -72,32 +73,61 @@ def _merge_states(fw, bw):
 # LM train step (decoder-only + enc-dec)
 # ---------------------------------------------------------------------------
 
+def _resolve_grad_accum(grad_accum: int,
+                        microbatches: Optional[int]) -> int:
+    """``microbatches=`` is the deprecated name of the grad-accumulation
+    knob (it collided with the pipeline's GPipe microbatch count)."""
+    if microbatches is None:
+        return grad_accum
+    if grad_accum != 1:
+        raise ValueError(
+            f"both grad_accum={grad_accum} and its deprecated alias "
+            f"microbatches={microbatches} were passed — drop microbatches=")
+    warnings.warn(
+        "microbatches= is deprecated (it means gradient accumulation, not "
+        "pipeline microbatches): pass grad_accum= instead, and "
+        "pipeline_microbatches= for the GPipe microbatch count",
+        DeprecationWarning, stacklevel=3)
+    return microbatches
+
+
 def make_lm_train_step(cfg, policy: CompressionPolicy,
                        opt: OptimizerConfig, aux_weight: float = 0.01,
                        remat: bool = True, donate: bool = True,
-                       jit: bool = True, microbatches: int = 1,
+                       jit: bool = True, grad_accum: int = 1,
+                       microbatches: Optional[int] = None,
                        transport: str = "simulated", mesh=None,
                        stage_axis: str = "stage",
-                       pipeline_microbatches: Optional[int] = None):
+                       pipeline_microbatches: Optional[int] = None,
+                       schedule: str = "gpipe", virtual_stages: int = 1):
     """Returns jit'd ``step(params, opt_state, bstates, batch, ids)
     -> (params, opt_state, bstates, metrics)``.
 
     batch: {"tokens": (B,S)} (+ modality stubs); next-token LM loss.
-    ``microbatches > 1``: gradient accumulation — the global batch is split
+    ``grad_accum > 1``: gradient accumulation — the global batch is split
     along B and scanned, bounding per-device activation memory at
-    B/microbatches (feedback buffers and ids are sliced alongside, so the
-    paper's per-example semantics are preserved).
+    B/grad_accum (feedback buffers and ids are sliced alongside, so the
+    paper's per-example semantics are preserved).  ``microbatches=`` is a
+    deprecated alias for ``grad_accum=``.
 
     ``transport="pipeline"`` trains through the real ``ppermute`` path:
     embed + loss run replicated, the layer stack runs as a compressed
-    GPipe pipeline over ``mesh``'s ``stage_axis`` (``pipeline_microbatches``
-    defaults to the stage count).
+    pipeline over ``mesh``'s ``stage_axis`` under ``schedule``
+    (gpipe | 1f1b | interleaved; ``virtual_stages`` slices per device for
+    interleaved; ``pipeline_microbatches`` defaults to the stage count).
     """
     mod = encdec if cfg.enc_dec else transformer
+    grad_accum = _resolve_grad_accum(grad_accum, microbatches)
     if transport == "pipeline":
+        if grad_accum > 1:
+            raise NotImplementedError(
+                "grad_accum > 1 is not supported with transport='pipeline' "
+                "— bound activation memory with pipeline_microbatches (the "
+                "1f1b schedule keeps the stash at the boundary tensors)")
         return _make_pipeline_lm_train_step(
             cfg, policy, opt, mesh=mesh, stage_axis=stage_axis,
-            microbatches=pipeline_microbatches, jit=jit)
+            microbatches=pipeline_microbatches, jit=jit,
+            schedule=schedule, virtual_stages=virtual_stages)
     if transport != "simulated":
         raise ValueError(f"unknown transport {transport!r}")
 
@@ -125,7 +155,7 @@ def make_lm_train_step(cfg, policy: CompressionPolicy,
         return params, opt_state, new_states, metrics
 
     def step_accum(params, opt_state, bstates, batch, ids):
-        mb = microbatches
+        mb = grad_accum
         if policy.num_boundaries and any(
                 policy.at(i).feedback == "aqsgd"
                 for i in range(policy.num_boundaries)):
@@ -161,7 +191,7 @@ def make_lm_train_step(cfg, policy: CompressionPolicy,
                    "total": (loss_s + aux_weight * aux_s) / mb}
         return params, opt_state, new_states, metrics
 
-    if microbatches > 1:
+    if grad_accum > 1:
         step = step_accum
 
     if not jit:
@@ -174,7 +204,8 @@ def _make_pipeline_lm_train_step(cfg, policy: CompressionPolicy,
                                  opt: OptimizerConfig, *, mesh=None,
                                  stage_axis: str = "stage",
                                  microbatches: Optional[int] = None,
-                                 jit: bool = True):
+                                 jit: bool = True, schedule: str = "gpipe",
+                                 virtual_stages: int = 1):
     """LM training through the real compressed ``ppermute`` pipeline.
 
     Same ``step(params, opt_state, bstates, batch, ids)`` signature as the
@@ -182,8 +213,11 @@ def _make_pipeline_lm_train_step(cfg, policy: CompressionPolicy,
     (``[]``); with EF/EF21/EF-mixed/AQ-SGD it is the
     :func:`repro.transport.pipeline.init_feedback_state` pytree and the
     step returns the updated buffers (bw side read from the gradient).
-    MoE aux losses are not threaded through the pipeline (stage_fn is
-    single-tensor); fine for the dense smoke archs this path targets.
+    With the interleaved schedule the layer stack splits into
+    ``num_stages * virtual_stages`` logical slices (round-robin per
+    device).  MoE aux losses are not threaded through the pipeline
+    (stage_fn is single-tensor); fine for the dense smoke archs this path
+    targets.
     """
     if cfg.enc_dec:
         raise NotImplementedError("pipeline transport: decoder-only archs")
@@ -197,17 +231,20 @@ def _make_pipeline_lm_train_step(cfg, policy: CompressionPolicy,
         labels = jnp.roll(batch["tokens"], -1, axis=1)
         mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
         x = transformer._embed_input(params, batch, cfg)
-        stack = transformer.stack_layer_stages(params, s_stages)
+        stack = transformer.stack_layer_stages(params,
+                                               s_stages * virtual_stages)
         new_fw = None
         if needs_state:
             x, new_fw = pipeline_apply(
                 transformer.stage_stack_fn(cfg), stack, x, mesh, stage_axis,
-                policy=bp, microbatches=microbatches,
+                policy=bp, microbatches=microbatches, schedule=schedule,
+                virtual_stages=virtual_stages,
                 fw_state=fw_state, bw_state=bw_state, ids=ids)
         else:
             x = pipeline_apply(transformer.stage_stack_fn(cfg), stack, x,
                                mesh, stage_axis, policy=bp,
-                               microbatches=microbatches)
+                               microbatches=microbatches, schedule=schedule,
+                               virtual_stages=virtual_stages)
         loss = transformer.hidden_lm_loss(params, x, labels, cfg, mask)
         return loss, new_fw
 
@@ -257,13 +294,15 @@ def xent_loss(logits, labels):
 def make_cnn_train_step(policy: CompressionPolicy, opt: OptimizerConfig,
                         transport: str = "simulated", mesh=None,
                         stage_axis: str = "stage",
-                        pipeline_microbatches: Optional[int] = None):
+                        pipeline_microbatches: Optional[int] = None,
+                        schedule: str = "gpipe", virtual_stages: int = 1):
     from repro.models import cnn
 
     if transport == "pipeline":
         return _make_pipeline_cnn_train_step(
             policy, opt, mesh=mesh, stage_axis=stage_axis,
-            microbatches=pipeline_microbatches)
+            microbatches=pipeline_microbatches, schedule=schedule,
+            virtual_stages=virtual_stages)
     if transport != "simulated":
         raise ValueError(f"unknown transport {transport!r}")
 
@@ -290,15 +329,19 @@ def make_cnn_train_step(policy: CompressionPolicy, opt: OptimizerConfig,
 def _make_pipeline_cnn_train_step(policy: CompressionPolicy,
                                   opt: OptimizerConfig, *, mesh=None,
                                   stage_axis: str = "stage",
-                                  microbatches: Optional[int] = None):
+                                  microbatches: Optional[int] = None,
+                                  schedule: str = "gpipe",
+                                  virtual_stages: int = 1):
     """CNN training through the real compressed ``ppermute`` pipeline.
 
-    Uses the homogeneous-stage CNN (models/cnn.py ``init_pipeline_params``);
-    stem + head run replicated, the S residual stages pipeline over the
-    mesh with packed fw/bw payloads.  Signature matches the simulated step;
-    with a feedback policy ``bstates`` is the ``init_feedback_state``
-    pytree and comes back updated (bw side via the gradient), otherwise it
-    passes through unchanged.
+    Uses the homogeneous-stage CNN (models/cnn.py ``init_pipeline_params``
+    — with the interleaved schedule, built with ``S * virtual_stages``
+    logical stages); stem + head run replicated, the residual stages
+    pipeline over the mesh with packed fw/bw payloads under ``schedule``.
+    Signature matches the simulated step; with a feedback policy
+    ``bstates`` is the ``init_feedback_state`` pytree and comes back
+    updated (bw side via the gradient), otherwise it passes through
+    unchanged.
     """
     from repro.models import cnn
     from repro.transport.pipeline import pipeline_apply
@@ -313,11 +356,13 @@ def _make_pipeline_cnn_train_step(policy: CompressionPolicy,
             x, new_fw = pipeline_apply(
                 cnn.pipeline_stage_apply, params["stages"], x, mesh,
                 stage_axis, policy=bp, microbatches=microbatches,
+                schedule=schedule, virtual_stages=virtual_stages,
                 fw_state=fw_state, bw_state=bw_state, ids=ids)
         else:
             x = pipeline_apply(cnn.pipeline_stage_apply, params["stages"],
                                x, mesh, stage_axis, policy=bp,
-                               microbatches=microbatches)
+                               microbatches=microbatches, schedule=schedule,
+                               virtual_stages=virtual_stages)
         logits = cnn.pipeline_head(params, x)
         return xent_loss(logits, labels), (logits, new_fw)
 

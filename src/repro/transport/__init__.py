@@ -7,19 +7,25 @@ implementations realize; ``codecs`` is the shared wire-format registry.
   base       — the Transport interface + wire-cost accounting
   simulated  — single-device convergence-faithful transport (paper Sec. 2.1)
   pipeline   — real shard_map/ppermute pipeline, differentiable (beyond-paper)
+  schedules  — pluggable pipeline schedules (gpipe / 1f1b / interleaved)
 """
 from repro.transport.base import Transport
-from repro.transport.codecs import (WireCodec, codec_for, get_codec,
-                                    pack_payload, register_codec,
-                                    registered_codecs, unpack_payload,
-                                    wire_bytes)
-from repro.transport.pipeline import (PipelineTransport, pipeline_apply,
-                                      pipeline_forward)
+from repro.transport.codecs import (WireCodec, codec_for, fuse_payload,
+                                    get_codec, pack_payload, register_codec,
+                                    registered_codecs, unfuse_payload,
+                                    unpack_payload, wire_bytes)
+from repro.transport.pipeline import (PipelineTransport, init_feedback_state,
+                                      pipeline_apply, pipeline_forward)
+from repro.transport.schedules import (Schedule, SCHEDULES, as_schedule,
+                                       get_schedule)
 from repro.transport.simulated import SimulatedTransport, simulated_transport
 
 __all__ = [
     "Transport", "WireCodec", "codec_for", "get_codec", "pack_payload",
     "register_codec", "registered_codecs", "unpack_payload", "wire_bytes",
-    "PipelineTransport", "pipeline_apply", "pipeline_forward",
+    "fuse_payload", "unfuse_payload",
+    "PipelineTransport", "init_feedback_state", "pipeline_apply",
+    "pipeline_forward",
+    "Schedule", "SCHEDULES", "as_schedule", "get_schedule",
     "SimulatedTransport", "simulated_transport",
 ]

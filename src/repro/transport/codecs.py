@@ -270,3 +270,49 @@ def unpack_payload(payload: dict, shape, dtype=jnp.bfloat16) -> jnp.ndarray:
 def wire_bytes(payload) -> int:
     """Actual bytes-on-wire of a packed payload."""
     return sum(p.size * p.dtype.itemsize for p in jax.tree.leaves(payload))
+
+
+# ---------------------------------------------------------------------------
+# Payload fusion: one contiguous byte buffer per hop
+# ---------------------------------------------------------------------------
+# A packed payload is a pytree (q8: codes + min + scale; EF-mixed: two full
+# payloads), and ``ppermute`` lowers one collective-permute PER LEAF.  On a
+# latency-bound interconnect each launch costs the collective's fixed
+# overhead, so the fused schedules bitcast every leaf to uint8, concatenate,
+# and send ONE buffer per direction per tick — byte-identical on the wire
+# (same total payload bytes, pure bitcasts) but a single collective launch.
+
+def fuse_payload(payload) -> jnp.ndarray:
+    """Flatten a packed payload pytree into one contiguous uint8 vector."""
+    parts = []
+    for a in jax.tree.leaves(payload):
+        b = (a.astype(jnp.uint8) if a.dtype == jnp.bool_
+             else jax.lax.bitcast_convert_type(a, jnp.uint8))
+        parts.append(b.reshape(-1))
+    if not parts:
+        return jnp.zeros((0,), jnp.uint8)
+    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+
+def unfuse_payload(buf: jnp.ndarray, payload_struct):
+    """Inverse of :func:`fuse_payload` given the payload's shape/dtype
+    structure (``jax.eval_shape`` of the pack, or the payload itself)."""
+    leaves, treedef = jax.tree.flatten(payload_struct)
+    out, off = [], 0
+    for s in leaves:
+        itemsize = jnp.dtype(s.dtype).itemsize
+        size = 1
+        for dim in s.shape:
+            size *= dim
+        nbytes = size * itemsize
+        seg = buf[off:off + nbytes]
+        off += nbytes
+        if itemsize == 1:
+            a = seg.reshape(s.shape)
+            a = a.astype(s.dtype) if s.dtype == jnp.bool_ else \
+                jax.lax.bitcast_convert_type(a, s.dtype)
+        else:
+            a = jax.lax.bitcast_convert_type(
+                seg.reshape(*s.shape, itemsize), s.dtype)
+        out.append(a)
+    return jax.tree.unflatten(treedef, out)

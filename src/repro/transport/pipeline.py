@@ -1,10 +1,11 @@
 """Real pipeline parallelism with compressed, DIFFERENTIABLE stage handoffs.
 
 The stage boundary is an actual ``jax.lax.ppermute`` over a mesh axis inside
-``shard_map`` — GPipe-style microbatching, each device holding one stage.
-The boundary tensor is PACKED by a wire codec (transport/codecs.py) before
-the ppermute, so the collective-permute bytes in the lowered HLO shrink by
-exactly the paper's compression ratio.
+``shard_map`` — microbatched pipelining, each device holding one (or, with
+the interleaved schedule, several virtual) stage slices.  The boundary
+tensor is PACKED by a wire codec (transport/codecs.py) before the ppermute,
+so the collective-permute bytes in the lowered HLO shrink by exactly the
+paper's compression ratio.
 
 Training-capable: the packed hop is wrapped in ``jax.custom_vjp`` whose
 backward ppermutes a *packed gradient payload* in the REVERSE direction,
@@ -15,10 +16,21 @@ residuals on both ends of the wire: the backward payload is VALUES ONLY
 (gathered with the receiver's indices, scattered with the sender's), saving
 the index bytes in the gradient direction.
 
+Scheduling is a first-class, pluggable layer (transport/schedules.py):
+``gpipe`` (minimum-tick skew scan, the original semantics), ``1f1b``
+(rematerialized ticks + fused single-buffer hops, for
+``microbatches >> stages``), and ``interleaved`` (v virtual stage slices
+per device, round-robin: the fill bubble shrinks by 1/v while every one of
+the ``v*S - 1`` cuts is a compressed wire cut).  The scan body below is
+entirely plan-driven — a :class:`~repro.transport.schedules.Schedule` maps
+``(tick, device)`` to (virtual chunk, microbatch, validity, inject/emit
+points), and the same custom_vjp hop serves every schedule.
+
 Error feedback (paper Sec. 2.4/2.5, Tables 3-4) over the real wire:
 per-stage EF / EF21 / EF-mixed / AQ-SGD buffers ride the ``lax.scan`` carry,
-sharded ``P(axis)`` so each stage owns the buffer of the cut it sends
-across.  What gets packed onto the wire is the COMPENSATED message:
+sharded ``P(axis)`` so each device owns the buffers of the cuts it sends
+across (one per virtual chunk).  What gets packed onto the wire is the
+COMPENSATED message:
 
   * EF        — payload = pack(x + e); the receiver's unpack IS m = C(x+e).
   * EF-mixed  — two half-K payloads, pack(x, K/2) + pack(e, K/2).
@@ -39,16 +51,15 @@ pytree).  Buffer rows are per-example, hence disjoint across microbatches:
 each scan step contributes exactly one (masked) slice and the cotangent sum
 over steps reassembles the full updated buffer.
 
-Scheduling: at step t every device runs its stage; stage 0 injects
-microbatch t, others consume the hop buffer; the last stage emits
-microbatch t-(S-1).  Gradients retrace exactly the valid pipeline paths
-(the fill/drain garbage paths get zero cotangent through the masks; the
-wrap-around cut S-1 -> 0 carries garbage that both directions explicitly
-ignore).
+Gradients retrace exactly the valid pipeline paths (the fill/drain garbage
+paths get zero cotangent through the plan's masks; ring hops that carry
+garbage — e.g. the wrap-around cut under gpipe — are explicitly ignored by
+both directions, while under the interleaved schedule the wrap hop carries
+the real chunk-boundary payload).
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
 
 import numpy as np
 import jax
@@ -58,7 +69,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core.feedback import needs_recv_mirror
 from repro.core.policy import (BoundaryPolicy, quant_policy, topk_policy)
 from repro.transport.base import Transport
-from repro.transport.codecs import codec_for
+from repro.transport.codecs import codec_for, fuse_payload, unfuse_payload
+from repro.transport.schedules import Schedule, as_schedule
 
 def _shard_map(f, mesh, in_specs, out_specs):
     """jax.shard_map moved between jax versions; replication checking is
@@ -100,30 +112,36 @@ def _zeros_f0(x):
 def init_feedback_state(policy: BoundaryPolicy, feat_shape, *,
                         num_stages: int, batch: int,
                         microbatches: Optional[int] = None,
-                        num_samples: int = 0, dtype=jnp.float32):
+                        num_samples: int = 0, dtype=jnp.float32,
+                        virtual_stages: int = 1):
     """Per-stage feedback buffers for the real pipeline.
 
     Returns ``{"fw": {"send", "recv"}, "bw": {"send", "recv"}}`` of arrays
-    with leading dim ``num_stages`` (shard ``P(axis)``: stage s's slice is
-    the buffer of cut s for ``send`` / the mirror of cut s-1 for ``recv``).
+    with leading dim ``num_stages`` (shard ``P(axis)``: device d's slice
+    holds the buffers of the cuts it owns — cut d for ``send`` / the mirror
+    of cut d-1 for ``recv``; with ``virtual_stages=v`` a chunk dim follows,
+    slot k being cut ``k*S + d`` / its mirror).
 
-    Global modes (ef/ef21/efmixed) keep ``(S, mb, B/mb, *feat)`` — the
+    Global modes (ef/ef21/efmixed) keep ``(S, [v,] mb, B/mb, *feat)`` — the
     simulated ``(B, *feat)`` buffer split by microbatch; AQ-SGD keeps
-    ``(S, num_samples, *feat)``.  Unused buffers are size-0 placeholders
-    ``(S, 0)`` so the pytree structure is policy-stable.
+    ``(S, [v,] num_samples, *feat)``.  Unused buffers are size-0
+    placeholders ``(S, 0)`` so the pytree structure is policy-stable.
     """
     mb = microbatches or num_stages
     if batch % mb:
         raise ValueError(f"batch {batch} not divisible by microbatches {mb}")
     mbsz = batch // mb
+    v = virtual_stages
+    chunk = () if v == 1 else (v,)
 
     def buf(mode: str, mirror: bool):
         if mode == "none" or (mirror and not needs_recv_mirror(mode)):
             return jnp.zeros((num_stages, 0), dtype)
         if mode == "aqsgd":
             assert num_samples > 0, "aqsgd needs the dataset size"
-            return jnp.zeros((num_stages, num_samples, *feat_shape), dtype)
-        return jnp.zeros((num_stages, mb, mbsz, *feat_shape), dtype)
+            return jnp.zeros((num_stages, *chunk, num_samples, *feat_shape),
+                             dtype)
+        return jnp.zeros((num_stages, *chunk, mb, mbsz, *feat_shape), dtype)
 
     return {"fw": {"send": buf(policy.feedback, False),
                    "recv": buf(policy.feedback, True)},
@@ -136,19 +154,22 @@ def _empty_state(num_stages: int, dtype):
     return {"send": z, "recv": z}
 
 
-def _gather(buf, jc, ids, mode):
-    """One microbatch's slice of a feedback buffer (size-0 passes through)."""
+def _gather(buf, k, jc, ids, mode, v):
+    """One microbatch's slice of a feedback buffer (size-0 passes through).
+    With virtual stages the leading chunk dim selects the cut."""
     if mode == "none":
         return buf
-    return buf[ids] if mode == "aqsgd" else buf[jc]
+    row = ids if mode == "aqsgd" else jc
+    return buf[row] if v == 1 else buf[k, row]
 
 
-def _scatter(buf, jc, ids, mode, new_slice, old_slice, valid):
+def _scatter(buf, k, jc, ids, mode, v, new_slice, old_slice, valid):
     """Masked functional update of one microbatch's slice."""
     if mode == "none":
         return buf
     upd = jnp.where(valid, new_slice, old_slice).astype(buf.dtype)
-    return buf.at[ids].set(upd) if mode == "aqsgd" else buf.at[jc].set(upd)
+    row = ids if mode == "aqsgd" else jc
+    return buf.at[row].set(upd) if v == 1 else buf.at[k, row].set(upd)
 
 
 class PipelineTransport(Transport):
@@ -159,9 +180,15 @@ class PipelineTransport(Transport):
     a ``custom_vjp`` so the backward hop runs during backprop, with
     feedback buffers threaded through the scan carry (fw) and through
     cotangents (bw).
+
+    ``fused=True`` (the 1f1b/interleaved default) bitcasts each hop's
+    payload pytree into ONE contiguous uint8 buffer before the ppermute —
+    byte-identical on the wire, one collective launch per direction per
+    tick instead of one per payload leaf.
     """
 
-    def __init__(self, policy: BoundaryPolicy, axis: str, num_stages: int):
+    def __init__(self, policy: BoundaryPolicy, axis: str, num_stages: int,
+                 *, virtual_stages: int = 1, fused: bool = False):
         if policy.reuse_indices and (policy.feedback != "none"
                                      or policy.bw_feedback != "none"):
             raise NotImplementedError(
@@ -176,10 +203,22 @@ class PipelineTransport(Transport):
         self.policy = policy
         self.axis = axis
         self.num_stages = num_stages
+        self.virtual_stages = virtual_stages
+        self.fused = fused
         self._fw_codec = codec_for(policy.fw)
         self._bw_codec = codec_for(policy.bw)
         self.perm_fw = [(i, (i + 1) % num_stages) for i in range(num_stages)]
         self.perm_bw = [(i, (i - 1) % num_stages) for i in range(num_stages)]
+
+    def _hop(self, payload, perm):
+        """One ring hop of a packed payload: plain per-leaf ppermute, or a
+        single fused byte-buffer launch."""
+        if not self.fused:
+            return jax.lax.ppermute(payload, self.axis, perm)
+        struct = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), payload)
+        moved = jax.lax.ppermute(fuse_payload(payload), self.axis, perm)
+        return unfuse_payload(moved, struct)
 
     # -- wire framing (shared with benchmarks: eval_shape-able) -------------
 
@@ -274,37 +313,44 @@ class PipelineTransport(Transport):
         unpack.  ``ctx`` carries the (sent, received) TopK indices when
         ``reuse_indices`` is set."""
         payload = self._fw_codec.pack(x, self.policy.fw.k_frac)
-        moved = jax.lax.ppermute(payload, self.axis, self.perm_fw)
+        moved = self._hop(payload, self.perm_fw)
         out = self._fw_codec.unpack(moved, x.shape, x.dtype)
         ctx = None
         if self.policy.reuse_indices:
             ctx = (payload["idx"], moved["idx"])
         return out, fw_buf, ctx
 
-    def fw_hop(self, y, fw_st, ids_s, ids_r, jc_s, jc_r, vs, vr):
+    def fw_hop(self, y, fw_st, meta):
         """Feedback-compensated forward hop inside the pipeline scan.
 
-        ``fw_st``: this stage's local {"send","recv"} buffers; ``jc_*`` the
-        clipped microbatch indices (send / receive side of this step);
-        ``ids_*`` the AQ-SGD example ids; ``vs``/``vr`` validity masks.
+        ``fw_st``: this device's local {"send","recv"} buffers; ``meta``:
+        the tick's bookkeeping pytree — clipped microbatch indices
+        (``jc_s``/``jc_r``: send / receive side), virtual chunk indices
+        (``ks``/``kr``), AQ-SGD example ids (``ids_s``/``ids_r``) and
+        validity masks (``vs``/``vr``) from the schedule's plan.
         """
         mode = self.policy.feedback
         if mode == "none":
             out, _, ctx = self.fw(y)
             return out, fw_st, ctx
-        send_sl = _gather(fw_st["send"], jc_s, ids_s, mode)
+        v = self.virtual_stages
+        send_sl = _gather(fw_st["send"], meta["ks"], meta["jc_s"],
+                          meta["ids_s"], mode, v)
         payload, _, new_send = self.pack_fw_message(y, send_sl)
-        moved = jax.lax.ppermute(payload, self.axis, self.perm_fw)
-        recv_sl = (_gather(fw_st["recv"], jc_r, ids_r, mode)
+        moved = self._hop(payload, self.perm_fw)
+        recv_sl = (_gather(fw_st["recv"], meta["kr"], meta["jc_r"],
+                           meta["ids_r"], mode, v)
                    if needs_recv_mirror(mode) else None)
         out, new_recv = self.unpack_fw_message(moved, y.shape, y.dtype,
                                                recv_sl)
         new_st = {
-            "send": _scatter(fw_st["send"], jc_s, ids_s, mode,
-                             new_send, send_sl, vs),
+            "send": _scatter(fw_st["send"], meta["ks"], meta["jc_s"],
+                             meta["ids_s"], mode, v,
+                             new_send, send_sl, meta["vs"]),
             "recv": (fw_st["recv"] if new_recv is None else
-                     _scatter(fw_st["recv"], jc_r, ids_r, mode,
-                              new_recv, recv_sl, vr)),
+                     _scatter(fw_st["recv"], meta["kr"], meta["jc_r"],
+                              meta["ids_r"], mode, v,
+                              new_recv, recv_sl, meta["vr"])),
         }
         return out, new_st, None
 
@@ -326,18 +372,19 @@ class PipelineTransport(Transport):
                                  jnp.float32).astype(g.dtype)
             return g_out, bw_buf
         payload = self._bw_codec.pack(g, self.policy.bw.k_frac)
-        moved = jax.lax.ppermute(payload, self.axis, self.perm_bw)
+        moved = self._hop(payload, self.perm_bw)
         return self._bw_codec.unpack(moved, g.shape, g.dtype), bw_buf
 
-    def bw_hop(self, g, bw_send_sl, bw_recv_sl, vs, vr, ctx):
+    def bw_hop(self, g, bw_send_sl, bw_recv_sl, meta, ctx):
         """Feedback-compensated backward hop (runs inside ``send``'s VJP).
 
-        Device d sends the gradient of its RECEIVED activation (cut d-1,
-        microbatch ``jc_r``, buffer slice ``bw_send_sl``) and receives the
-        gradient of its SENT activation (cut d, microbatch ``jc_s``, mirror
-        slice ``bw_recv_sl``).  Returns ``(g_y, new_send_sl, new_recv_sl)``
-        where the slice updates are masked cotangent CONTRIBUTIONS (zero on
-        invalid steps — the per-step sum reassembles the buffer).
+        Device d sends the gradient of its RECEIVED activation (the cut
+        below the chunk it computes NEXT tick — slot ``[kr, jc_r]``,
+        buffer slice ``bw_send_sl``) and receives the gradient of its SENT
+        activation (cut ``[ks, jc_s]``, mirror slice ``bw_recv_sl``).
+        Returns ``(g_y, new_send_sl, new_recv_sl)`` where the slice
+        updates are masked cotangent CONTRIBUTIONS (zero on invalid steps
+        — the per-step sum reassembles the buffer).
         """
         mode = self.policy.bw_feedback
         if mode == "none" or self.policy.reuse_indices:
@@ -346,33 +393,36 @@ class PipelineTransport(Transport):
             new_recv = jnp.zeros_like(bw_recv_sl)
         else:
             payload, new_send = self.pack_bw_message(g, bw_send_sl)
-            moved = jax.lax.ppermute(payload, self.axis, self.perm_bw)
+            moved = self._hop(payload, self.perm_bw)
             g_y, new_recv = self.unpack_bw_message(
                 moved, g.shape, g.dtype,
                 bw_recv_sl if needs_recv_mirror(mode) else None)
-            new_send = jnp.where(vr, new_send, 0.0).astype(bw_send_sl.dtype)
+            new_send = jnp.where(meta["vr"], new_send,
+                                 0.0).astype(bw_send_sl.dtype)
             new_recv = (jnp.zeros_like(bw_recv_sl) if new_recv is None else
-                        jnp.where(vs, new_recv, 0.0).astype(
+                        jnp.where(meta["vs"], new_recv, 0.0).astype(
                             bw_recv_sl.dtype))
         # Without feedback a garbage-path payload is C(0) = 0 and dies on
         # its own; a COMPENSATED message is C(0 + e) != 0 — the buffer
-        # leaks onto fill/drain paths and the ring wrap-around.  Mask the
-        # received gradient by this stage's own step validity (``vs``: the
-        # microbatch whose gradient lands here) and by not being the last
-        # stage (whose real cotangent comes from the loss through ``outs``,
-        # never from the ring).
-        is_last = jax.lax.axis_index(self.axis) == self.num_stages - 1
-        g_y = jnp.where(vs & ~is_last, g_y, jnp.zeros_like(g_y))
+        # leaks onto fill/drain paths and garbage ring hops.  Mask the
+        # received gradient by this tick's own validity (``vs``: the
+        # microbatch whose gradient lands here) and by not being the LAST
+        # LOGICAL STAGE (whose real cotangent comes from the loss through
+        # ``outs``, never from the ring).
+        g_y = jnp.where(meta["vs"] & ~meta["last"], g_y, jnp.zeros_like(g_y))
         return g_y, new_send, new_recv
 
     def make_send(self, fw_template=None) -> Callable:
-        """``send(y, fw_st, ...)``: the differentiable wire hop — fw hop in
-        the primal (returning the updated fw buffers for the scan carry),
-        bw hop on the cotangent (returning the bw buffer updates as the
-        cotangents of the ``bw_*_sl`` slice arguments).
+        """``send(y, fw_st, bw_send_sl, bw_recv_sl, meta)``: the
+        differentiable wire hop — fw hop in the primal (returning the
+        updated fw buffers for the scan carry), bw hop on the cotangent
+        (returning the bw buffer updates as the cotangents of the
+        ``bw_*_sl`` slice arguments).
 
         ``fw_template``: ShapeDtypeStructs of the local fw state (for zero
-        cotangents) — default size-0 (no feedback).
+        cotangents) — default size-0 (no feedback).  ``meta`` is the
+        integer/bool bookkeeping pytree from the schedule plan; its
+        cotangents are float0.
         """
         transport = self
         fw_template = fw_template or {
@@ -380,31 +430,24 @@ class PipelineTransport(Transport):
             "recv": jax.ShapeDtypeStruct((0,), jnp.float32)}
 
         @jax.custom_vjp
-        def send(y, fw_st, bw_send_sl, bw_recv_sl, ids_s, ids_r,
-                 jc_s, jc_r, vs, vr):
-            out, new_fw, _ = transport.fw_hop(y, fw_st, ids_s, ids_r,
-                                              jc_s, jc_r, vs, vr)
+        def send(y, fw_st, bw_send_sl, bw_recv_sl, meta):
+            out, new_fw, _ = transport.fw_hop(y, fw_st, meta)
             return out, new_fw
 
-        def send_fwd(y, fw_st, bw_send_sl, bw_recv_sl, ids_s, ids_r,
-                     jc_s, jc_r, vs, vr):
-            out, new_fw, ctx = transport.fw_hop(y, fw_st, ids_s, ids_r,
-                                                jc_s, jc_r, vs, vr)
+        def send_fwd(y, fw_st, bw_send_sl, bw_recv_sl, meta):
+            out, new_fw, ctx = transport.fw_hop(y, fw_st, meta)
             # residuals stay O(slice): never the full fw buffers
-            return (out, new_fw), (bw_send_sl, bw_recv_sl, vs, vr, ctx,
-                                   ids_s, ids_r, jc_s, jc_r)
+            return (out, new_fw), (bw_send_sl, bw_recv_sl, ctx, meta)
 
         def send_bwd(res, cots):
-            bw_send_sl, bw_recv_sl, vs, vr, ctx, ids_s, ids_r, jc_s, jc_r = res
+            bw_send_sl, bw_recv_sl, ctx, meta = res
             g, _g_new_fw = cots          # fw buffers are forward-only state
             g_y, new_bw_send, new_bw_recv = transport.bw_hop(
-                g, bw_send_sl, bw_recv_sl, vs, vr, ctx)
+                g, bw_send_sl, bw_recv_sl, meta, ctx)
             zero_fw = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                                    fw_template)
             return (g_y, zero_fw, new_bw_send, new_bw_recv,
-                    _zeros_f0(ids_s), _zeros_f0(ids_r),
-                    _zeros_f0(jc_s), _zeros_f0(jc_r),
-                    _zeros_f0(vs), _zeros_f0(vr))
+                    jax.tree.map(_zeros_f0, meta))
 
         send.defvjp(send_fwd, send_bwd)
         return send
@@ -418,37 +461,77 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x, mesh: Mesh,
                    axis: str, *, policy: Optional[BoundaryPolicy] = None,
                    scheme: Optional[str] = None, k_frac: float = 0.1,
                    microbatches: Optional[int] = None,
+                   schedule: Union[str, Schedule] = "gpipe",
+                   virtual_stages: Optional[int] = None,
                    fw_state=None, bw_state=None, ids=None):
-    """Run ``stage_fn(stage_params, x) -> x`` as an S-stage GPipe pipeline
+    """Run ``stage_fn(stage_params, x) -> x`` as a pipelined stage stack
     over mesh axis ``axis``, ppermute-ing PACKED payloads between stages —
     differentiable end to end (compressed gradient payloads hop backward).
 
-    params_stacked: pytree with leading dim S (one slice per stage), sharded
-    so stage s lives on axis index s.  x: (B, ...) global batch; microbatch
-    count defaults to S (minimum-bubble GPipe).  ``policy`` (a
+    params_stacked: pytree with leading dim ``S * v`` in LOGICAL stage
+    order (one slice per stage; ``v = virtual_stages``, 1 unless the
+    schedule is interleaved).  Logical stage ``l`` runs on device
+    ``l % S`` (round-robin), so with ``v == 1`` slice ``s`` simply lives
+    on device ``s``.  x: (B, ...) global batch.  ``policy`` (a
     :class:`BoundaryPolicy`) or ``scheme`` (a codec name) selects the wire
     format; every cut uses the same policy (SPMD: one program).
 
+    ``schedule`` picks the pipeline schedule (``"gpipe"`` | ``"1f1b"`` |
+    ``"interleaved"``, or a :class:`~repro.transport.schedules.Schedule`
+    instance); ``microbatches`` defaults to the stage count and must be
+    positive when given (the interleaved schedule additionally requires it
+    to be a multiple of S).
+
     Feedback state: when the policy carries EF/EF21/EF-mixed/AQ-SGD
     buffers, pass ``fw_state``/``bw_state`` from
-    :func:`init_feedback_state` (and ``ids``: (B,) example ids for AQ-SGD).
-    The return value becomes ``(out, new_fw_state)`` and the updated
-    backward buffers arrive as the COTANGENT of ``bw_state`` (take ``grad``
-    w.r.t. it — see train/steps.py).  Passing size-0 state with
-    ``feedback='none'`` is allowed (it rides the carry untouched), so the
-    calling convention can be policy-independent.
+    :func:`init_feedback_state` (built with the same ``virtual_stages``,
+    and ``ids``: (B,) example ids for AQ-SGD).  The return value becomes
+    ``(out, new_fw_state)`` and the updated backward buffers arrive as the
+    COTANGENT of ``bw_state`` (take ``grad`` w.r.t. it — see
+    train/steps.py).  Passing size-0 state with ``feedback='none'`` is
+    allowed (it rides the carry untouched), so the calling convention can
+    be policy-independent.
     """
     if policy is None:
         policy = _policy_for_scheme(scheme or "none", k_frac)
     s_stages = mesh.shape[axis]
-    transport = PipelineTransport(policy, axis, s_stages)
+    sched = as_schedule(schedule, virtual_stages)
+    v = sched.virtual_stages
+    transport = PipelineTransport(policy, axis, s_stages,
+                                  virtual_stages=v, fused=sched.fused_wire)
 
-    mb = microbatches or s_stages
+    if microbatches is None:
+        mb = s_stages
+    else:
+        if not isinstance(microbatches, (int, np.integer)) \
+                or microbatches <= 0:
+            raise ValueError(
+                f"microbatches must be a positive int, got "
+                f"{microbatches!r} — pass None (or omit it) to default to "
+                f"the stage count")
+        mb = int(microbatches)
+    sched.validate(mb, s_stages)
     b = x.shape[0]
     if b % mb:
         raise ValueError(f"batch {b} is not divisible by microbatch count "
                          f"{mb} (defaults to the stage count)")
     mbsz = b // mb
+
+    lead = {a.shape[0] for a in jax.tree.leaves(params_stacked)}
+    if lead != {s_stages * v}:
+        raise ValueError(
+            f"params_stacked must have leading dim num_stages * "
+            f"virtual_stages = {s_stages}*{v} = {s_stages * v} (logical "
+            f"stage slices); got leading dims {sorted(lead)}")
+    if v > 1:
+        # logical order -> device-major order: device d's contiguous block
+        # (rows d*v .. d*v+v-1 under the P(axis) shard) holds its chunks
+        # k = 0..v-1, i.e. logical stages d, d+S, ..., d+(v-1)S.
+        order = np.array([k * s_stages + d
+                          for d in range(s_stages) for k in range(v)])
+        params_dev = jax.tree.map(lambda a: a[order], params_stacked)
+    else:
+        params_dev = params_stacked
 
     with_state = fw_state is not None or bw_state is not None
     if (policy.needs_fw_buffer or policy.needs_bw_buffer) and not with_state:
@@ -470,62 +553,61 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x, mesh: Mesh,
         lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), fw_state)
     send = transport.make_send(local_fw)
     bw_mode = policy.bw_feedback
+    stage = jax.checkpoint(stage_fn) if sched.remat_ticks else stage_fn
+    n_steps = sched.num_ticks(mb, s_stages)
 
     def body(params_local, x_local, fw_st, bw_st, ids_all):
-        # params_local: this stage's slice (leading dim 1); x_local: (mb, ...)
-        params_local = jax.tree.map(lambda a: a[0], params_local)
+        # params_local: this device's chunk stack (leading dim v);
+        # x_local: (mb, ...)
+        if v == 1:
+            params_local = jax.tree.map(lambda a: a[0], params_local)
         fw_st = jax.tree.map(lambda a: a[0], fw_st)
         bw_st = jax.tree.map(lambda a: a[0], bw_st)
         idx = jax.lax.axis_index(axis)
-        n_steps = mb + s_stages - 1
         buf = jnp.zeros(feat_shape, x_local.dtype)
         outs = jnp.zeros_like(x_local)
 
         def step(carry, t):
             buf, outs, fw_st = carry
-            # stage 0 injects microbatch t; others consume the hop buffer
-            inject = jnp.clip(t, 0, mb - 1)
-            x_in = jnp.where(idx == 0, x_local[inject], buf)
-            y = stage_fn(params_local, x_in)
-            # microbatch bookkeeping for this step's send/receive sides:
-            # stage idx computes (and fw-sends / bw-receives) microbatch
-            # t-idx and fw-receives / bw-sends microbatch t-idx+1
-            j_s = t - idx
-            j_r = j_s + 1
-            vs = (j_s >= 0) & (j_s < mb)
-            vr = (j_r >= 0) & (j_r < mb)
-            jc_s = jnp.clip(j_s, 0, mb - 1)
-            jc_r = jnp.clip(j_r, 0, mb - 1)
-            ids_s = ids_all[jc_s]
-            ids_r = ids_all[jc_r]
+            pl = sched.plan(t, idx, mb, s_stages)       # compute/send side
+            pn = sched.plan(t + 1, idx, mb, s_stages)   # next tick's input
+            # logical stage 0 injects from the host batch; everyone else
+            # consumes the payload that arrived on the ring last tick
+            x_in = jnp.where(pl.inject, x_local[pl.jc], buf)
+            p_t = (params_local if v == 1 else
+                   jax.tree.map(lambda a: a[pl.k], params_local))
+            y = stage(p_t, x_in)
+            meta = {"jc_s": pl.jc, "jc_r": pn.jc, "ks": pl.k, "kr": pn.k,
+                    "ids_s": ids_all[pl.jc], "ids_r": ids_all[pn.jc],
+                    "vs": pl.valid, "vr": pn.valid, "last": pl.last}
             # bw buffer slices gather OUTSIDE send: their cotangents
             # scatter-add the per-step updates back into the full buffers
             bss = (bw_st["send"] if bw_mode == "none"
-                   else bw_st["send"][jc_r])
+                   else _gather(bw_st["send"], pn.k, pn.jc, meta["ids_r"],
+                                bw_mode, v))
             brs = (bw_st["recv"] if not needs_recv_mirror(bw_mode)
-                   else bw_st["recv"][jc_s])
-            buf, fw_st = send(y, fw_st, bss, brs, ids_s, ids_r,
-                              jc_s, jc_r, vs, vr)
-            # the LAST stage's y at step t is microbatch t - (S-1)
-            emit = jnp.clip(t - (s_stages - 1), 0, mb - 1)
-            outs = jnp.where(t >= s_stages - 1, outs.at[emit].set(y), outs)
+                   else _gather(bw_st["recv"], pl.k, pl.jc, meta["ids_s"],
+                                bw_mode, v))
+            buf, fw_st = send(y, fw_st, bss, brs, meta)
+            # the LAST LOGICAL STAGE's valid y is a pipeline output
+            outs = jnp.where(pl.last & pl.valid, outs.at[pl.jc].set(y), outs)
             return (buf, outs, fw_st), None
 
         (_, outs, fw_st), _ = jax.lax.scan(
             step, (buf, outs, fw_st), jnp.arange(n_steps))
-        # only the LAST stage holds the pipeline output; return it stage-
+        # only the LAST device holds the pipeline output; return it stage-
         # stacked (out_specs P(axis)) so the global slice [-1] is exactly
-        # that stage's buffer — transposition-unambiguous (the cotangent
-        # lands on stage S-1 alone, no psum involved).
+        # that device's buffer — transposition-unambiguous (the cotangent
+        # lands on device S-1 alone, no psum involved).
         return outs[None], jax.tree.map(lambda a: a[None], fw_st)
 
-    pspec = jax.tree.map(lambda _: P(axis), params_stacked)
+    pspec = jax.tree.map(lambda _: P(axis), params_dev)
     st_spec = lambda st: jax.tree.map(lambda _: P(axis), st)
     out, new_fw = _shard_map(
         body, mesh,
         (pspec, P(), st_spec(fw_state), st_spec(bw_state), P()),
         (P(axis), st_spec(fw_state)),
-    )(params_stacked, x_mb, fw_state, bw_state, ids_mb)
+    )(params_dev, x_mb, fw_state, bw_state, ids_mb)
     out = out[-1].reshape(b, *x.shape[1:])
     if with_state:
         return out, new_fw
@@ -534,9 +616,12 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x, mesh: Mesh,
 
 def pipeline_forward(stage_fn, params_stacked, x, mesh, axis, *,
                      scheme: str = "none", k_frac: float = 0.1,
-                     microbatches: Optional[int] = None):
+                     microbatches: Optional[int] = None,
+                     schedule: Union[str, Schedule] = "gpipe",
+                     virtual_stages: Optional[int] = None):
     """Original forward-only entry point (now differentiable too): the
     scheme compresses BOTH directions symmetrically."""
     return pipeline_apply(stage_fn, params_stacked, x, mesh, axis,
                           scheme=scheme, k_frac=k_frac,
-                          microbatches=microbatches)
+                          microbatches=microbatches, schedule=schedule,
+                          virtual_stages=virtual_stages)

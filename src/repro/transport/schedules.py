@@ -1,0 +1,240 @@
+"""Pipeline schedules: who computes which microbatch at which tick.
+
+The compressed pipeline (transport/pipeline.py) runs as ONE ``lax.scan``
+inside ``shard_map``: at every tick each device computes one (virtual)
+stage slice for one microbatch and the packed boundary payload hops one
+ring position.  A :class:`Schedule` owns exactly that bookkeeping — the
+per-tick plan (which virtual chunk / microbatch each device computes,
+injection/emission points, validity masks for the fill/drain garbage
+paths) plus the analytic cost model (bubble fraction, in-flight stash,
+wire cuts per microbatch) the benchmarks report.
+
+Three schedules ship:
+
+  * ``gpipe``       — the minimum-tick GPipe skew scan (PR-1 semantics,
+                      bit-identical lowering to the pre-schedule code).
+  * ``1f1b``        — same cut structure and microbatch order as GPipe
+                      (in the scan+autodiff execution model the backward
+                      ordering is fixed by scan transposition, so 1F1B's
+                      fw math is GPipe's — losses match step-for-step by
+                      construction), but with the two mechanics that make
+                      ``microbatches >> stages`` practical: the per-tick
+                      stage body is rematerialized (``jax.checkpoint``) so
+                      the autodiff stash holds only the boundary tensors
+                      instead of every stage-internal residual, and each
+                      hop's packed payload leaves are FUSED into a single
+                      contiguous byte buffer so every steady-state tick
+                      costs ONE collective launch per direction instead of
+                      one per payload leaf (q8: 3 -> 1; EF-mixed: 6 -> 1).
+  * ``interleaved`` — Megatron-style virtual stages: each device holds
+                      ``v`` round-robin stage slices (device d owns
+                      logical stages d, d+S, ..., d+(v-1)S), every cut is
+                      a wire cut, and the fill/drain bubble shrinks from
+                      (S-1)/(mb+S-1) to (S-1)/(v*mb+S-1) — while the
+                      number of compressed cuts per microbatch grows from
+                      S-1 to v*S-1, the regime where the paper's codecs
+                      pay for themselves.
+
+The per-tick plan is one closed-form map.  With ``u = t - d`` (the skew
+coordinate of device ``d`` at tick ``t``), ``S`` devices and ``v`` virtual
+chunks, microbatches advance in groups of ``S``:
+
+    g = u // (S*v)        # microbatch group
+    k = (u % (S*v)) // S  # virtual chunk computed this tick
+    r = u % S             # position within the group
+    j = g*S + r           # microbatch index
+    logical stage computed = k*S + d
+
+For ``v == 1`` this degenerates to the GPipe skew ``j = t - d``.  The
+invariant that makes one carry buffer suffice for every schedule: the
+sender (device d-1, tick t-1) and the receiver (device d, tick t) share
+the same ``u``, hence the same ``(k, j)`` — the payload arriving on the
+ring is always the input for the CURRENT tick's compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TickPlan:
+    """Device-local bookkeeping for one scan tick (all fields traced).
+
+    ``k``/``j`` are the virtual chunk / microbatch this device computes
+    (``jc`` clipped into range for safe gathers); ``valid`` masks the
+    fill/drain garbage paths; ``inject`` marks logical stage 0 (input
+    comes from the host batch, not the wire); ``last`` marks the final
+    logical stage (output is emitted, and its cotangent comes from the
+    loss — never from the ring).
+    """
+    k: jnp.ndarray
+    j: jnp.ndarray
+    jc: jnp.ndarray
+    valid: jnp.ndarray
+    inject: jnp.ndarray
+    last: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """A pipeline schedule: per-tick plan + analytic cost model.
+
+    ``virtual_stages`` — stage slices per device (v); params carry
+    ``S * v`` logical slices.  ``fused_wire`` — pack each hop's payload
+    pytree into one contiguous uint8 buffer (one collective launch per
+    direction per tick).  ``remat_ticks`` — ``jax.checkpoint`` the
+    per-tick stage body so autodiff stashes only boundary tensors.
+    """
+    name: str = "gpipe"
+    virtual_stages: int = 1
+    fused_wire: bool = False
+    remat_ticks: bool = False
+
+    # -- validation ---------------------------------------------------------
+
+    def validate(self, microbatches: int, num_stages: int) -> None:
+        v = self.virtual_stages
+        if v < 1:
+            raise ValueError(f"virtual_stages must be >= 1, got {v}")
+        if v > 1 and microbatches % num_stages:
+            raise ValueError(
+                f"the interleaved schedule advances microbatches in groups "
+                f"of the stage count: microbatches={microbatches} must be "
+                f"divisible by num_stages={num_stages}")
+
+    # -- per-tick plan ------------------------------------------------------
+
+    def num_ticks(self, microbatches: int, num_stages: int) -> int:
+        """Scan length: every (microbatch, logical stage) pair computes
+        exactly once, plus the S-1 fill skew."""
+        return self.virtual_stages * microbatches + num_stages - 1
+
+    def plan(self, t, d, microbatches: int, num_stages: int) -> TickPlan:
+        """The plan for device ``d`` at tick ``t`` (``t``/``d`` traced)."""
+        s, v = num_stages, self.virtual_stages
+        u = t - d
+        if v == 1:
+            k = jnp.int32(0)
+            j = u
+        else:
+            sv = s * v
+            g = jnp.floor_divide(u, sv)
+            w = u - g * sv
+            k = jnp.floor_divide(w, s)
+            j = g * s + (w - k * s)
+        valid = (u >= 0) & (j >= 0) & (j < microbatches)
+        jc = jnp.clip(j, 0, microbatches - 1)
+        return TickPlan(
+            k=jnp.asarray(k, jnp.int32), j=j, jc=jc, valid=valid,
+            inject=(d == 0) & (k == 0),
+            last=(d == s - 1) & (k == v - 1))
+
+    # -- analytic cost model (benchmarks/pipeline_wire.py) ------------------
+
+    def bubble_fraction(self, microbatches: int, num_stages: int) -> float:
+        """Idle fraction of the fill/drain skew: (S-1)/(v*mb + S-1)."""
+        return (num_stages - 1) / self.num_ticks(microbatches, num_stages)
+
+    def wire_cuts(self, num_stages: int) -> int:
+        """Compressed cuts one microbatch crosses, per direction."""
+        return self.virtual_stages * num_stages - 1
+
+    def stash_microbatches(self, microbatches: int, num_stages: int) -> int:
+        """In-flight activation stash per device of the IDEALIZED schedule
+        (microbatches resident between their fw and bw), the paper-model
+        number the benchmark tabulates.  GPipe stashes the full batch;
+        1F1B bounds it at S; interleaved at S*v.  (The scan+autodiff
+        realization approaches the GPipe bound unless ``remat_ticks``
+        shrinks each stashed tick to its boundary tensors.)"""
+        return microbatches
+
+    def describe(self, microbatches: int, num_stages: int) -> dict:
+        return {
+            "schedule": self.name,
+            "virtual_stages": self.virtual_stages,
+            "fused_wire": self.fused_wire,
+            "remat_ticks": self.remat_ticks,
+            "ticks": self.num_ticks(microbatches, num_stages),
+            "bubble_fraction": round(
+                self.bubble_fraction(microbatches, num_stages), 4),
+            "wire_cuts_per_microbatch": self.wire_cuts(num_stages),
+            # the IDEALIZED schedule's bound (see stash_microbatches) —
+            # the scan+autodiff realization stashes all mb boundary
+            # tensors, remat_ticks only shrinks what each tick stashes
+            "idealized_stash_microbatches": self.stash_microbatches(
+                microbatches, num_stages),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class GPipeSchedule(Schedule):
+    name: str = "gpipe"
+
+    def validate(self, microbatches: int, num_stages: int) -> None:
+        if self.virtual_stages != 1:
+            raise ValueError("gpipe runs one stage slice per device; use "
+                             "schedule='interleaved' for virtual stages")
+
+
+@dataclasses.dataclass(frozen=True)
+class OneFOneBSchedule(Schedule):
+    name: str = "1f1b"
+    fused_wire: bool = True
+    remat_ticks: bool = True
+
+    def validate(self, microbatches: int, num_stages: int) -> None:
+        if self.virtual_stages != 1:
+            raise ValueError("1f1b runs one stage slice per device; use "
+                             "schedule='interleaved' for virtual stages")
+
+    def stash_microbatches(self, microbatches: int, num_stages: int) -> int:
+        # warmup fills S microbatches; steady state retires one per
+        # injection, so the stash never exceeds the stage count.
+        return min(microbatches, num_stages)
+
+
+@dataclasses.dataclass(frozen=True)
+class InterleavedSchedule(Schedule):
+    name: str = "interleaved"
+    virtual_stages: int = 2
+    fused_wire: bool = True
+    remat_ticks: bool = True
+
+    def stash_microbatches(self, microbatches: int, num_stages: int) -> int:
+        return min(microbatches, num_stages) * self.virtual_stages
+
+
+SCHEDULES = {
+    "gpipe": GPipeSchedule,
+    "1f1b": OneFOneBSchedule,
+    "interleaved": InterleavedSchedule,
+}
+
+
+def get_schedule(name: str, virtual_stages: Optional[int] = None) -> Schedule:
+    """Look up a schedule by name, optionally overriding ``virtual_stages``
+    (only meaningful for ``interleaved``; the others reject v > 1)."""
+    try:
+        cls = SCHEDULES[name]
+    except KeyError:
+        raise ValueError(f"unknown schedule {name!r}; "
+                         f"known: {sorted(SCHEDULES)}") from None
+    if virtual_stages is None:
+        return cls()
+    return cls(virtual_stages=virtual_stages)
+
+
+def as_schedule(schedule: Union[str, Schedule],
+                virtual_stages: Optional[int] = None) -> Schedule:
+    """Normalize a ``schedule=`` argument (name or instance)."""
+    if isinstance(schedule, Schedule):
+        if virtual_stages is not None and \
+                virtual_stages != schedule.virtual_stages:
+            raise ValueError(
+                f"virtual_stages={virtual_stages} conflicts with the "
+                f"schedule instance's {schedule.virtual_stages}")
+        return schedule
+    return get_schedule(schedule, virtual_stages)

@@ -196,9 +196,11 @@ class TestTrainDriver:
         assert os.path.exists(ck)
 
     def test_gradient_accumulation_matches_single_batch(self):
-        """microbatches=2 must give (numerically close) the same update
+        """grad_accum=2 must give (numerically close) the same update
         as one full batch — the accumulation preserves the paper's
-        per-example semantics."""
+        per-example semantics.  The deprecated ``microbatches=`` alias
+        still selects accumulation (with a DeprecationWarning)."""
+        import warnings
         from repro.configs.registry import get
         from repro.models import transformer
         from repro.optim.optimizers import OptimizerConfig, init_opt_state
@@ -215,7 +217,7 @@ class TestTrainDriver:
         outs = []
         for mb in (1, 2):
             step = make_lm_train_step(cfg, NO_POLICY, opt, remat=False,
-                                      donate=False, microbatches=mb)
+                                      donate=False, grad_accum=mb)
             p, _, _, m = step(params, init_opt_state(opt, params), [],
                               batch, ids)
             outs.append((jax.tree.leaves(p)[0].astype(jnp.float32),
@@ -223,6 +225,17 @@ class TestTrainDriver:
         assert abs(outs[0][1] - outs[1][1]) < 0.05
         np.testing.assert_allclose(np.asarray(outs[0][0]),
                                    np.asarray(outs[1][0]), atol=0.02)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            step = make_lm_train_step(cfg, NO_POLICY, opt, remat=False,
+                                      donate=False, microbatches=2)
+            assert any(issubclass(x.category, DeprecationWarning)
+                       for x in w), w
+        p, _, _, m = step(params, init_opt_state(opt, params), [],
+                          batch, ids)
+        np.testing.assert_allclose(
+            np.asarray(jax.tree.leaves(p)[0].astype(jnp.float32)),
+            np.asarray(outs[1][0]), atol=1e-6)
 
     def test_serve_main_runs(self):
         from repro.launch.serve import main
