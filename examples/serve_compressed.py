@@ -1,10 +1,12 @@
-"""Batched serving with boundary compression (paper finding F3 at serve
-time).
+"""Continuous-batching serving with boundary compression (paper finding F3
+at serve time).
 
-Spins up the ServeEngine on a reduced Mixtral-style MoE config with the
-Top-10% boundary policy, serves a batch of greedy-decode requests with
-compression ON, then the same requests with compression OFF, and shows the
-generations diverge — compression is part of the trained model's function.
+Streams a mixed-length batch of requests through the ContinuousEngine's
+submit()/step()/drain() API on a reduced Mixtral-style MoE config with the
+Top-10% boundary policy — each stage cut packs/unpacks the real TopK wire
+payload — first with compression ON, then the same requests with
+compression OFF, and shows the generations diverge: compression is part of
+the trained model's function.
 
 Run:  PYTHONPATH=src python examples/serve_compressed.py
 """
@@ -14,26 +16,34 @@ import jax
 from repro.configs.registry import get
 from repro.core.policy import CompressionPolicy, topk_policy
 from repro.models import transformer
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import ContinuousEngine
 
 cfg = get("mixtral-8x7b", smoke=True)
 policy = CompressionPolicy(num_stages=4, boundary=topk_policy(0.10))
 params = transformer.init_params(jax.random.PRNGKey(0), cfg)
 
 rng = np.random.RandomState(0)
-prompts = [rng.randint(0, min(cfg.vocab_size, 512), 24).astype(np.int32)
-           for _ in range(4)]
+# mixed prompt lengths + mixed decode budgets: the scheduler packs them
+prompts = [rng.randint(0, min(cfg.vocab_size, 512), n).astype(np.int32)
+           for n in (24, 9, 17, 5)]
+news = (16, 6, 10, 12)
 
 outs = {}
 for compress in (True, False):
-    engine = ServeEngine(params, cfg, policy, compress=compress,
-                         max_batch=4, max_seq=128)
-    reqs = engine.generate([Request(p.copy(), 16) for p in prompts])
-    probe = engine.throughput_probe(4, 24, 16)
-    outs[compress] = [r.out for r in reqs]
-    print(f"compress={compress}: {probe['tok_per_s']:.1f} tok/s")
-    for i, r in enumerate(reqs[:2]):
-        print(f"  req{i} -> {r.out.tolist()}")
+    engine = ContinuousEngine(params, cfg, policy, compress=compress,
+                              num_slots=2, max_seq=128)
+    engine.warmup()
+    for p, n in zip(prompts, news):
+        engine.submit(p.copy(), max_new_tokens=n)
+    done = {r.req_id: r for r in engine.drain()}
+    outs[compress] = [done[i].out for i in range(len(prompts))]
+    stats = engine.stats()
+    print(f"compress={compress}: util={stats['slot_utilization']} "
+          f"mean_ttft={stats['mean_ttft_s']}s "
+          f"wire bytes/token={stats['boundary_bytes_per_tok']}")
+    for i in range(2):
+        print(f"  req{i} ({done[i].metrics()['new_tokens']} toks) "
+              f"-> {done[i].out.tolist()}")
 
 same = all(np.array_equal(a, b) for a, b in zip(outs[True], outs[False]))
 print(f"generations identical with/without compression: {same}")

@@ -3,6 +3,21 @@
 No orbax offline; .npz keeps it dependency-free and deterministic.  Keys are
 "/"-joined pytree paths; dtypes (incl. bf16 via uint16 view) round-trip
 exactly.
+
+Two formats share the machinery:
+
+  * params-only  — ``save(path, params)``: flat keys ``embed/...`` (what
+    PR-0..3 trainers wrote; serve-time restore still reads it).
+  * train-state  — ``save_train_state(path, ...)``: one tree
+    ``{"params", "opt", "bstates"}`` covering the model, optimizer moments,
+    and the boundary feedback buffers, so ``--resume`` reproduces the exact
+    training trajectory (error-feedback state is part of the trajectory).
+
+``restore`` restores the subset of keys named by ``like`` — extra keys in
+the file are ignored (that is how ``restore_params`` pulls just the params
+out of a train-state file).  Missing or shape-mismatched keys raise a
+:class:`CheckpointMismatch` listing every missing, extra, and mismatched
+key at once, instead of dying on the first bad leaf.
 """
 from __future__ import annotations
 
@@ -13,6 +28,10 @@ from typing import Any, Dict, Tuple
 import numpy as np
 import jax
 import jax.numpy as jnp
+
+
+class CheckpointMismatch(ValueError):
+    """The checkpoint's keys/shapes do not cover the requested pytree."""
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -35,8 +54,7 @@ def save(path: str, tree, step: int = 0, extra: dict = None) -> None:
     np.savez(path, __meta__=json.dumps(meta), **flat)
 
 
-def restore(path: str, like) -> Tuple[Any, int]:
-    """Restore into the structure of ``like`` (same pytree as saved)."""
+def _load_flat(path: str) -> Tuple[Dict[str, np.ndarray], dict]:
     data = np.load(path if path.endswith(".npz") else path + ".npz",
                    allow_pickle=False)
     meta = json.loads(str(data["__meta__"]))
@@ -48,14 +66,89 @@ def restore(path: str, like) -> Tuple[Any, int]:
             flat[k[:-5]] = data[k].view(jnp.bfloat16)
         else:
             flat[k] = data[k]
-    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
-    leaves = []
+    return flat, meta
+
+
+def restore(path: str, like, strict: bool = False) -> Tuple[Any, int]:
+    """Restore into the structure of ``like``.
+
+    By default ``like`` may name a SUBSET of the saved keys (extras are
+    ignored — how ``restore_params`` pulls params out of a train-state
+    file); ``strict=True`` additionally requires ``like`` to consume the
+    WHOLE file (train-state resume: a leftover key means the run being
+    resumed was configured differently, and silently dropping its state —
+    e.g. feedback buffers under different ``--stages`` — would fake an
+    exact resume).  A key of ``like`` that is missing from the file, or
+    whose stored shape differs, raises :class:`CheckpointMismatch`
+    listing ALL missing / extra / shape-mismatched keys.
+    """
+    flat, meta = _load_flat(path)
+    leaves_like, _ = jax.tree_util.tree_flatten_with_path(like)
+    wanted, missing, mismatched, leaves = set(), [], [], []
     for path_, leaf in leaves_like:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path_)
-        arr = flat[key]
-        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
-        leaves.append(jnp.asarray(arr))
+        wanted.add(key)
+        arr = flat.get(key)
+        if arr is None:
+            missing.append(key)
+        elif arr.shape != leaf.shape:
+            mismatched.append(f"{key}: saved {arr.shape} != "
+                              f"expected {leaf.shape}")
+        else:
+            leaves.append(jnp.asarray(arr))
+    extra_found = sorted(set(flat) - wanted)
+    if missing or mismatched or (strict and extra_found):
+        extra = extra_found
+
+        def fmt(label, items, limit=8):
+            if not items:
+                return f"  {label}: none"
+            shown = ", ".join(items[:limit])
+            more = f" (+{len(items) - limit} more)" if len(items) > limit \
+                else ""
+            return f"  {label} ({len(items)}): {shown}{more}"
+
+        raise CheckpointMismatch(
+            f"checkpoint {path!r} does not match the requested pytree:\n"
+            + fmt("missing keys", sorted(missing)) + "\n"
+            + fmt("shape mismatches", mismatched) + "\n"
+            + fmt("extra keys in file", extra)
+            + "\n(params-only vs train-state format? see "
+            "checkpoint/io.py docstring)")
     tree = jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), leaves)
     return tree, meta["step"]
+
+
+# ---------------------------------------------------------------------------
+# Train-state format: params + optimizer moments + feedback buffers
+# ---------------------------------------------------------------------------
+
+def save_train_state(path: str, params, opt_state, bstates, step: int = 0,
+                     extra: dict = None) -> None:
+    """One file covering everything ``--resume`` needs (see module doc)."""
+    extra = dict(extra or {})
+    extra["format"] = "train-state"
+    save(path, {"params": params, "opt": opt_state, "bstates": bstates},
+         step=step, extra=extra)
+
+
+def restore_train_state(path: str, params_like, opt_like,
+                        bstates_like) -> Tuple[Any, Any, Any, int]:
+    """Strict: the file must match the expected state EXACTLY — leftover
+    keys mean the checkpointed run used a different configuration (more
+    boundaries, another optimizer), and resuming minus that state would
+    not reproduce its trajectory."""
+    state, step = restore(path, {"params": params_like, "opt": opt_like,
+                                 "bstates": bstates_like}, strict=True)
+    return state["params"], state["opt"], state["bstates"], step
+
+
+def restore_params(path: str, params_like) -> Tuple[Any, int]:
+    """Restore just the model params from EITHER format (serve-time)."""
+    flat, _ = _load_flat(path)
+    if any(k == "params" or k.startswith("params/") for k in flat):
+        state, step = restore(path, {"params": params_like})
+        return state["params"], step
+    return restore(path, params_like)

@@ -82,6 +82,56 @@ def boundary_eval(policy: BoundaryPolicy, x, compress: bool):
     return policy.fw(x) if compress else x
 
 
+def boundary_wire_eval(policy: BoundaryPolicy, x, compress: bool):
+    """Serve-time boundary through the wire-codec registry.
+
+    Unlike :func:`boundary_eval` (the in-process C(x)), this actually packs
+    the stage-cut tensor into the same q8/TopK payload pytree the training
+    pipeline puts on the wire (transport/codecs.py) and unpacks it on the
+    "receiving" stage — a served decode exercises the real byte format.
+
+    Packing is PER REQUEST (vmap over the batch dim): each serving slot is
+    an independent stream on a real wire, so quantization scales are
+    computed per request.  This also keeps a slot's numerics independent of
+    its batch neighbours — the property that makes continuous-batching
+    output bit-identical to solo generation.  TopK is per-example in the
+    codec already; q8/q4 get per-request (rather than per-microbatch)
+    scales, the only difference from the training-time payload.
+    """
+    if not compress or policy.fw.kind == "none":
+        return x
+    from repro.transport.codecs import codec_for
+    codec = codec_for(policy.fw)
+    k_frac = policy.fw.k_frac
+
+    def one(xe):
+        payload = codec.pack(xe[None], k_frac)
+        return codec.unpack(payload, (1,) + xe.shape, xe.dtype)[0]
+
+    return jax.vmap(one)(x)
+
+
+def boundary_wire_bytes_per_token(policy, d_model: int,
+                                  num_cuts: Optional[int] = None) -> float:
+    """Bytes per decoded token crossing the stage cuts of a
+    :class:`~repro.core.policy.CompressionPolicy` (serve metrics).
+
+    ``num_cuts``: the EFFECTIVE cut count — ``segment_bounds`` caps the
+    stage count at the model's group count, so a 4-stage policy on a
+    2-group smoke model has 1 cut, not ``policy.num_boundaries``.
+    Defaults to ``policy.num_boundaries`` when the caller's stack really
+    has that many cuts.
+    """
+    from repro.transport.codecs import codec_for
+    total = 0.0
+    cuts = policy.num_boundaries if num_cuts is None else num_cuts
+    for i in range(cuts):
+        bp = policy.at(i)
+        codec = codec_for(bp.fw)
+        total += codec.wire_bytes_per_elem(d_model, 2, bp.fw.k_frac) * d_model
+    return total
+
+
 # ---------------------------------------------------------------------------
 # State container helpers
 # ---------------------------------------------------------------------------

@@ -1,19 +1,29 @@
-"""Batched serving driver.
+"""Serving driver: static batch or continuous batching.
 
-Loads (or randomly initializes) a registry architecture and serves batched
-greedy-decoding requests through :class:`repro.serve.engine.ServeEngine`,
-with the paper's rule applied: a model trained with boundary compression is
-served with the same compression at inference (finding F3).
+Loads (or randomly initializes) a registry architecture and serves
+generation requests with the paper's rule applied: a model trained with
+boundary compression is served with the same compression at inference
+(finding F3), the stage cuts packing the real wire-codec payloads.
 
-Example:
+Examples:
+  # continuous batching, mixed Zipf-length workload, temperature sampling
   PYTHONPATH=src python -m repro.launch.serve --arch gpt2-small --smoke \
-      --policy top10 --batch 4 --prompt-len 32 --new-tokens 32
+      --engine continuous --policy top10 --slots 4 --requests 16 \
+      --temperature 0.8 --top-k 40
+  # static-batch baseline with the prefill/decode throughput probe
+  PYTHONPATH=src python -m repro.launch.serve --arch gpt2-small --smoke \
+      --engine static --policy top10 --batch 4 --prompt-len 32 \
+      --new-tokens 32
+  # finding-F3 ablation: serve an (EF-)trained model uncompressed
+  PYTHONPATH=src python -m repro.launch.serve --arch gpt2-small --smoke \
+      --engine continuous --policy top10 --no-compress
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+import time
 
 import numpy as np
 import jax
@@ -22,51 +32,122 @@ from repro.checkpoint import io as ckpt_io
 from repro.configs.registry import ARCHS, get
 from repro.launch.train import POLICIES
 from repro.models import encdec, transformer
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import (ContinuousEngine, Request, ServeEngine,
+                                left_pad_unsupported)
+from repro.serve.sampling import SamplingConfig
+
+
+def zipf_lengths(rng, n, lo, hi, a=1.6):
+    """Zipf-distributed lengths in [lo, hi] — the mixed serving workload."""
+    return np.clip(lo + (rng.zipf(a, n) - 1), lo, hi).astype(int)
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gpt2-small", choices=sorted(ARCHS))
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--engine", default=None,
+                    choices=("continuous", "static"),
+                    help="default: continuous where the arch supports it "
+                         "(maskable left-padding), else static")
     ap.add_argument("--policy", default="none", choices=sorted(POLICIES))
     ap.add_argument("--no-compress", action="store_true",
-                    help="serve WITHOUT compression (finding-F3 ablation)")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=32)
+                    help="serve WITHOUT compression (finding-F3 ablation; "
+                         "EF-trained models lose almost nothing here, "
+                         "plain-TopK-trained models degrade)")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="static engine batch size")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="continuous engine decode slots")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="continuous engine: number of requests to serve")
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="static: exact prompt length; continuous: max of "
+                         "the Zipf prompt-length mix")
+    ap.add_argument("--new-tokens", type=int, default=32,
+                    help="static: decode steps; continuous: max of the "
+                         "Zipf max-new-tokens mix")
     ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--eos", type=int, default=None,
+                    help="stop decoding a request at this token id")
     ap.add_argument("--ckpt", default=None, help="restore params from npz")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get(args.arch, smoke=args.smoke)
+    unsupported = left_pad_unsupported(cfg)
+    if args.engine is None:
+        args.engine = "static" if unsupported else "continuous"
+        if unsupported:
+            print(f"# {cfg.arch_id}: {sorted(unsupported)} cannot mask "
+                  f"left-padding -> static engine", flush=True)
+    elif args.engine == "continuous" and unsupported:
+        ap.error(f"--engine continuous: {sorted(unsupported)} cannot mask "
+                 f"left-padding — use --engine static "
+                 f"(equal-length batches)")
     mod = encdec if cfg.enc_dec else transformer
     params = mod.init_params(jax.random.PRNGKey(args.seed), cfg)
     if args.ckpt:
-        params, step = ckpt_io.restore(args.ckpt, params)
+        params, step = ckpt_io.restore_params(args.ckpt, params)
         print(f"# restored step-{step} params from {args.ckpt}", flush=True)
     policy = POLICIES[args.policy]()
-    engine = ServeEngine(params, cfg, policy,
-                         compress=not args.no_compress,
-                         max_batch=args.batch, max_seq=args.max_seq)
-
+    compress = not args.no_compress
     rng = np.random.RandomState(args.seed)
-    reqs = [Request(rng.randint(0, min(cfg.vocab_size, 1024),
-                                args.prompt_len).astype(np.int32),
-                    args.new_tokens)
-            for _ in range(args.batch)]
-    # warmup compile, then measured run
-    engine.generate([Request(reqs[0].prompt.copy(), 2)])
-    probe = engine.throughput_probe(args.batch, args.prompt_len,
-                                    args.new_tokens)
-    print(json.dumps({"arch": cfg.arch_id, "policy": args.policy,
-                      "compress": not args.no_compress, **probe}),
-          flush=True)
-    done = engine.generate(reqs)
-    for i, r in enumerate(done[: min(4, len(done))]):
-        print(f"# req{i}: prompt[-4:]={r.prompt[-4:].tolist()} "
-              f"-> out[:8]={r.out[:8].tolist()}", flush=True)
+
+    if args.engine == "static":
+        if args.temperature or args.top_k or args.top_p < 1.0 \
+                or args.eos is not None:
+            ap.error("--temperature/--top-k/--top-p/--eos need "
+                     "--engine continuous (the static engine decodes "
+                     "greedily to a fixed length)")
+        engine = ServeEngine(params, cfg, policy, compress=compress,
+                             max_batch=args.batch, max_seq=args.max_seq)
+        reqs = [Request(rng.randint(0, min(cfg.vocab_size, 1024),
+                                    args.prompt_len).astype(np.int32),
+                        args.new_tokens)
+                for _ in range(args.batch)]
+        probe = engine.throughput_probe(args.batch, args.prompt_len,
+                                       args.new_tokens)
+        print(json.dumps({"arch": cfg.arch_id, "engine": "static",
+                          "policy": args.policy, "compress": compress,
+                          **probe}), flush=True)
+        done = engine.generate(reqs)
+        for i, r in enumerate(done[: min(4, len(done))]):
+            print(f"# req{i}: prompt[-4:]={r.prompt[-4:].tolist()} "
+                  f"-> out[:8]={r.out[:8].tolist()}", flush=True)
+        return 0
+
+    sampling = SamplingConfig(temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p)
+    engine = ContinuousEngine(params, cfg, policy, compress=compress,
+                              num_slots=args.slots, max_seq=args.max_seq,
+                              sampling=sampling,
+                              max_prompt=args.prompt_len)
+    engine.warmup()
+    plens = zipf_lengths(rng, args.requests, 2, args.prompt_len)
+    news = zipf_lengths(rng, args.requests, 1, args.new_tokens)
+    t0 = time.time()
+    for i in range(args.requests):
+        engine.submit(rng.randint(0, min(cfg.vocab_size, 1024),
+                                  plens[i]).astype(np.int32),
+                      max_new_tokens=int(news[i]), eos_token=args.eos,
+                      seed=args.seed + i)
+    done = engine.drain()
+    wall = time.time() - t0
+    total_new = sum(len(r.tokens) for r in done)
+    print(json.dumps({"arch": cfg.arch_id, "engine": "continuous",
+                      "policy": args.policy, "compress": compress,
+                      "requests": args.requests, "slots": args.slots,
+                      "wall_s": round(wall, 3),
+                      "tok_per_s": round(total_new / wall, 1),
+                      **engine.stats()}), flush=True)
+    for r in sorted(done, key=lambda r: r.req_id)[:4]:
+        print(f"# req{r.req_id}: {json.dumps(r.metrics())} "
+              f"out[:8]={r.out[:8].tolist()}", flush=True)
     return 0
 
 

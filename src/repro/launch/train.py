@@ -57,13 +57,15 @@ POLICIES = {
 
 
 def synthetic_stream(cfg, batch: int, seq: int, seed: int = 0,
-                     num_samples: int = 4096):
+                     num_samples: int = 4096, start_step: int = 0):
     """Deterministic order-2 Markov token stream (see data/synthetic.py),
-    vocab-clipped to the model's vocabulary."""
+    vocab-clipped to the model's vocabulary.  Each step's batch is a pure
+    function of (seed, step), so ``start_step`` fast-forwards the stream —
+    a resumed run sees exactly the batches the interrupted run would have."""
     rng = np.random.RandomState(seed)
     vocab = min(cfg.vocab_size, 1024)
     succ = rng.randint(0, vocab, size=(vocab, vocab, 4))
-    step = 0
+    step = start_step
     while True:
         r = np.random.RandomState(seed + 1 + step)
         out = np.zeros((batch, seq), np.int32)
@@ -139,8 +141,20 @@ def main(argv=None) -> int:
                          "--transport pipeline, for "
                          "--pipeline-microbatches)")
     ap.add_argument("--no-remat", action="store_true")
-    ap.add_argument("--ckpt", default=None)
-    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--ckpt", default=None,
+                    help="checkpoint path (npz); saves the FULL train "
+                         "state: params + optimizer moments + feedback "
+                         "buffers (checkpoint/io.save_train_state).  A "
+                         "'{step}' placeholder keeps one file per save "
+                         "instead of overwriting")
+    ap.add_argument("--save-every", type=int, default=None,
+                    help="checkpoint every N steps (default 100)")
+    ap.add_argument("--ckpt-every", type=int, default=None,
+                    help="DEPRECATED alias for --save-every")
+    ap.add_argument("--resume", default=None,
+                    help="resume from a --ckpt train-state file: restores "
+                         "params, optimizer state, feedback buffers, and "
+                         "the data-stream position")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None, help="write metrics here")
@@ -148,6 +162,16 @@ def main(argv=None) -> int:
 
     cfg = get(args.arch, smoke=args.smoke)
     seq = min(args.seq, cfg.max_seq)
+    save_every = args.save_every
+    if args.ckpt_every is not None:
+        import warnings
+        if save_every is not None:
+            ap.error("--ckpt-every (deprecated) conflicts with "
+                     "--save-every — drop --ckpt-every")
+        warnings.warn("--ckpt-every is deprecated: use --save-every",
+                      DeprecationWarning)
+        save_every = args.ckpt_every
+    save_every = 100 if save_every is None else save_every
     grad_accum = args.grad_accum
     pipeline_mb = args.pipeline_microbatches
     if args.microbatches is not None:
@@ -205,11 +229,18 @@ def main(argv=None) -> int:
             num_samples=args.num_samples, dtype=jnp.bfloat16,
             virtual_stages=virtual_stages)
     else:
+        # boundaries that actually exist in the stack: segment_bounds caps
+        # the stage count at the group count (a 2-group smoke model under a
+        # 4-stage policy has 1 cut, not 3) — and the train step returns
+        # bstates in that effective structure, which --resume restores into
+        from repro.models.transformer import segment_bounds
+        n_units = cfg.num_layers if cfg.enc_dec else cfg.num_groups
+        eff = max(0, len(segment_bounds(n_units, policy.num_stages)) - 1)
         bstates = [init_boundary_state(policy.at(i), (seq, cfg.d_model),
                                        batch=args.batch,
                                        num_samples=args.num_samples,
                                        dtype=jnp.bfloat16)
-                   for i in range(policy.num_boundaries)]
+                   for i in range(eff)]
     if args.transport == "pipeline":
         from repro.transport.schedules import get_schedule
         sched = get_schedule(args.schedule, virtual_stages)
@@ -225,11 +256,19 @@ def main(argv=None) -> int:
                                  schedule=args.schedule,
                                  virtual_stages=virtual_stages)
 
+    start_step = 0
+    if args.resume:
+        params, opt_state, bstates, start_step = \
+            ckpt_io.restore_train_state(args.resume, params, opt_state,
+                                        bstates)
+        print(f"# resumed step-{start_step} train state from {args.resume}",
+              flush=True)
     stream = synthetic_stream(cfg, args.batch, seq, args.seed,
-                              num_samples=args.num_samples)
+                              num_samples=args.num_samples,
+                              start_step=start_step)
     metrics, t0 = [], time.time()
     tokens_per_step = args.batch * seq
-    for step in range(1, args.steps + 1):
+    for step in range(start_step + 1, args.steps + 1):
         toks, ids = next(stream)
         params, opt_state, bstates, m = step_fn(
             params, opt_state, bstates, make_batch(cfg, toks),
@@ -239,18 +278,23 @@ def main(argv=None) -> int:
             loss = float(m["loss"])
             rec = {"step": step, "loss": round(loss, 4),
                    "ppl": round(math.exp(min(loss, 20.0)), 2),
-                   "tok_per_s": round(step * tokens_per_step / dt, 1),
+                   "tok_per_s": round((step - start_step) * tokens_per_step
+                                      / dt, 1),
                    "wall_s": round(dt, 1)}
             metrics.append(rec)
             print(json.dumps(rec), flush=True)
-        if args.ckpt and (step % args.ckpt_every == 0
-                          or step == args.steps):
-            ckpt_io.save(args.ckpt, params, step=step,
-                         extra={"arch": cfg.arch_id, "policy": args.policy})
+        if args.ckpt and (step % save_every == 0 or step == args.steps):
+            ckpt_io.save_train_state(
+                args.ckpt.replace("{step}", str(step)), params, opt_state,
+                bstates, step=step,
+                extra={"arch": cfg.arch_id, "policy": args.policy,
+                       "feedback": args.feedback})
     if args.json:
         with open(args.json, "w") as f:
             json.dump(metrics, f, indent=1)
-    print(f"# done: final loss {metrics[-1]['loss']}", flush=True)
+    print(f"# done: final loss "
+          f"{metrics[-1]['loss'] if metrics else 'n/a (already at --steps)'}",
+          flush=True)
     return 0
 
 

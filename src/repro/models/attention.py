@@ -122,7 +122,9 @@ def init_cache(batch: int, cache_len: int, num_kv_heads: int, head_dim: int,
 def attn_decode(params, x1, cache, pos, *, num_heads, num_kv_heads, head_dim,
                 pos_embed="rope", rope_theta=10_000.0, window=None,
                 attn_softcap=None, pad_len=None):
-    """One-token decode.  x1: (B, 1, d); pos: scalar int32 (current index).
+    """One-token decode.  x1: (B, 1, d); pos: scalar int32 (current index)
+    or (B,) int32 per-slot indices (continuous-batching serve: each batch
+    slot decodes its own request at its own position).
 
     ``window`` set => the cache is a ring buffer of length ``cache["k"].shape[1]
     == window`` and slots hold RoPE-rotated keys at their absolute positions.
@@ -131,27 +133,44 @@ def attn_decode(params, x1, cache, pos, *, num_heads, num_kv_heads, head_dim,
     """
     b = x1.shape[0]
     c = cache["k"].shape[1]
+    pos = jnp.asarray(pos)
+    per_slot = pos.ndim == 1
     q, k, v = _project_qkv(params, x1, num_heads, num_kv_heads, head_dim)
     if pos_embed == "rope":
-        posb = jnp.full((1, 1), pos)
+        posb = pos[:, None] if per_slot else jnp.full((1, 1), pos)
         q = apply_rope(q, posb, rope_theta)
         k = apply_rope(k, posb, rope_theta)
     slot = pos % c if window is not None else pos
-    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                      (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                      (0, slot, 0, 0))
+    if per_slot:
+        # batch-dependent slot index: scatter one row per example
+        batch_ix = jnp.arange(b)
+        ck = cache["k"].at[batch_ix, slot].set(
+            k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[batch_ix, slot].set(
+            v[:, 0].astype(cache["v"].dtype))
+    else:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
     idx = jnp.arange(c)
+    posc = pos[:, None] if per_slot else pos            # (B,1) | scalar
+    slotc = slot[:, None] if per_slot else slot
     if window is None:
-        valid = idx <= pos                              # absolute layout
-        abs_pos = idx
+        valid = idx <= posc                             # absolute layout
+        abs_pos = jnp.broadcast_to(idx, valid.shape) if per_slot else idx
     else:
         # ring layout: slot i holds absolute position p_i where
         # p_i = pos - ((slot - i) mod c); valid iff p_i > pos - window
-        age = (slot - idx) % c
-        valid = age < jnp.minimum(pos + 1, c)
-        abs_pos = pos - age
-    if pad_len is None:
+        age = (slotc - idx) % c
+        valid = age < jnp.minimum(posc + 1, c)
+        abs_pos = posc - age
+    if per_slot:
+        mask = valid                                    # (B, C)
+        if pad_len is not None:
+            mask = mask & (abs_pos >= pad_len[:, None])
+        mask = mask[:, None, None, None, :]             # (B,1,1,1,C)
+    elif pad_len is None:
         mask = valid[None, None, None, :]               # (1,1,1,C) -> bcast
     else:
         # (B,1,1,1,C): batch must align with dim 0 of the (b,kv,g,s,t)

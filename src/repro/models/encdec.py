@@ -18,7 +18,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.boundary import boundary_apply, boundary_eval
+from repro.core.boundary import (boundary_apply, boundary_eval,
+                                 boundary_wire_eval)
 from repro.core.policy import CompressionPolicy, NO_POLICY
 from repro.models import attention as A
 from repro.models.common import (DTYPE, dense_init, embed_init, mlp_apply,
@@ -164,10 +165,14 @@ def forward_train(params, batch, cfg: ModelConfig,
 
 
 def forward_eval(params, batch, cfg: ModelConfig,
-                 policy: CompressionPolicy = NO_POLICY, compress: bool = True):
+                 policy: CompressionPolicy = NO_POLICY, compress: bool = True,
+                 wire: bool = False):
+    """``wire=True`` routes stage cuts (incl. the encoder-memory hop)
+    through the wire-codec registry, as in transformer.forward_eval."""
+    beval = boundary_wire_eval if wire else boundary_eval
     memory = encode(params, batch["enc_embeds"], cfg)
-    if policy.num_boundaries and compress:
-        memory = policy.at(0).fw(memory)
+    if policy.num_boundaries:
+        memory = beval(policy.at(0), memory, compress)
     x = _embed_tokens(params, batch["tokens"])
     segs = segment_bounds(cfg.num_layers, policy.num_stages)
     for si, (g0, g1) in enumerate(segs):
@@ -178,7 +183,7 @@ def forward_eval(params, batch, cfg: ModelConfig,
                            "batch", "model", None), None),
             x, seg, unroll=scan_unroll())
         if si < len(segs) - 1:
-            x = boundary_eval(policy.at(si), x, compress)
+            x = beval(policy.at(si), x, compress)
     return _lm_logits(params, x, cfg)
 
 
@@ -191,7 +196,7 @@ def init_caches(cfg: ModelConfig, batch: int, cache_len: int, dtype=DTYPE):
 
 def prefill(params, batch, cfg: ModelConfig,
             policy: CompressionPolicy = NO_POLICY, cache_len: int = 0,
-            compress: bool = True, pad_len=None):
+            compress: bool = True, pad_len=None, wire: bool = False):
     """Returns (last-token logits, (self_caches, memory)).
 
     ``pad_len`` is accepted for engine-API uniformity but must be zeros:
@@ -199,9 +204,10 @@ def prefill(params, batch, cfg: ModelConfig,
     shifts real tokens to wrong position embeddings — a mask cannot fix
     that.  Serve enc-dec prompts start-aligned (equal decoder lengths).
     """
+    beval = boundary_wire_eval if wire else boundary_eval
     memory = encode(params, batch["enc_embeds"], cfg)
-    if policy.num_boundaries and compress:
-        memory = policy.at(0).fw(memory)
+    if policy.num_boundaries:
+        memory = beval(policy.at(0), memory, compress)
     x = _embed_tokens(params, batch["tokens"])
     cache_len = cache_len or x.shape[1]
     segs = segment_bounds(cfg.num_layers, policy.num_stages)
@@ -220,7 +226,7 @@ def prefill(params, batch, cfg: ModelConfig,
         x, cs = jax.lax.scan(scan_fn, x, seg, unroll=scan_unroll())
         cache_segs.append(cs)
         if si < len(segs) - 1:
-            x = boundary_eval(policy.at(si), x, compress)
+            x = beval(policy.at(si), x, compress)
     caches = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
                           *cache_segs)
     return _lm_logits(params, x[:, -1:], cfg), (caches, memory)
@@ -228,7 +234,8 @@ def prefill(params, batch, cfg: ModelConfig,
 
 def decode_step(params, token, state, pos, cfg: ModelConfig,
                 policy: CompressionPolicy = NO_POLICY, compress: bool = True,
-                pad_len=None):
+                pad_len=None, wire: bool = False):
+    beval = boundary_wire_eval if wire else boundary_eval
     caches, memory = state
     x = params["embed"][token][:, None].astype(DTYPE) + \
         jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, 0).astype(DTYPE)
@@ -246,7 +253,7 @@ def decode_step(params, token, state, pos, cfg: ModelConfig,
         x, nseg = jax.lax.scan(scan_fn, x, (seg, cseg), unroll=scan_unroll())
         new_segs.append(nseg)
         if si < len(segs) - 1:
-            x = boundary_eval(policy.at(si), x, compress)
+            x = beval(policy.at(si), x, compress)
     new_caches = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
                               *new_segs)
     return _lm_logits(params, x, cfg)[:, 0], (new_caches, memory)

@@ -24,7 +24,8 @@ from typing import List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.boundary import boundary_apply, boundary_eval
+from repro.core.boundary import (boundary_apply, boundary_eval,
+                                 boundary_wire_eval)
 from repro.core.policy import CompressionPolicy, NO_POLICY
 from repro.models import blocks as B
 from repro.models.common import DTYPE, embed_init, norm_apply, norm_init, softcap
@@ -234,8 +235,12 @@ def hidden_lm_loss(params, x, labels, cfg: ModelConfig,
 
 def forward_eval(params, batch, cfg: ModelConfig,
                  policy: CompressionPolicy = NO_POLICY,
-                 compress: bool = True):
+                 compress: bool = True, wire: bool = False):
+    """``wire=True`` routes stage cuts through the wire-codec registry
+    (pack -> unpack per request) instead of the in-process ``boundary_eval``
+    — what the serve engines do (see core/boundary.boundary_wire_eval)."""
     kinds = cfg.layer_kinds()
+    beval = boundary_wire_eval if wire else boundary_eval
     x = _embed_input(params, batch, cfg)
     segs = segment_bounds(cfg.num_groups, policy.num_stages)
     for si, (g0, g1) in enumerate(segs):
@@ -246,7 +251,7 @@ def forward_eval(params, batch, cfg: ModelConfig,
         x, _ = jax.lax.scan(scan_fn, x,
                             _slice_groups(params["layers"], g0, g1), unroll=scan_unroll())
         if si < len(segs) - 1:
-            x = boundary_eval(policy.at(si), x, compress)
+            x = beval(policy.at(si), x, compress)
     return _lm_logits(params, x, cfg)
 
 
@@ -266,11 +271,13 @@ def init_caches(cfg: ModelConfig, batch: int, cache_len: int, dtype=DTYPE):
 
 def prefill(params, batch, cfg: ModelConfig,
             policy: CompressionPolicy = NO_POLICY, cache_len: int = 0,
-            compress: bool = True, pad_len=None):
+            compress: bool = True, pad_len=None, wire: bool = False):
     """``pad_len``: optional (B,) int32 — the first pad_len[b] positions
     are left-padding (mixed-length serving batches) and are masked out of
-    attention in every layer."""
+    attention in every layer.  ``wire=True``: stage cuts pack/unpack the
+    real codec payloads (see forward_eval)."""
     kinds = cfg.layer_kinds()
+    beval = boundary_wire_eval if wire else boundary_eval
     x = _embed_input(params, batch, cfg)
     cache_len = cache_len or x.shape[1]
     segs = segment_bounds(cfg.num_groups, policy.num_stages)
@@ -291,7 +298,7 @@ def prefill(params, batch, cfg: ModelConfig,
                                _slice_groups(params["layers"], g0, g1), unroll=scan_unroll())
         cache_segs.append(cseg)
         if si < len(segs) - 1:
-            x = boundary_eval(policy.at(si), x, compress)
+            x = beval(policy.at(si), x, compress)
     caches = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
                           *cache_segs)
     return _lm_logits(params, x[:, -1:], cfg), caches
@@ -299,10 +306,13 @@ def prefill(params, batch, cfg: ModelConfig,
 
 def decode_step(params, token, caches, pos, cfg: ModelConfig,
                 policy: CompressionPolicy = NO_POLICY, compress: bool = True,
-                pad_len=None):
-    """token: (B,) int32; pos: scalar int32.  Returns (logits, new_caches).
-    ``pad_len``: optional (B,) int32 left-padding lengths (see prefill)."""
+                pad_len=None, wire: bool = False):
+    """token: (B,) int32; pos: scalar int32 OR (B,) int32 per-slot decode
+    positions (continuous batching).  Returns (logits, new_caches).
+    ``pad_len``: optional (B,) int32 left-padding lengths (see prefill);
+    ``wire=True``: stage cuts pack/unpack the real codec payloads."""
     kinds = cfg.layer_kinds()
+    beval = boundary_wire_eval if wire else boundary_eval
     x = params["embed"][token][:, None].astype(DTYPE)
     x = constrain(x, "batch", None, "model")
     segs = segment_bounds(cfg.num_groups, policy.num_stages)
@@ -320,7 +330,7 @@ def decode_step(params, token, caches, pos, cfg: ModelConfig,
                          _slice_groups(caches, g0, g1)), unroll=scan_unroll())
         new_segs.append(nseg)
         if si < len(segs) - 1:
-            x = boundary_eval(policy.at(si), x, compress)
+            x = beval(policy.at(si), x, compress)
     new_caches = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
                               *new_segs)
     return _lm_logits(params, x, cfg)[:, 0], new_caches

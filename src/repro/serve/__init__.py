@@ -1,0 +1,14 @@
+"""Serving subsystem: continuous batching over compressed stage boundaries.
+
+  engine.py    — ServeEngine (static batch) + ContinuousEngine
+                 (streaming submit()/step()/drain(), slot eviction/refill)
+  scheduler.py — admission queue + per-slot request lifecycle (host-side)
+  cache.py     — slot-indexed KV pages, bucketed prompt lengths
+  sampling.py  — greedy / temperature / top-k / top-p, per-slot PRNG keys
+"""
+from repro.serve.engine import ContinuousEngine, Request, ServeEngine
+from repro.serve.sampling import GREEDY, SamplingConfig
+from repro.serve.scheduler import Scheduler, ServeRequest
+
+__all__ = ["ContinuousEngine", "Request", "ServeEngine", "GREEDY",
+           "SamplingConfig", "Scheduler", "ServeRequest"]

@@ -1,0 +1,85 @@
+"""Slot-indexed KV cache for continuous-batching serve.
+
+One decode "page" per serving slot: every cache leaf is laid out
+``(groups, num_slots, cache_len, ...)`` (the transformer's per-group cache
+pytree with the batch axis as the slot axis).  A slot is claimed by a
+request at admission, filled by a bucketed prefill, advanced in place by
+the shared decode program (the caches are DONATED across ticks, so XLA
+updates them in place on TPU), and handed to the next request on eviction
+without touching the other slots.
+
+Slot hygiene needs no explicit zeroing: the decode attention mask only
+admits cache positions ``idx <= pos[slot]`` (ring: within the current
+window), and a refill overwrites exactly the positions the new request's
+prompt occupies — stale keys from the previous occupant are never valid.
+``reset_slot`` exists for callers that want hard isolation anyway (e.g.
+debugging a masking regression).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def init_slot_caches(mod, cfg: ModelConfig, num_slots: int, cache_len: int,
+                     dtype=jnp.bfloat16):
+    """The transformer's cache pytree with ``num_slots`` batch slots."""
+    return mod.init_caches(cfg, num_slots, cache_len, dtype)
+
+
+def write_slot(caches, one_caches, slot):
+    """Insert a prefilled batch-1 cache pytree into slot ``slot`` in place.
+
+    ``one_caches`` leaves are ``(groups, 1, ...)`` (a batch-1 prefill);
+    ``slot`` may be a traced int32 — the write lowers to one
+    dynamic-update per leaf, so slot refill never recompiles.
+    """
+    return jax.tree.map(
+        lambda big, one: jax.lax.dynamic_update_index_in_dim(
+            big, one[:, 0].astype(big.dtype), slot, axis=1),
+        caches, one_caches)
+
+
+def reset_slot(caches, slot):
+    """Zero one slot's cache (optional hygiene; see module docstring)."""
+    return jax.tree.map(
+        lambda big: jax.lax.dynamic_update_index_in_dim(
+            big, jnp.zeros(big.shape[:1] + big.shape[2:], big.dtype),
+            slot, axis=1),
+        caches)
+
+
+def slot_bytes(caches, num_slots: int) -> int:
+    """Per-slot cache footprint in bytes (engine metrics)."""
+    total = sum(leaf.size * leaf.dtype.itemsize
+                for leaf in jax.tree.leaves(caches))
+    return total // max(1, num_slots)
+
+
+def prompt_buckets(max_prompt: int, min_bucket: int = 8) -> Tuple[int, ...]:
+    """Power-of-two prompt-length buckets up to ``max_prompt``.
+
+    A request's prefill runs at the smallest bucket >= its prompt length
+    (left-padded inside the bucket), so the prefill program compiles once
+    per bucket — a bounded, warm-able set — instead of once per distinct
+    prompt length.
+    """
+    buckets = []
+    b = min_bucket
+    while b < max_prompt:
+        buckets.append(b)
+        b *= 2
+    buckets.append(max_prompt)
+    return tuple(buckets)
+
+
+def bucket_for(length: int, buckets: Tuple[int, ...]) -> int:
+    for b in buckets:
+        if length <= b:
+            return b
+    raise ValueError(f"prompt length {length} exceeds the largest bucket "
+                     f"{buckets[-1]} (raise max_prompt/max_seq)")

@@ -1,9 +1,25 @@
-"""Batched serving engine: continuous token generation over a KV cache.
+"""Serving engines: static-batch baseline + continuous batching.
 
 Serving semantics of the paper's technique: a model trained with boundary
 compression must be SERVED with compression on (paper Table 2 / finding F3),
-so the engine carries the CompressionPolicy and applies ``boundary_eval`` at
-each stage cut during both prefill and decode.
+so both engines carry the CompressionPolicy and compress every stage cut
+during prefill and decode.  The cuts route through the WIRE-CODEC registry
+(``transport/codecs.py`` via ``core.boundary.boundary_wire_eval``): a served
+decode packs/unpacks the same q8/TopK payloads the training pipeline puts on
+the network, packed per request (each slot is its own stream).
+
+Two engines:
+
+  * :class:`ServeEngine` — static batch: left-pad every prompt to the
+    longest in the batch, decode everyone until the global max-new-tokens.
+    Kept as the throughput baseline.
+  * :class:`ContinuousEngine` — continuous batching: a streaming
+    ``submit()/step()/drain()`` API over ``num_slots`` decode slots.  A
+    finished slot (EOS or max-new-tokens) is evicted and refilled from the
+    admission queue on the next tick.  All slots advance through ONE jit'd
+    decode program with per-slot positions/padding/PRNG keys — slot swaps
+    never recompile — and prompts prefill at power-of-two length buckets,
+    so the prefill program set is bounded and warm-able.
 """
 from __future__ import annotations
 
@@ -15,9 +31,14 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.boundary import boundary_wire_bytes_per_token
 from repro.core.policy import CompressionPolicy, NO_POLICY
 from repro.models import encdec, transformer
 from repro.models.config import ModelConfig
+from repro.serve import cache as C
+from repro.serve.sampling import GREEDY, SamplingConfig, request_key, \
+    sample_tokens
+from repro.serve.scheduler import Scheduler, ServeRequest
 
 
 @dataclasses.dataclass
@@ -27,20 +48,46 @@ class Request:
     out: Optional[np.ndarray] = None
 
 
+def left_pad_unsupported(cfg: ModelConfig) -> set:
+    """Arch features incompatible with masked left-padding (and so with
+    mixed-length static batches and with continuous batching): recurrent
+    state and absolute positions carry the padding; the vision patch
+    prefix splices into the sequence FRONT, exactly where left-padding
+    goes."""
+    bad = {"rwkv", "hymba"} & set(cfg.layer_kinds())
+    if cfg.enc_dec:
+        bad.add("enc-dec")
+    if cfg.frontend == "vision":
+        bad.add("vision-frontend")
+    return bad
+
+
+def _make_batch(cfg: ModelConfig, prompts) -> dict:
+    b = {"tokens": jnp.asarray(prompts)}
+    if cfg.frontend == "vision":
+        b["patch_embeds"] = jnp.zeros(
+            (b["tokens"].shape[0], cfg.num_patches, cfg.d_model),
+            jnp.bfloat16)
+    if cfg.enc_dec:
+        b["enc_embeds"] = jnp.zeros(
+            (b["tokens"].shape[0], cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    return b
+
+
 class ServeEngine:
     """Static-batch engine: pad/stack prompts, prefill once, decode greedily.
 
     Production notes: the decode step is a single jit'd program with donated
-    caches (in-place on TPU); batch slots are fixed at construction —
-    continuous batching would swap finished slots via the same program.
+    caches (in-place on TPU); batch slots are fixed at construction — see
+    :class:`ContinuousEngine` for the version that swaps finished slots.
     """
 
     def __init__(self, params, cfg: ModelConfig,
                  policy: CompressionPolicy = NO_POLICY,
                  compress: bool = True, max_batch: int = 8,
-                 max_seq: int = 256):
+                 max_seq: int = 256, wire: bool = True):
         self.params, self.cfg, self.policy = params, cfg, policy
-        self.compress = compress
+        self.compress, self.wire = compress, wire
         self.max_batch, self.max_seq = max_batch, max_seq
         self.mod = encdec if cfg.enc_dec else transformer
         cfg_, pol_, mod_ = cfg, policy, self.mod
@@ -48,53 +95,46 @@ class ServeEngine:
         def _prefill(params, batch, pad_len):
             return mod_.prefill(params, batch, cfg_, pol_,
                                 cache_len=max_seq, compress=compress,
-                                pad_len=pad_len)
+                                pad_len=pad_len, wire=wire)
 
         def _decode(params, token, caches, pos, pad_len):
             return mod_.decode_step(params, token, caches, pos, cfg_, pol_,
-                                    compress=compress, pad_len=pad_len)
+                                    compress=compress, pad_len=pad_len,
+                                    wire=wire)
 
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode, donate_argnums=(2,))
 
-    def _make_batch(self, prompts: np.ndarray) -> dict:
-        b = {"tokens": jnp.asarray(prompts)}
-        if self.cfg.frontend == "vision":
-            b["patch_embeds"] = jnp.zeros(
-                (prompts.shape[0], self.cfg.num_patches, self.cfg.d_model),
-                jnp.bfloat16)
-        if self.cfg.enc_dec:
-            b["enc_embeds"] = jnp.zeros(
-                (prompts.shape[0], self.cfg.enc_seq, self.cfg.d_model),
-                jnp.bfloat16)
-        return b
-
-    def generate(self, requests: List[Request]) -> List[Request]:
-        assert len(requests) <= self.max_batch
-        # left-align prompts to a common length (static batch); the
-        # per-request pad length masks the padding out of attention, so a
-        # short prompt generates exactly what it would alone (RoPE archs —
-        # recurrent rwkv/hymba state and abs-position enc-dec decoders do
-        # not support left-padding; serve those with equal-length prompts)
+    def _pack(self, requests: List[Request]):
+        """Left-align prompts to a common length (static batch); the
+        per-request pad length masks the padding out of attention, so a
+        short prompt generates exactly what it would alone (RoPE archs —
+        recurrent rwkv/hymba state and abs-position enc-dec decoders do
+        not support left-padding; serve those with equal-length prompts)."""
         plen = max(len(r.prompt) for r in requests)
         b = len(requests)
         if plen != min(len(r.prompt) for r in requests):
-            unsupported = ({"rwkv", "hymba"} & set(self.cfg.layer_kinds())
-                           or ({"enc-dec"} if self.cfg.enc_dec else set()))
+            unsupported = left_pad_unsupported(self.cfg)
             if unsupported:
                 raise ValueError(
                     f"mixed-length prompts need left-padding, which "
-                    f"{sorted(unsupported)} layers cannot mask (recurrent "
-                    f"state / absolute positions carry the padding) — "
-                    f"batch equal-length prompts for this arch")
+                    f"{sorted(unsupported)} cannot support (see "
+                    f"left_pad_unsupported) — batch equal-length "
+                    f"prompts for this arch")
         prompts = np.zeros((b, plen), np.int32)
         for i, r in enumerate(requests):
             prompts[i, plen - len(r.prompt):] = r.prompt  # left-pad
         pad_len = jnp.asarray(
             [plen - len(r.prompt) for r in requests], jnp.int32)
+        return prompts, pad_len, plen
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        assert len(requests) <= self.max_batch
+        prompts, pad_len, plen = self._pack(requests)
         steps = max(r.max_new_tokens for r in requests)
 
-        logits, caches = self._prefill(self.params, self._make_batch(prompts),
+        logits, caches = self._prefill(self.params,
+                                       _make_batch(self.cfg, prompts),
                                        pad_len)
         token = jnp.argmax(logits[:, -1] if logits.ndim == 3 else logits,
                            axis=-1).astype(jnp.int32)
@@ -111,13 +151,278 @@ class ServeEngine:
 
     def throughput_probe(self, batch: int, prompt_len: int,
                          new_tokens: int) -> dict:
-        """Tokens/s measurement for the benchmark harness."""
+        """Tokens/s measurement for the benchmark harness.
+
+        Warms the MEASURED (batch, prompt_len) shape first — compiling a
+        different shape (the old batch=1/new=2 warmup) would time XLA
+        compilation into tok_per_s — then reports prefill and decode
+        throughput separately (they bound different production regimes:
+        TTFT vs steady-state decode).
+        """
         rng = np.random.RandomState(0)
         reqs = [Request(rng.randint(0, self.cfg.vocab_size, prompt_len)
                         .astype(np.int32), new_tokens)
                 for _ in range(batch)]
         t0 = time.time()
-        self.generate(reqs)
-        dt = time.time() - t0
+        # warm: same (batch, prompt_len) shapes, 2 decode tokens compiles
+        # the decode program too (its shape is independent of new_tokens)
+        self.generate([Request(r.prompt.copy(), 2) for r in reqs])
+        warm_s = time.time() - t0
+
+        prompts, pad_len, plen = self._pack(reqs)
+        t0 = time.time()
+        logits, caches = self._prefill(self.params,
+                                       _make_batch(self.cfg, prompts),
+                                       pad_len)
+        token = jnp.argmax(logits[:, -1] if logits.ndim == 3 else logits,
+                           axis=-1).astype(jnp.int32)
+        jax.block_until_ready(token)
+        prefill_s = time.time() - t0
+        t0 = time.time()
+        for i in range(new_tokens - 1):
+            logits, caches = self._decode(self.params, token, caches,
+                                          jnp.int32(plen + i), pad_len)
+            token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        jax.block_until_ready(token)
+        decode_s = time.time() - t0
+        wall = prefill_s + decode_s
         return {"batch": batch, "prompt": prompt_len, "new": new_tokens,
-                "wall_s": dt, "tok_per_s": batch * new_tokens / dt}
+                "warm_s": round(warm_s, 3), "wall_s": wall,
+                "prefill_s": round(prefill_s, 4),
+                "prefill_tok_per_s": round(batch * prompt_len / prefill_s, 1),
+                "decode_s": round(decode_s, 4),
+                "decode_tok_per_s": round(
+                    batch * (new_tokens - 1) / decode_s, 1)
+                if new_tokens > 1 else 0.0,
+                "tok_per_s": batch * new_tokens / wall}
+
+
+class ContinuousEngine:
+    """Continuous-batching engine: streaming submit()/step()/drain().
+
+    Restrictions: decoder-only stacks whose attention masks left-padding
+    (RoPE / attention-family layers).  Recurrent kinds (rwkv, hymba SSM)
+    carry state through pad positions and enc-dec decoders use absolute
+    positions; serve those with the static engine and equal-length batches.
+
+    Multi-step decode: when no slot can complete (or be refilled) within
+    the next ``tick_chunk`` ticks and no active request watches for EOS,
+    the engine runs ``tick_chunk`` decode steps inside ONE jit'd
+    ``lax.scan`` call and syncs the host once — per-dispatch overhead is
+    the decode bottleneck for small models, and the scheduler only needs
+    token values back at completion/refill boundaries.
+    """
+
+    def __init__(self, params, cfg: ModelConfig,
+                 policy: CompressionPolicy = NO_POLICY,
+                 compress: bool = True, num_slots: int = 4,
+                 max_seq: int = 256, sampling: SamplingConfig = GREEDY,
+                 max_prompt: Optional[int] = None, tick_chunk: int = 8):
+        bad = left_pad_unsupported(cfg)
+        if bad:
+            raise ValueError(
+                f"continuous batching needs maskable left-padding and "
+                f"per-slot positions; {sorted(bad)} supports neither "
+                f"(see left_pad_unsupported) — use ServeEngine "
+                f"(--engine static) with equal-length batches")
+        self.params, self.cfg, self.policy = params, cfg, policy
+        self.compress, self.sampling = compress, sampling
+        self.num_slots, self.max_seq = num_slots, max_seq
+        self.tick_chunk = max(1, tick_chunk)
+        self.buckets = C.prompt_buckets(min(max_prompt or max_seq // 2,
+                                            max_seq))
+        self.sched = Scheduler(num_slots)
+        self._caches = C.init_slot_caches(transformer, cfg, num_slots,
+                                          max_seq)
+        self.pos = np.zeros(num_slots, np.int32)     # next decode position
+        self.pad = np.zeros(num_slots, np.int32)     # left-pad inside bucket
+        self.last_tok = np.zeros(num_slots, np.int32)
+        self._keys = jnp.zeros((num_slots, 2), jnp.uint32)
+        self.ticks = 0
+        self.active_slot_ticks = 0
+        cfg_, pol_, smp_ = cfg, policy, sampling
+
+        def _insert(params, tokens, pad, caches, slot, key):
+            """Prefill one request at its bucket length and splice its KV
+            into ``slot``; returns its first sampled token (the TTFT
+            token comes out of the prefill logits, no extra decode)."""
+            logits, one = transformer.prefill(
+                params, _make_batch(cfg_, tokens), cfg_, pol_,
+                cache_len=max_seq, compress=compress, pad_len=pad, wire=True)
+            caches = C.write_slot(caches, one, slot)
+            tok, key1 = sample_tokens(logits.reshape(1, -1), key[None], smp_)
+            return tok[0], caches, key1[0]
+
+        def _decode(params, tokens, caches, pos, pad, keys):
+            """One tick for every slot: per-slot position/pad/PRNG key.
+            Inactive slots decode garbage into their own row only; it is
+            never valid under the position mask and is overwritten by the
+            next refill."""
+            logits, caches = transformer.decode_step(
+                params, tokens, caches, pos, cfg_, pol_, compress=compress,
+                pad_len=pad, wire=True)
+            toks, keys = sample_tokens(logits, keys, smp_)
+            return toks, caches, keys
+
+        chunk = self.tick_chunk
+
+        def _decode_chunk(params, tokens, caches, pos, pad, active, keys):
+            """``tick_chunk`` decode ticks in one program: inactive slots'
+            tokens/positions are frozen (their garbage writes stay in
+            their own row, invalid under the position mask); returns the
+            (chunk, B) token history for ONE host sync."""
+            def body(carry, _):
+                tokens, caches, pos, keys = carry
+                logits, caches = transformer.decode_step(
+                    params, tokens, caches, pos, cfg_, pol_,
+                    compress=compress, pad_len=pad, wire=True)
+                toks, keys = sample_tokens(logits, keys, smp_)
+                toks = jnp.where(active, toks, tokens)
+                pos = pos + active.astype(pos.dtype)
+                return (toks, caches, pos, keys), toks
+            (tokens, caches, pos, keys), hist = jax.lax.scan(
+                body, (tokens, caches, pos, keys), None, length=chunk)
+            return tokens, caches, pos, keys, hist
+
+        self._insert = jax.jit(_insert, donate_argnums=(3,))
+        self._decode = jax.jit(_decode, donate_argnums=(2,))
+        self._decode_chunk = jax.jit(_decode_chunk, donate_argnums=(2,))
+
+    # -- streaming API ------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int = 16,
+               eos_token: Optional[int] = None, seed: int = 0) -> int:
+        """Queue a request; returns its request id."""
+        prompt = np.asarray(prompt, np.int32)
+        bucket = C.bucket_for(len(prompt), self.buckets)
+        if bucket + max_new_tokens - 1 > self.max_seq:
+            raise ValueError(
+                f"prompt bucket {bucket} + {max_new_tokens} new tokens "
+                f"exceeds max_seq={self.max_seq}")
+        return self.sched.submit(prompt, max_new_tokens, eos_token,
+                                 seed).req_id
+
+    def step(self) -> List[ServeRequest]:
+        """One engine tick: refill free slots from the queue (bucketed
+        prefill per new request), then one decode step for every slot.
+        Returns the requests that completed this tick."""
+        finished = []
+        for slot, req in self.sched.fills():
+            bucket = C.bucket_for(len(req.prompt), self.buckets)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, bucket - len(req.prompt):] = req.prompt
+            pad = bucket - len(req.prompt)
+            tok, self._caches, key = self._insert(
+                self.params, jnp.asarray(toks),
+                jnp.asarray([pad], jnp.int32), self._caches,
+                jnp.int32(slot), request_key(req.seed))
+            self._keys = self._keys.at[slot].set(key)
+            self.pos[slot] = bucket
+            self.pad[slot] = pad
+            self.last_tok[slot] = int(tok)      # blocks => honest TTFT
+            done = self.sched.started(slot, int(tok))
+            if done is not None:
+                finished.append(done)
+        active = self.sched.active_slots
+        if not active:
+            return finished
+        reqs = [self.sched.slots[s] for s in active]
+        min_rem = min(r.max_new_tokens - len(r.tokens) for r in reqs)
+        chunkable = (self.tick_chunk > 1
+                     and min_rem >= self.tick_chunk
+                     and all(r.eos_token is None for r in reqs))
+        if chunkable:
+            # no slot can complete inside the chunk and none watches for
+            # EOS => run tick_chunk decode steps in one program, one sync
+            mask = np.zeros(self.num_slots, bool)
+            mask[active] = True
+            last, self._caches, _, self._keys, hist = self._decode_chunk(
+                self.params, jnp.asarray(self.last_tok), self._caches,
+                jnp.asarray(self.pos), jnp.asarray(self.pad),
+                jnp.asarray(mask), self._keys)
+            hist_np = np.asarray(hist)              # (chunk, B)
+            self.ticks += self.tick_chunk
+            self.active_slot_ticks += self.tick_chunk * len(active)
+            for slot in active:
+                self.pos[slot] += self.tick_chunk
+                self.last_tok[slot] = hist_np[-1, slot]
+                for t in hist_np[:, slot]:
+                    done = self.sched.token(slot, t)
+                    if done is not None:            # only the last can
+                        finished.append(done)
+        else:
+            toks, self._caches, self._keys = self._decode(
+                self.params, jnp.asarray(self.last_tok), self._caches,
+                jnp.asarray(self.pos), jnp.asarray(self.pad), self._keys)
+            toks_np = np.asarray(toks)
+            self.ticks += 1
+            self.active_slot_ticks += len(active)
+            for slot in active:
+                self.pos[slot] += 1
+                self.last_tok[slot] = toks_np[slot]
+                done = self.sched.token(slot, toks_np[slot])
+                if done is not None:
+                    finished.append(done)
+        return finished
+
+    def drain(self) -> List[ServeRequest]:
+        """Run steps until queue and slots are empty; returns everything
+        that finished during the drain (in completion order)."""
+        out = []
+        while not self.sched.idle:
+            out.extend(self.step())
+        return out
+
+    def warmup(self) -> dict:
+        """Compile every prompt-bucket insert program + the decode program
+        by serving dummy requests, then reset the scheduler/metrics.  After
+        this, slot eviction/refill at ANY prompt length triggers zero
+        recompilations (see compile_stats)."""
+        for b in self.buckets:
+            new = min(self.tick_chunk + 2, self.max_seq - b + 1)
+            self.submit(np.zeros(b, np.int32), max_new_tokens=new)
+        self.drain()
+        if self.tick_chunk > 1:
+            # the drain may never satisfy the chunkable condition (slot
+            # count / bucket-headroom geometry), so compile the multi-tick
+            # program directly: an all-inactive mask freezes every slot's
+            # tokens/positions and the scheduler is idle, so only benign
+            # garbage rows are written (invalid under the position mask)
+            mask = np.zeros(self.num_slots, bool)
+            _, self._caches, _, _, _ = self._decode_chunk(
+                self.params, jnp.asarray(self.last_tok), self._caches,
+                jnp.asarray(self.pos), jnp.asarray(self.pad),
+                jnp.asarray(mask), self._keys)
+        self.sched = Scheduler(self.num_slots)
+        self.ticks = self.active_slot_ticks = 0
+        return self.compile_stats()
+
+    # -- metrics ------------------------------------------------------------
+
+    def compile_stats(self) -> dict:
+        """jit compilation-cache sizes: one decode entry, one multi-tick
+        chunk entry, one insert entry per warmed prompt bucket.  Unchanged
+        counts across a serving run == zero recompilations."""
+        return {"decode_compiles": self._decode._cache_size(),
+                "decode_chunk_compiles": self._decode_chunk._cache_size(),
+                "insert_compiles": self._insert._cache_size()}
+
+    def stats(self) -> dict:
+        s = self.sched.stats()
+        s.update({
+            "ticks": self.ticks,
+            "slot_utilization": (round(
+                self.active_slot_ticks / (self.ticks * self.num_slots), 3)
+                if self.ticks else 0.0),
+            "slot_cache_bytes": C.slot_bytes(self._caches, self.num_slots),
+            "boundary_bytes_per_tok": (
+                round(boundary_wire_bytes_per_token(
+                    self.policy, self.cfg.d_model,
+                    num_cuts=max(0, len(transformer.segment_bounds(
+                        self.cfg.num_groups,
+                        self.policy.num_stages)) - 1)), 1)
+                if self.compress else 0.0),
+            "sampling": self.sampling.name,
+        })
+        s.update(self.compile_stats())
+        return s

@@ -1,0 +1,97 @@
+"""Token sampling for the serve engines.
+
+One frozen :class:`SamplingConfig` per engine (hashable => a jit-static
+argument: switching greedy/temperature/top-k/top-p picks a program, it is
+not a traced branch), with PER-SLOT PRNG keys: every request carries its
+own key chain derived from its seed, so a slot's sample stream is a pure
+function of the request — independent of which other requests share the
+batch and of which slot it landed in.  That is what keeps sampled
+continuous-batching output identical to serving the request alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    """``temperature == 0`` => greedy argmax (top_k/top_p ignored).
+
+    ``top_k > 0``  : keep only the k highest-probability tokens.
+    ``top_p < 1``  : nucleus — keep the smallest probability mass >= top_p.
+    Filters compose (top-k first, then top-p), as in standard samplers.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0: {self.temperature}")
+        if not 0 < self.top_p <= 1:
+            raise ValueError(f"top_p must be in (0, 1]: {self.top_p}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0: {self.top_k}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+    @property
+    def name(self) -> str:
+        if self.greedy:
+            return "greedy"
+        parts = [f"t={self.temperature:g}"]
+        if self.top_k:
+            parts.append(f"k={self.top_k}")
+        if self.top_p < 1:
+            parts.append(f"p={self.top_p:g}")
+        return ",".join(parts)
+
+
+GREEDY = SamplingConfig()
+
+
+def request_key(seed: int) -> jnp.ndarray:
+    """The per-request PRNG key a slot starts from."""
+    return jax.random.PRNGKey(seed)
+
+
+def _filter_logits(logits, cfg: SamplingConfig):
+    """Mask logits outside the top-k / nucleus to -inf.  logits: (B, V)."""
+    v = logits.shape[-1]
+    if cfg.top_k and cfg.top_k < v:
+        kth = jax.lax.top_k(logits, cfg.top_k)[0][:, -1:]
+        logits = jnp.where(logits >= kth, logits, -jnp.inf)
+    if cfg.top_p < 1.0:
+        sorted_ = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # keep every token up to and including the one crossing top_p
+        keep_sorted = cum - probs < cfg.top_p
+        cutoff = jnp.min(jnp.where(keep_sorted, sorted_, jnp.inf),
+                         axis=-1)[:, None]
+        logits = jnp.where(logits >= cutoff, logits, -jnp.inf)
+    return logits
+
+
+def sample_tokens(logits, keys, cfg: SamplingConfig):
+    """Next token per slot.  logits: (B, V); keys: (B, 2) uint32.
+
+    Returns ``(tokens (B,) int32, new_keys (B, 2))``.  Greedy never
+    consumes randomness, so the key chain only advances when sampling —
+    the same request replayed greedy/sampled stays reproducible.
+    """
+    logits = logits.astype(jnp.float32)
+    if cfg.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), keys
+    logits = _filter_logits(logits / cfg.temperature, cfg)
+
+    def one(lg, key):
+        step_key, next_key = jax.random.split(key)
+        return jax.random.categorical(step_key, lg).astype(jnp.int32), next_key
+
+    return jax.vmap(one)(logits, keys)

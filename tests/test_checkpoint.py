@@ -1,0 +1,152 @@
+"""Checkpoint satellites: full-train-state save/resume and restore errors.
+
+``--resume`` must reproduce the interrupted run's trajectory EXACTLY —
+that requires the optimizer moments and the error-feedback buffers in the
+file, not just params (EF state is part of the training dynamics).
+"""
+import re
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import io as ckpt_io
+from repro.configs.registry import get
+from repro.core.boundary import init_boundary_state
+from repro.core.policy import CompressionPolicy, ef_policy
+from repro.launch.train import make_batch, synthetic_stream
+from repro.models import transformer
+from repro.optim.optimizers import OptimizerConfig, init_opt_state
+from repro.train.steps import make_lm_train_step
+
+
+class TestTrainStateRoundtrip:
+    def test_resume_reproduces_trajectory_exactly(self, tmp_path):
+        """6 straight steps == 3 steps -> save -> restore -> 3 more steps,
+        bit-for-bit on params, moments, AND feedback buffers."""
+        cfg = get("gpt2-small", smoke=True)
+        pol = CompressionPolicy(num_stages=2, boundary=ef_policy(0.1, "ef21"))
+        opt = OptimizerConfig(kind="adamw", lr=1e-3, weight_decay=0.01,
+                              schedule="constant", grad_clip=1.0)
+        step = make_lm_train_step(cfg, pol, opt, remat=False, donate=False)
+
+        def init():
+            params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+            return (params, init_opt_state(opt, params),
+                    [init_boundary_state(pol.at(0), (16, cfg.d_model),
+                                         batch=2, dtype=jnp.bfloat16)])
+
+        def run(state, start, n):
+            params, ostate, bst = state
+            stream = synthetic_stream(cfg, 2, 16, seed=0, start_step=start)
+            for _ in range(n):
+                toks, ids = next(stream)
+                params, ostate, bst, _ = step(params, ostate, bst,
+                                              make_batch(cfg, toks),
+                                              jnp.asarray(ids))
+            return params, ostate, bst
+
+        straight = run(init(), 0, 6)
+        half = run(init(), 0, 3)
+        path = str(tmp_path / "ck.npz")
+        ckpt_io.save_train_state(path, *half, step=3)
+        p, o, b, step_no = ckpt_io.restore_train_state(path, *init())
+        assert step_no == 3
+        resumed = run((p, o, b), 3, 3)
+        for name, s, r in zip(("params", "opt", "bstates"), straight,
+                              resumed):
+            for ls, lr in zip(jax.tree.leaves(s), jax.tree.leaves(r)):
+                np.testing.assert_array_equal(
+                    np.asarray(ls, np.float32), np.asarray(lr, np.float32),
+                    err_msg=f"{name} diverged after resume")
+
+    def test_restore_params_reads_both_formats(self, tmp_path):
+        cfg = get("gpt2-small", smoke=True)
+        params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        old = str(tmp_path / "old.npz")
+        new = str(tmp_path / "new.npz")
+        ckpt_io.save(old, params, step=5)                     # params-only
+        ckpt_io.save_train_state(new, params, {"step": jnp.zeros((),
+                                                           jnp.int32)},
+                                 [], step=9)                  # train-state
+        for path, want in ((old, 5), (new, 9)):
+            got, step_no = ckpt_io.restore_params(path, params)
+            assert step_no == want
+            np.testing.assert_array_equal(
+                np.asarray(got["embed"], np.float32),
+                np.asarray(params["embed"], np.float32))
+
+
+class TestRestoreErrors:
+    def _saved(self, tmp_path):
+        path = str(tmp_path / "ck.npz")
+        ckpt_io.save(path, {"a": jnp.zeros((2, 3)), "b": jnp.ones((4,))},
+                     step=1)
+        return path
+
+    def test_missing_extra_and_mismatch_all_listed(self, tmp_path):
+        path = self._saved(tmp_path)
+        like = {"a": jnp.zeros((9, 9)),         # shape mismatch
+                "c": jnp.zeros((1,))}           # missing ("b" is extra)
+        with pytest.raises(ckpt_io.CheckpointMismatch) as ei:
+            ckpt_io.restore(path, like)
+        msg = str(ei.value)
+        assert re.search(r"missing keys \(1\): c", msg)
+        assert "a: saved (2, 3) != expected (9, 9)" in msg
+        assert re.search(r"extra keys in file \(1\): b", msg)
+
+    def test_subset_restore_ignores_extras(self, tmp_path):
+        path = self._saved(tmp_path)
+        got, _ = ckpt_io.restore(path, {"b": jnp.zeros((4,))})
+        np.testing.assert_array_equal(np.asarray(got["b"]), np.ones((4,)))
+
+    def test_train_state_restore_is_strict(self, tmp_path):
+        """Resuming with a DIFFERENT configuration (fewer boundaries here)
+        must raise, not silently drop the leftover feedback buffers —
+        dropping state fakes an exact resume."""
+        path = str(tmp_path / "ck.npz")
+        opt = {"step": jnp.zeros((), jnp.int32)}
+        two_cuts = [{"fw": jnp.ones((2, 4)), "bw": jnp.ones((2, 4))}
+                    for _ in range(2)]
+        ckpt_io.save_train_state(path, {"w": jnp.ones((3,))}, opt,
+                                 two_cuts, step=5)
+        with pytest.raises(ckpt_io.CheckpointMismatch,
+                           match=r"extra keys in file"):
+            ckpt_io.restore_train_state(path, {"w": jnp.zeros((3,))}, opt,
+                                        two_cuts[:1])   # one cut expected
+        p, o, b, step = ckpt_io.restore_train_state(
+            path, {"w": jnp.zeros((3,))}, opt, two_cuts)
+        assert step == 5
+
+
+class TestTrainDriverResume:
+    def test_cli_save_every_and_resume(self, tmp_path):
+        """--ckpt '{step}' templating + --resume continue the run from the
+        right step and keep the deprecated --ckpt-every alias working."""
+        import warnings
+        from repro.launch.train import main
+        tpl = str(tmp_path / "ck-{step}.npz")
+        rc = main(["--arch", "gpt2-small", "--smoke", "--steps", "4",
+                   "--batch", "2", "--seq", "16", "--log-every", "2",
+                   "--ckpt", tpl, "--save-every", "2", "--no-remat"])
+        assert rc == 0
+        assert (tmp_path / "ck-2.npz").exists()
+        assert (tmp_path / "ck-4.npz").exists()
+        js = str(tmp_path / "resume.json")
+        rc = main(["--arch", "gpt2-small", "--smoke", "--steps", "4",
+                   "--batch", "2", "--seq", "16", "--log-every", "2",
+                   "--resume", str(tmp_path / "ck-2.npz"), "--json", js,
+                   "--no-remat"])
+        assert rc == 0
+        import json
+        hist = json.load(open(js))
+        assert [m["step"] for m in hist] == [4]   # resumed at 3, logged 4
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            rc = main(["--arch", "gpt2-small", "--smoke", "--steps", "2",
+                       "--batch", "2", "--seq", "16", "--log-every", "2",
+                       "--ckpt", str(tmp_path / "alias.npz"),
+                       "--ckpt-every", "2", "--no-remat"])
+        assert rc == 0
+        assert any(issubclass(x.category, DeprecationWarning) for x in w)
