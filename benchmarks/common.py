@@ -77,3 +77,90 @@ def check(claims: List[tuple]) -> List[str]:
     """[(description, bool)] -> printable pass/fail lines."""
     return [("  [ok] " if ok else "  [MISMATCH] ") + desc
             for desc, ok in claims]
+
+
+# ---------------------------------------------------------------------------
+# Benchmark-regression gate (--check mode)
+# ---------------------------------------------------------------------------
+
+def compare_to_committed(fresh, committed, *, band_keys: Optional[dict] = None,
+                         ignore_keys=frozenset(), _path: str = "$",
+                         _key: str = "") -> List[str]:
+    """Deep-diff freshly computed benchmark results against the committed
+    ``results/*.json``; returns a list of human-readable mismatches (empty
+    == no regression).
+
+    Leaves compare EXACTLY by default — wire bytes, collective launch
+    counts, bubble fractions and boolean claims are deterministic, and a
+    drift IS the regression being gated.  ``band_keys`` maps leaf key
+    names (e.g. machine-dependent throughputs) to a relative tolerance:
+    ``{"tok_per_s": 0.75}`` accepts fresh within +-75% of committed.
+    ``ignore_keys`` skips keys entirely (wall-clock noise).
+    """
+    band_keys = band_keys or {}
+    out: List[str] = []
+    if isinstance(committed, dict) and isinstance(fresh, dict):
+        for k in sorted(set(committed) | set(fresh)):
+            if k in ignore_keys:
+                continue
+            if k not in fresh:
+                out.append(f"{_path}.{k}: missing from fresh results")
+            elif k not in committed:
+                out.append(f"{_path}.{k}: not in committed results "
+                           "(new field — refresh the committed json)")
+            else:
+                out += compare_to_committed(
+                    fresh[k], committed[k], band_keys=band_keys,
+                    ignore_keys=ignore_keys, _path=f"{_path}.{k}", _key=k)
+        return out
+    if isinstance(committed, list) and isinstance(fresh, list):
+        if len(committed) != len(fresh):
+            return [f"{_path}: {len(fresh)} rows vs committed "
+                    f"{len(committed)}"]
+        for i, (f, c) in enumerate(zip(fresh, committed)):
+            out += compare_to_committed(
+                f, c, band_keys=band_keys, ignore_keys=ignore_keys,
+                _path=f"{_path}[{i}]", _key=_key)
+        return out
+    band = band_keys.get(_key)
+    numeric = lambda v: (isinstance(v, (int, float))
+                         and not isinstance(v, bool))
+    if band is not None and numeric(committed) and numeric(fresh):
+        if abs(fresh - committed) > band * max(abs(committed), 1e-9):
+            out.append(f"{_path}: {fresh} outside +-{band:.0%} of "
+                       f"committed {committed}")
+    elif fresh != committed:
+        # covers type drift on banded keys too (e.g. tok_per_s -> null)
+        out.append(f"{_path}: {fresh!r} != committed {committed!r}")
+    return out
+
+
+def run_check(fresh: dict, table: str, band_keys: Optional[dict] = None,
+              ignore_keys=frozenset()) -> int:
+    """The --check entry point shared by the benchmark mains: diff
+    ``fresh`` against the committed ``results/<table>.json``, write the
+    fresh numbers to ``results/fresh-<table>.json`` (uploaded as a CI
+    artifact), and return a shell exit code (1 on regression)."""
+    committed_path = _path(table)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    fresh_path = os.path.join(RESULTS_DIR, f"fresh-{table}.json")
+    with open(fresh_path, "w") as f:
+        json.dump(fresh, f, indent=1)
+    if not os.path.exists(committed_path):
+        print(f"# [check] no committed {committed_path} — commit one by "
+              "running without --check", flush=True)
+        return 1
+    with open(committed_path) as f:
+        committed = json.load(f)
+    mismatches = compare_to_committed(fresh, committed,
+                                      band_keys=band_keys,
+                                      ignore_keys=ignore_keys)
+    if mismatches:
+        print(f"# [check] {table}: {len(mismatches)} regression(s) vs "
+              f"committed {committed_path}:", flush=True)
+        for m in mismatches:
+            print(f"#   {m}", flush=True)
+        return 1
+    print(f"# [check] {table}: fresh results match the committed json "
+          f"({fresh_path} written for the artifact)", flush=True)
+    return 0

@@ -276,7 +276,141 @@ def measure(schemes=("none", "q8", "q4", "topk", "topk_reuse"), *, stages=4,
     return reports
 
 
-def main():
+def measure_dp(codecs=("none", "q8", "q4", "topk"), *, dp=2, stages=2,
+               d_model=64, d_ff=128, k_frac=0.10, check: bool = True):
+    """Per-dp-codec report for the compressed DP gradient all-reduce
+    (transport/collectives.py) on the 2D ``(data, stages)`` mesh:
+
+      * exact fused payload bytes per ring hop (from the packed payload
+        shapes, per-leaf per-tensor scales and the q4 pad/ragged-TopK
+        paths included), ASSERTED against the codec's
+        ``wire_bytes_per_elem`` cost model;
+      * wire bytes per reduce per replica = ``(dp - 1)`` hops x payload;
+      * collective-permute LAUNCH counts of the compiled reduce, fused
+        (one uint8 buffer per hop) vs unfused (one launch per payload
+        leaf per hop) — asserting the fusion at most halves launches
+        whenever payloads are multi-leaf;
+      * for q8: the DATA-RING launch count inside a full 2D DPxPP train
+        step, split from the stage ring by the collective's
+        source-target pairs (the ``collective_counts(by_pairs=True)``
+        audit from launch/dryrun.py).
+    """
+    from repro.launch.dryrun import collective_counts
+    from repro.launch.mesh import make_dp_pipeline_mesh
+    from repro.transport.collectives import (dp_wire_report, init_dp_state,
+                                             make_grad_all_reduce)
+    from repro.transport.pipeline import pipeline_apply
+    mesh = make_dp_pipeline_mesh(dp, stages)
+    grads_like = {
+        "w1": jax.ShapeDtypeStruct((stages, d_model, d_ff), jnp.float32),
+        "w2": jax.ShapeDtypeStruct((stages, d_ff, d_model), jnp.float32),
+        "gamma": jax.ShapeDtypeStruct((33,), jnp.float32),   # odd/ragged
+    }
+    grads_dp = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((dp, *s.shape), s.dtype), grads_like)
+
+    def launches(codec, fused):
+        fn = make_grad_all_reduce(mesh, "data", codec, k_frac=k_frac,
+                                  fused=fused)
+        st = init_dp_state(grads_like, dp, "none")
+        hlo = jax.jit(fn).lower(
+            grads_dp, jax.eval_shape(lambda: st)).compile().as_text()
+        return collective_counts(hlo).get("collective-permute", 0)
+
+    def dp_ring_pairs():
+        """The data-axis ring's source-target pair signature on this
+        mesh: within each stage column, replica r sends to r+1."""
+        dev = mesh.devices
+        pairs = set()
+        for j in range(stages):
+            for r in range(dp):
+                pairs.add((int(dev[r, j].id), int(dev[(r + 1) % dp, j].id)))
+        return pairs
+
+    def train_step_ring_launches():
+        """collective-permute launches along the DATA axis inside one
+        compiled 2D train step (toy pipeline + fused q8 DP reduce)."""
+        reduce_fn = make_grad_all_reduce(mesh, "data", "q8", k_frac=k_frac)
+
+        def stage_fn(p, h):
+            return h + (jax.nn.gelu((h @ p["w1"]).astype(jnp.float32))
+                        .astype(jnp.bfloat16) @ p["w2"])
+
+        def step(params, dp_state, x):
+            pdp = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (dp, *a.shape)), params)
+
+            def loss(p):
+                y = pipeline_apply(stage_fn, p, x, mesh, "stage",
+                                   scheme="q8", dp_axis="data")
+                return jnp.sum(y.astype(jnp.float32) ** 2)
+            g = jax.grad(loss)(pdp)
+            return reduce_fn(g, dp_state)
+
+        params = {
+            "w1": jax.ShapeDtypeStruct((stages, d_model, d_ff),
+                                       jnp.bfloat16),
+            "w2": jax.ShapeDtypeStruct((stages, d_ff, d_model),
+                                       jnp.bfloat16),
+        }
+        st = init_dp_state(params, dp, "none")
+        x = jax.ShapeDtypeStruct((8, d_model), jnp.bfloat16)
+        hlo = jax.jit(step).lower(
+            params, jax.eval_shape(lambda: st), x).compile().as_text()
+        ring = dp_ring_pairs()
+        data_ring, stage_ring = 0, 0
+        for key, n in collective_counts(hlo, by_pairs=True).items():
+            op, _, pairs_s = key.partition("|")
+            if op != "collective-permute" or not pairs_s.startswith("{"):
+                continue
+            pairs = {tuple(int(v) for v in p.split(","))
+                     for p in pairs_s[2:-2].split("},{")}
+            if pairs <= ring:
+                data_ring += n
+            else:
+                stage_ring += n
+        return data_ring, stage_ring
+
+    reports = []
+    for codec in codecs:
+        rep = dp_wire_report(grads_like, codec, k_frac=k_frac, dp=dp)
+        rep["collective_permute_launches"] = launches(codec, True)
+        rep["collective_permute_launches_unfused"] = launches(codec, False)
+        if check:
+            # cost model holds to within per-leaf scale overhead (+ the
+            # q4 pad nibble / TopK k-rounding per ragged leaf)
+            slack = 16 * rep["n_param_leaves"] \
+                + 0.005 * max(rep["model_bytes"], 1)
+            assert abs(rep["payload_bytes_per_hop"]
+                       - rep["model_bytes"]) <= slack, rep
+            assert rep["collective_permute_launches"] == dp - 1, rep
+            if rep["n_payload_leaves"] > rep["n_param_leaves"]:
+                assert (rep["collective_permute_launches"] * 2
+                        <= rep["collective_permute_launches_unfused"]), rep
+        reports.append(rep)
+    data_ring, stage_ring = train_step_ring_launches()
+    reports.append({
+        "dp_codec": "q8", "section": "2d_train_step_audit", "dp": dp,
+        "stages": stages,
+        "data_ring_collective_permute_launches": data_ring,
+        "stage_ring_collective_permute_launches": stage_ring,
+    })
+    if check:
+        # the fused DP reduce adds exactly dp-1 data-axis launches to the
+        # whole train step; the stage ring keeps its own (scan-looped) hops
+        assert data_ring == dp - 1, reports[-1]
+        assert stage_ring >= 1, reports[-1]
+    return reports
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="regression gate: recompute and compare against "
+                         "the committed results/pipeline_wire.json (wire "
+                         "bytes and launch counts exact); exit 1 on drift")
+    args = ap.parse_args(argv)
     reports = measure()
     for r in reports:
         print(json.dumps(r))
@@ -286,13 +420,29 @@ def main():
     sched_reports = measure_schedules()
     for r in sched_reports:
         print(json.dumps(r))
+    dp_reports = measure_dp()
+    for r in dp_reports:
+        print(json.dumps(r))
+    fresh = {"schemes": reports, "feedback": fb_reports,
+             "schedules": sched_reports, "dp": dp_reports}
+    if args.check:
+        from benchmarks.common import run_check
+        # payload bytes and launch counts are jax-version-stable (payloads
+        # come from eval_shape of OUR packing; launch counts are the fused
+        # claim being gated).  Whole-program HLO collective BYTES also sum
+        # XLA's internal fusion choices, so they get a band instead of
+        # exact equality — a compiler upgrade shouldn't red the CI lane.
+        return run_check(
+            fresh, "pipeline_wire",
+            band_keys={"hlo_fw_collective_permute_bytes": 0.25,
+                       "hlo_fwbw_collective_permute_bytes": 0.25})
     os.makedirs(os.path.join(os.path.dirname(__file__), "results"),
                 exist_ok=True)
     with open(os.path.join(os.path.dirname(__file__), "results",
                            "pipeline_wire.json"), "w") as f:
-        json.dump({"schemes": reports, "feedback": fb_reports,
-                   "schedules": sched_reports}, f, indent=1)
+        json.dump(fresh, f, indent=1)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -13,9 +13,8 @@ from __future__ import annotations
 import os
 from typing import Optional
 
-import jax.numpy as jnp
 
-from benchmarks.common import RESULTS_DIR, fmt_table, load_rows, run_cached
+from benchmarks.common import RESULTS_DIR, run_cached
 from repro.checkpoint import io as ckpt
 from repro.core.policy import (CompressionPolicy, NO_POLICY, aqsgd_policy,
                                ef_policy, quant_policy, topk_policy)

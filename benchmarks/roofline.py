@@ -18,7 +18,7 @@ from __future__ import annotations
 import argparse
 import json
 import sys
-from typing import Dict, List
+from typing import List
 
 PEAK_FLOPS = 197e12     # bf16 per chip (TPU v5e)
 HBM_BW = 819e9          # bytes/s per chip
@@ -70,8 +70,8 @@ def terms(report: dict) -> dict:
 
 
 def fmt(rows: List[dict]) -> str:
-    hdr = (f"| arch | shape | policy | mesh | compute ms | memory ms | "
-           f"collective ms | bottleneck | useful-FLOPs |")
+    hdr = ("| arch | shape | policy | mesh | compute ms | memory ms | "
+           "collective ms | bottleneck | useful-FLOPs |")
     sep = "|" + "---|" * 9
     lines = [hdr, sep]
     for r in rows:
@@ -81,7 +81,7 @@ def fmt(rows: List[dict]) -> str:
             continue
         if r.get("error"):
             lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | - "
-                         f"| ERROR | - |")
+                         "| ERROR | - |")
             continue
         lines.append(
             f"| {r['arch']} | {r['shape']} | {r.get('policy','none')} "

@@ -138,6 +138,12 @@ def main(argv=None) -> int:
     ap.add_argument("--max-new", type=int, default=96)
     ap.add_argument("--max-seq", type=int, default=224)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--check", action="store_true",
+                    help="regression gate: compare against the committed "
+                         "results/serve_bench.json — token counts, wire "
+                         "bytes/token, compile counters and bit-identity "
+                         "flags exact, throughput within a tolerance band; "
+                         "exit 1 on drift")
     args = ap.parse_args(argv)
 
     cfg = get(args.arch, smoke=True)
@@ -169,14 +175,24 @@ def main(argv=None) -> int:
         assert speedup >= 1.5, \
             f"{name}: continuous {ct['tok_per_s']} tok/s is only " \
             f"{speedup:.2f}x static {st['tok_per_s']} (need >= 1.5x)"
+    fresh = {"arch": cfg.arch_id,
+             "workload": {"requests": args.requests,
+                          "slots": args.slots,
+                          "zipf_max_prompt": args.max_prompt,
+                          "zipf_max_new": args.max_new},
+             "rows": rows}
+    if args.check:
+        from benchmarks.common import run_check
+        # structural claims (token counts, wire bytes/token, compile
+        # counters, bit-identity) gate exactly; wall-clock throughputs are
+        # machine-dependent and gate only against order-of-magnitude drift
+        return run_check(fresh, "serve_bench",
+                         band_keys={"tok_per_s": 0.75, "wall_s": 0.75,
+                                    "mean_ttft_s": 0.9, "speedup": 0.6},
+                         ignore_keys=frozenset(("seconds",)))
     os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
     with open(RESULTS, "w") as f:
-        json.dump({"arch": cfg.arch_id,
-                   "workload": {"requests": args.requests,
-                                "slots": args.slots,
-                                "zipf_max_prompt": args.max_prompt,
-                                "zipf_max_new": args.max_new},
-                   "rows": rows}, f, indent=1)
+        json.dump(fresh, f, indent=1)
     print(f"# wrote {RESULTS}", flush=True)
     return 0
 

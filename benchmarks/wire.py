@@ -10,7 +10,6 @@ from __future__ import annotations
 
 from typing import List
 
-from repro.core.compressors import quant, topk
 from repro.core.policy import (BoundaryPolicy, NO_COMPRESSION, quant_policy,
                                topk_policy)
 

@@ -126,22 +126,41 @@ def restore(path: str, like, strict: bool = False) -> Tuple[Any, int]:
 # ---------------------------------------------------------------------------
 
 def save_train_state(path: str, params, opt_state, bstates, step: int = 0,
-                     extra: dict = None) -> None:
-    """One file covering everything ``--resume`` needs (see module doc)."""
+                     extra: dict = None, dp_state=None) -> None:
+    """One file covering everything ``--resume`` needs (see module doc).
+
+    ``dp_state``: the data-parallel gradient-reduce state
+    (:func:`repro.transport.collectives.init_dp_state` — per-replica
+    EF/EF21 residuals and the EF21 aggregate).  Like the boundary
+    feedback buffers it is part of the training trajectory, so a dp run's
+    exact resume must restore it; saved under a ``dp`` key only when
+    given, keeping non-dp files byte-compatible with the PR-4 format.
+    """
     extra = dict(extra or {})
     extra["format"] = "train-state"
-    save(path, {"params": params, "opt": opt_state, "bstates": bstates},
-         step=step, extra=extra)
+    tree = {"params": params, "opt": opt_state, "bstates": bstates}
+    if dp_state is not None:
+        tree["dp"] = dp_state
+    save(path, tree, step=step, extra=extra)
 
 
-def restore_train_state(path: str, params_like, opt_like,
-                        bstates_like) -> Tuple[Any, Any, Any, int]:
+def restore_train_state(path: str, params_like, opt_like, bstates_like,
+                        dp_like=None) -> Tuple[Any, ...]:
     """Strict: the file must match the expected state EXACTLY — leftover
     keys mean the checkpointed run used a different configuration (more
-    boundaries, another optimizer), and resuming minus that state would
-    not reproduce its trajectory."""
-    state, step = restore(path, {"params": params_like, "opt": opt_like,
-                                 "bstates": bstates_like}, strict=True)
+    boundaries, another optimizer, a dp run resumed without --dp), and
+    resuming minus that state would not reproduce its trajectory.
+
+    Returns ``(params, opt, bstates, step)``, or
+    ``(params, opt, bstates, dp_state, step)`` when ``dp_like`` is given.
+    """
+    like = {"params": params_like, "opt": opt_like, "bstates": bstates_like}
+    if dp_like is not None:
+        like["dp"] = dp_like
+    state, step = restore(path, like, strict=True)
+    if dp_like is not None:
+        return (state["params"], state["opt"], state["bstates"],
+                state["dp"], step)
     return state["params"], state["opt"], state["bstates"], step
 
 

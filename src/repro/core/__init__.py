@@ -10,3 +10,13 @@ from repro.core.policy import (BoundaryPolicy, CompressionPolicy,
 from repro.core.boundary import (boundary_apply, boundary_eval,
                                  init_boundary_state,
                                  init_all_boundary_states)
+
+__all__ = [
+    "Compressor", "IDENTITY", "quant", "topk", "quantize_kbit",
+    "dequantize_kbit", "quantize_dequantize", "topk_compress", "topk_mask",
+    "topk_values_indices", "topk_scatter",
+    "BoundaryPolicy", "CompressionPolicy", "NO_COMPRESSION", "NO_POLICY",
+    "quant_policy", "topk_policy", "ef_policy", "aqsgd_policy",
+    "boundary_apply", "boundary_eval", "init_boundary_state",
+    "init_all_boundary_states",
+]

@@ -27,7 +27,7 @@ read the updated buffer out of the gradient pytree (see train/steps.py).
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional, Tuple
+from typing import Optional
 
 import numpy as np
 import jax

@@ -14,7 +14,6 @@ the paper ("input vector" = the activation tensor crossing the boundary).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional, Tuple
 
 import jax

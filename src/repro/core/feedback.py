@@ -16,10 +16,8 @@ gathered/scattered by example id.  All functions are pure.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.compressors import Compressor, topk_compress

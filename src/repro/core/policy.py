@@ -13,7 +13,7 @@ Frozen dataclasses => hashable => usable as ``jax.custom_vjp`` /
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 from repro.core.compressors import Compressor, IDENTITY, quant, topk
 

@@ -19,7 +19,6 @@ from typing import Iterator, Tuple
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 
 # ---------------------------------------------------------------------------

@@ -11,7 +11,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.quantize import quant_dequant as _qdq_pallas

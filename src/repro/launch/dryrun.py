@@ -31,7 +31,7 @@ from repro.launch import mesh as meshlib
 from repro.launch.input_specs import (SHAPES, applicable, batch_specs,
                                       decode_specs, ids_spec)
 from repro.models import encdec, scan_config, transformer
-from repro.models.config import ModelConfig, active_param_count, param_count
+from repro.models.config import active_param_count
 from repro.optim.optimizers import OptimizerConfig, init_opt_state
 from repro.sharding import ctx
 from repro.sharding.specs import (batch_shardings, cache_shardings,
@@ -80,20 +80,38 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
     return totals
 
 
-def collective_counts(hlo_text: str) -> Dict[str, int]:
+def collective_counts(hlo_text: str,
+                      by_pairs: bool = False) -> Dict[str, int]:
     """Number of collective LAUNCHES per op kind in (optimized) HLO —
     each op instance is one collective launch on the interconnect (a
     ``lax.scan`` body appears once, so counts are per steady-state tick
     times the number of loops).  Async ``-start``/``-done`` pairs count
-    once."""
+    once.
+
+    ``by_pairs=True`` keys each count by the op's communication pattern —
+    ``"collective-permute|{{0,2},{2,0},...}"`` (``source_target_pairs``,
+    or ``replica_groups`` for reductions/gathers).  On a 2D DPxPP mesh
+    this separates the DP gradient-reduce ring (pairs along the ``data``
+    axis) from the pipeline's stage ring, so fused-vs-unfused launch
+    claims stay auditable per axis inside one combined train-step program
+    (see benchmarks/pipeline_wire.py, "dp" section).
+    """
     counts: Dict[str, int] = {}
     launch_re = re.compile(
         r"= .+? (all-gather|all-reduce|reduce-scatter|all-to-all|"
         r"collective-permute)(-start)?\(")
+    pairs_re = re.compile(
+        r"(?:source_target_pairs|replica_groups)=(\{\{.*?\}\})")
     for line in hlo_text.splitlines():
-        m = launch_re.search(line.strip())
-        if m:
-            counts[m.group(1)] = counts.get(m.group(1), 0) + 1
+        line = line.strip()
+        m = launch_re.search(line)
+        if not m:
+            continue
+        key = m.group(1)
+        if by_pairs:
+            pm = pairs_re.search(line)
+            key = f"{key}|{pm.group(1) if pm else '?'}"
+        counts[key] = counts.get(key, 0) + 1
     return counts
 
 

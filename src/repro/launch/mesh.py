@@ -20,6 +20,37 @@ def make_local_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_data_mesh(dp: int, *, data_axis: str = "data"):
+    """1D data-parallel mesh: ``dp`` replicas for the compressed gradient
+    all-reduce (transport/collectives.py) around the SIMULATED boundary."""
+    if dp < 1:
+        raise ValueError(f"dp must be >= 1, got {dp}")
+    if jax.device_count() < dp:
+        raise RuntimeError(
+            f"data-parallel mesh needs >= {dp} devices, have "
+            f"{jax.device_count()} — set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={dp} before jax init")
+    return jax.make_mesh((dp,), (data_axis,))
+
+
+def make_dp_pipeline_mesh(dp: int, stages: int, *, data_axis: str = "data",
+                          stage_axis: str = "stage"):
+    """2D ``(data, stages)`` mesh: ``dp`` replicas each running a
+    ``stages``-deep compressed pipeline.  Row r of the mesh is one replica;
+    ``ppermute`` over ``stage_axis`` moves activations within a row, the
+    DP gradient all-reduce rings over ``data_axis`` within a column.
+    """
+    if dp < 1 or stages < 1:
+        raise ValueError(f"dp and stages must be >= 1, got ({dp}, {stages})")
+    need = dp * stages
+    if jax.device_count() < need:
+        raise RuntimeError(
+            f"2D DPxPP mesh needs >= {need} devices (dp={dp} x "
+            f"stages={stages}), have {jax.device_count()} — set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} before jax init")
+    return jax.make_mesh((dp, stages), (data_axis, stage_axis))
+
+
 # Hardware constants for §Roofline (TPU v5e)
 PEAK_FLOPS_BF16 = 197e12        # per chip
 HBM_BW = 819e9                  # bytes/s per chip

@@ -84,11 +84,11 @@ def main(argv=None) -> int:
         args.engine = "static" if unsupported else "continuous"
         if unsupported:
             print(f"# {cfg.arch_id}: {sorted(unsupported)} cannot mask "
-                  f"left-padding -> static engine", flush=True)
+                  "left-padding -> static engine", flush=True)
     elif args.engine == "continuous" and unsupported:
         ap.error(f"--engine continuous: {sorted(unsupported)} cannot mask "
-                 f"left-padding — use --engine static "
-                 f"(equal-length batches)")
+                 "left-padding — use --engine static "
+                 "(equal-length batches)")
     mod = encdec if cfg.enc_dec else transformer
     params = mod.init_params(jax.random.PRNGKey(args.seed), cfg)
     if args.ckpt:

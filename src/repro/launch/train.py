@@ -122,6 +122,25 @@ def main(argv=None) -> int:
     ap.add_argument("--pipeline-microbatches", type=int, default=None,
                     help="GPipe/1F1B microbatch count for the pipeline "
                          "transport (default: the stage count)")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel replicas: the global batch splits "
+                         "into --dp contiguous shards and per-replica "
+                         "gradients are all-reduced over the real wire "
+                         "(transport/collectives.py).  With --transport "
+                         "pipeline this runs the 2D (data, stages) mesh "
+                         "(needs dp*stages host devices)")
+    ap.add_argument("--dp-codec", default="none",
+                    choices=("none", "q8", "q4", "topk"),
+                    help="wire codec for the DP gradient all-reduce "
+                         "(paper Tables 2-3: gradients tolerate milder "
+                         "rates than activations)")
+    ap.add_argument("--dp-feedback", default="none",
+                    choices=("none", "ef", "ef21"),
+                    help="per-replica error feedback on the DP reduce "
+                         "(residuals ride the train state and the "
+                         "checkpoint)")
+    ap.add_argument("--dp-k-frac", type=float, default=0.1,
+                    help="TopK kept fraction for --dp-codec topk")
     ap.add_argument("--feedback", default="none",
                     choices=("none", "ef", "ef21", "efmixed", "aqsgd"),
                     help="error-feedback mode (paper Tables 3-4); replaces "
@@ -202,13 +221,15 @@ def main(argv=None) -> int:
         policy = CompressionPolicy(num_stages=stages, boundary=bp)
     if args.stages:
         policy = dataclasses.replace(policy, num_stages=args.stages)
-    if (args.transport == "pipeline"
+    need_devices = (args.dp * policy.num_stages
+                    if args.transport == "pipeline" else args.dp)
+    if (need_devices > 1
             and "xla_force_host_platform_device_count"
             not in os.environ.get("XLA_FLAGS", "")):
         # Must land before first jax backend init (imports alone are fine).
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "")
-            + f" --xla_force_host_platform_device_count={policy.num_stages}")
+            + f" --xla_force_host_platform_device_count={need_devices}")
     n_params = param_count(cfg)
     print(f"# arch={cfg.arch_id} params~{n_params/1e6:.1f}M "
           f"(active {active_param_count(cfg)/1e6:.1f}M) "
@@ -254,13 +275,30 @@ def main(argv=None) -> int:
                                  transport=args.transport,
                                  pipeline_microbatches=pipeline_mb,
                                  schedule=args.schedule,
-                                 virtual_stages=virtual_stages)
+                                 virtual_stages=virtual_stages,
+                                 dp=args.dp, dp_codec=args.dp_codec,
+                                 dp_feedback=args.dp_feedback,
+                                 dp_k_frac=args.dp_k_frac)
+    dp_state = None
+    if args.dp > 1:
+        from repro.train.loop import init_lm_dp_state
+        dp_state = init_lm_dp_state(cfg, params, policy, args.dp,
+                                    args.dp_feedback,
+                                    transport=args.transport,
+                                    virtual_stages=virtual_stages)
+        print(f"# dp={args.dp} gradient all-reduce: codec={args.dp_codec} "
+              f"feedback={args.dp_feedback}", flush=True)
 
     start_step = 0
     if args.resume:
-        params, opt_state, bstates, start_step = \
-            ckpt_io.restore_train_state(args.resume, params, opt_state,
-                                        bstates)
+        if args.dp > 1:
+            params, opt_state, bstates, dp_state, start_step = \
+                ckpt_io.restore_train_state(args.resume, params, opt_state,
+                                            bstates, dp_like=dp_state)
+        else:
+            params, opt_state, bstates, start_step = \
+                ckpt_io.restore_train_state(args.resume, params, opt_state,
+                                            bstates)
         print(f"# resumed step-{start_step} train state from {args.resume}",
               flush=True)
     stream = synthetic_stream(cfg, args.batch, seq, args.seed,
@@ -270,9 +308,14 @@ def main(argv=None) -> int:
     tokens_per_step = args.batch * seq
     for step in range(start_step + 1, args.steps + 1):
         toks, ids = next(stream)
-        params, opt_state, bstates, m = step_fn(
-            params, opt_state, bstates, make_batch(cfg, toks),
-            jnp.asarray(ids))
+        if args.dp > 1:
+            params, opt_state, bstates, dp_state, m = step_fn(
+                params, opt_state, bstates, make_batch(cfg, toks),
+                jnp.asarray(ids), dp_state)
+        else:
+            params, opt_state, bstates, m = step_fn(
+                params, opt_state, bstates, make_batch(cfg, toks),
+                jnp.asarray(ids))
         if step % args.log_every == 0 or step == args.steps:
             dt = time.time() - t0
             loss = float(m["loss"])
@@ -288,11 +331,13 @@ def main(argv=None) -> int:
                 args.ckpt.replace("{step}", str(step)), params, opt_state,
                 bstates, step=step,
                 extra={"arch": cfg.arch_id, "policy": args.policy,
-                       "feedback": args.feedback})
+                       "feedback": args.feedback, "dp": args.dp,
+                       "dp_codec": args.dp_codec},
+                dp_state=dp_state)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(metrics, f, indent=1)
-    print(f"# done: final loss "
+    print("# done: final loss "
           f"{metrics[-1]['loss'] if metrics else 'n/a (already at --steps)'}",
           flush=True)
     return 0

@@ -12,7 +12,7 @@ RoPE is applied at *write* time so ring slots never need re-rotation.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

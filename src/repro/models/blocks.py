@@ -17,8 +17,7 @@ Uniform interface so the stack can `lax.scan` over layer groups:
 """
 from __future__ import annotations
 
-import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

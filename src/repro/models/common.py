@@ -7,7 +7,7 @@ bf16 weights/activations by default, fp32 for norm statistics and softmax.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

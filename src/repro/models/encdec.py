@@ -13,7 +13,7 @@ the encoder output once (no feedback state — it is sent once per sequence).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,12 +22,11 @@ from repro.core.boundary import (boundary_apply, boundary_eval,
                                  boundary_wire_eval)
 from repro.core.policy import CompressionPolicy, NO_POLICY
 from repro.models import attention as A
-from repro.models.common import (DTYPE, dense_init, embed_init, mlp_apply,
-                                 mlp_init, norm_apply, norm_init,
-                                 sinusoidal_pos)
+from repro.models.common import (DTYPE, embed_init, mlp_apply, mlp_init,
+                                 norm_apply, norm_init, sinusoidal_pos)
 from repro.models.config import ModelConfig
 from repro.models.scan_config import scan_unroll
-from repro.models.transformer import _lm_logits, lm_loss, segment_bounds
+from repro.models.transformer import _lm_logits, segment_bounds
 from repro.sharding.ctx import constrain
 
 

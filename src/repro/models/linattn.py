@@ -18,7 +18,6 @@ This is the layout the Pallas kernel (kernels/linattn.py) mirrors.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional, Tuple
 
 import jax

@@ -18,7 +18,6 @@ Entry points:
 """
 from __future__ import annotations
 
-import functools
 from typing import List, Optional, Tuple
 
 import jax
@@ -204,7 +203,7 @@ def stack_layer_stages(params, num_stages: int):
             raise ValueError(
                 f"num_groups={g} is not divisible by num_stages="
                 f"{num_stages}; pick a stage count that divides the "
-                f"layer-group count (--stages for launch/train)")
+                "layer-group count (--stages for launch/train)")
         return a.reshape(num_stages, g // num_stages, *a.shape[1:])
     return jax.tree.map(reshape, params["layers"])
 

@@ -117,10 +117,10 @@ class ServeEngine:
             unsupported = left_pad_unsupported(self.cfg)
             if unsupported:
                 raise ValueError(
-                    f"mixed-length prompts need left-padding, which "
+                    "mixed-length prompts need left-padding, which "
                     f"{sorted(unsupported)} cannot support (see "
-                    f"left_pad_unsupported) — batch equal-length "
-                    f"prompts for this arch")
+                    "left_pad_unsupported) — batch equal-length "
+                    "prompts for this arch")
         prompts = np.zeros((b, plen), np.int32)
         for i, r in enumerate(requests):
             prompts[i, plen - len(r.prompt):] = r.prompt  # left-pad
@@ -221,10 +221,10 @@ class ContinuousEngine:
         bad = left_pad_unsupported(cfg)
         if bad:
             raise ValueError(
-                f"continuous batching needs maskable left-padding and "
+                "continuous batching needs maskable left-padding and "
                 f"per-slot positions; {sorted(bad)} supports neither "
-                f"(see left_pad_unsupported) — use ServeEngine "
-                f"(--engine static) with equal-length batches")
+                "(see left_pad_unsupported) — use ServeEngine "
+                "(--engine static) with equal-length batches")
         self.params, self.cfg, self.policy = params, cfg, policy
         self.compress, self.sampling = compress, sampling
         self.num_slots, self.max_seq = num_slots, max_seq

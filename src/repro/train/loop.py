@@ -12,15 +12,13 @@ compression (index-reuse vs separate) and report eval loss / perplexity.
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.boundary import init_all_boundary_states
 from repro.core.policy import CompressionPolicy, NO_POLICY
 from repro.data.synthetic import ImageClassData, LMData
 from repro.models import cnn, transformer
@@ -144,6 +142,24 @@ def _pipeline_bstates(policy: CompressionPolicy, feat_shape, *, batch: int,
                                virtual_stages=virtual_stages)
 
 
+def init_lm_dp_state(cfg, params, policy: CompressionPolicy, dp: int,
+                     dp_feedback: str = "none", *,
+                     transport: str = "simulated", virtual_stages: int = 1):
+    """DP-reduce state for an LM train step: the residual/aggregate trees
+    mirror what actually crosses the data axis — the FULL param tree on
+    the simulated transport (vmap lanes differentiate everything per
+    replica), the pipelined layer stack on the pipeline transport
+    (embed/head gradients stay exact and replicated)."""
+    from repro.models import transformer
+    from repro.transport.collectives import init_dp_state
+    if transport == "pipeline":
+        like = jax.eval_shape(lambda p: transformer.stack_layer_stages(
+            p, policy.num_stages * virtual_stages), params)
+    else:
+        like = jax.eval_shape(lambda p: p, params)
+    return init_dp_state(like, dp, dp_feedback)
+
+
 def _cnn_bstates(policy: CompressionPolicy, data: ImageClassData,
                  batch: int, width: int):
     shapes = cnn.boundary_shapes(width, data.image)
@@ -176,7 +192,9 @@ def run_lm_experiment(cfg: ModelConfig, policy: CompressionPolicy, *,
                       seed: int = 0, transport: str = "simulated",
                       mesh=None, stage_axis: str = "stage",
                       pipeline_microbatches: Optional[int] = None,
-                      schedule: str = "gpipe", virtual_stages: int = 1
+                      schedule: str = "gpipe", virtual_stages: int = 1,
+                      dp: int = 1, dp_codec: str = "none",
+                      dp_feedback: str = "none", dp_k_frac: float = 0.1
                       ) -> ExperimentResult:
     """Fine-tune a (pre-trained) tiny LM with boundary compression.
 
@@ -184,6 +202,11 @@ def run_lm_experiment(cfg: ModelConfig, policy: CompressionPolicy, *,
     ``ppermute`` pipeline (same params/policy as simulated — the
     transformer's layer groups are homogeneous, so the pre-trained weights
     carry over unchanged) under ``schedule`` (gpipe | 1f1b | interleaved).
+
+    ``dp > 1`` adds the data-parallel axis with a compressed gradient
+    all-reduce over the ``dp_codec`` wire format (transport/collectives.py;
+    ``dp_feedback``: per-replica ef | ef21 residuals) on either transport —
+    needs ``dp`` (simulated) or ``dp * num_stages`` (pipeline) devices.
     """
     data = data or LMData()
     opt = opt or OptimizerConfig(kind="adamw", lr=3e-4, weight_decay=0.01,
@@ -211,15 +234,27 @@ def run_lm_experiment(cfg: ModelConfig, policy: CompressionPolicy, *,
                               stage_axis=stage_axis,
                               pipeline_microbatches=pipeline_microbatches,
                               schedule=schedule,
-                              virtual_stages=virtual_stages)
+                              virtual_stages=virtual_stages,
+                              dp=dp, dp_codec=dp_codec,
+                              dp_feedback=dp_feedback, dp_k_frac=dp_k_frac)
+    dp_state = (init_lm_dp_state(cfg, params, policy, dp, dp_feedback,
+                                 transport=transport,
+                                 virtual_stages=virtual_stages)
+                if dp > 1 else None)
 
     t0 = time.time()
     curve = []
     for ep in range(epochs):
         for toks, ids in data.epoch(batch, ep):
-            params, opt_state, bstates, m = step(
-                params, opt_state, bstates, {"tokens": jnp.asarray(toks)},
-                jnp.asarray(ids))
+            if dp > 1:
+                params, opt_state, bstates, dp_state, m = step(
+                    params, opt_state, bstates,
+                    {"tokens": jnp.asarray(toks)}, jnp.asarray(ids),
+                    dp_state)
+            else:
+                params, opt_state, bstates, m = step(
+                    params, opt_state, bstates,
+                    {"tokens": jnp.asarray(toks)}, jnp.asarray(ids))
             curve.append(float(m["loss"]))
     res = ExperimentResult(name=name or policy.boundary.name,
                            train_curve=curve, seconds=time.time() - t0)

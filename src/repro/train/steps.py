@@ -21,18 +21,16 @@ Everything is jit-friendly and policy-static.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 import warnings
-from typing import Callable, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import CompressionPolicy, NO_POLICY
+from repro.core.policy import CompressionPolicy
 from repro.models import encdec, transformer
 from repro.models.transformer import lm_loss
-from repro.optim.optimizers import OptimizerConfig, apply_updates, init_opt_state
+from repro.optim.optimizers import OptimizerConfig, apply_updates
 
 
 def _uniform_boundary(policy: CompressionPolicy):
@@ -57,6 +55,19 @@ def _pipeline_mesh(policy: CompressionPolicy, mesh, stage_axis: str):
             f"{jax.device_count()} — set XLA_FLAGS="
             f"--xla_force_host_platform_device_count={s} before jax init")
     return jax.make_mesh((s,), (stage_axis,))
+
+
+def _split_leading(tree, k: int):
+    """Reshape every leaf ``(N, ...) -> (k, N/k, ...)``: the shard split
+    shared by gradient accumulation (k chunks) and DP (k replica lanes)."""
+    return jax.tree.map(
+        lambda a: a.reshape(k, a.shape[0] // k, *a.shape[1:]), tree)
+
+
+def _merge_leading(tree):
+    """Inverse of :func:`_split_leading`."""
+    return jax.tree.map(
+        lambda a: a.reshape(a.shape[0] * a.shape[1], *a.shape[2:]), tree)
 
 
 def _split_states(bstates):
@@ -99,7 +110,10 @@ def make_lm_train_step(cfg, policy: CompressionPolicy,
                        transport: str = "simulated", mesh=None,
                        stage_axis: str = "stage",
                        pipeline_microbatches: Optional[int] = None,
-                       schedule: str = "gpipe", virtual_stages: int = 1):
+                       schedule: str = "gpipe", virtual_stages: int = 1,
+                       dp: int = 1, dp_codec: str = "none",
+                       dp_feedback: str = "none", dp_k_frac: float = 0.1,
+                       data_axis: str = "data"):
     """Returns jit'd ``step(params, opt_state, bstates, batch, ids)
     -> (params, opt_state, bstates, metrics)``.
 
@@ -115,6 +129,21 @@ def make_lm_train_step(cfg, policy: CompressionPolicy,
     pipeline over ``mesh``'s ``stage_axis`` under ``schedule``
     (gpipe | 1f1b | interleaved; ``virtual_stages`` slices per device for
     interleaved; ``pipeline_microbatches`` defaults to the stage count).
+
+    ``dp > 1`` adds a data-parallel dimension with a COMPRESSED gradient
+    all-reduce (transport/collectives.py): the global batch splits into
+    ``dp`` contiguous shards, per-replica gradients cross the ``data``
+    mesh axis packed by ``dp_codec`` (none/q8/q4/topk at ``dp_k_frac``),
+    optionally error-compensated per replica (``dp_feedback``:
+    ef | ef21).  The step signature gains a DP-state argument:
+    ``step(params, opt_state, bstates, batch, ids, dp_state)
+    -> (params, opt_state, bstates, dp_state, metrics)`` with ``dp_state``
+    from :func:`repro.transport.collectives.init_dp_state`.  On the
+    simulated transport the replicas are ``vmap`` lanes around the paper's
+    boundary (``grad_accum`` composes per lane — accumulate locally,
+    reduce once); on the pipeline transport the mesh is the 2D
+    ``(data, stages)`` grid and the reduced tree is the pipelined layer
+    stack (embed/head/norm grads stay exact: they run replicated).
     """
     mod = encdec if cfg.enc_dec else transformer
     grad_accum = _resolve_grad_accum(grad_accum, microbatches)
@@ -127,7 +156,9 @@ def make_lm_train_step(cfg, policy: CompressionPolicy,
         return _make_pipeline_lm_train_step(
             cfg, policy, opt, mesh=mesh, stage_axis=stage_axis,
             microbatches=pipeline_microbatches, jit=jit,
-            schedule=schedule, virtual_stages=virtual_stages)
+            schedule=schedule, virtual_stages=virtual_stages,
+            dp=dp, dp_codec=dp_codec, dp_feedback=dp_feedback,
+            dp_k_frac=dp_k_frac, data_axis=data_axis)
     if transport != "simulated":
         raise ValueError(f"unknown transport {transport!r}")
 
@@ -144,27 +175,18 @@ def make_lm_train_step(cfg, policy: CompressionPolicy,
         total = loss + aux_weight * aux
         return total, (loss, aux, new_fw)
 
-    def step(params, opt_state, bstates, batch, ids):
-        fw_bufs, bw_bufs = _split_states(bstates)
-        (total, (loss, aux, new_fw)), (grads, new_bw) = jax.value_and_grad(
-            loss_fn, argnums=(0, 1), has_aux=True)(
-                params, bw_bufs, fw_bufs, batch, ids)
-        params, opt_state = apply_updates(opt, params, grads, opt_state)
-        new_states = _merge_states(new_fw if new_fw else fw_bufs, new_bw)
-        metrics = {"loss": loss, "aux": aux, "total": total}
-        return params, opt_state, new_states, metrics
-
-    def step_accum(params, opt_state, bstates, batch, ids):
+    def compute_grads(params, bw_bufs, fw_bufs, batch, ids):
+        """One replica's (grads, new_fw, new_bw, metrics) over its batch
+        shard; ``grad_accum`` scans within the shard, so accumulation
+        composes with the DP reduce (accumulate locally, reduce once)."""
+        if grad_accum == 1:
+            (total, (loss, aux, new_fw)), (grads, new_bw) = \
+                jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)(
+                    params, bw_bufs, fw_bufs, batch, ids)
+            return grads, new_fw, new_bw, {"loss": loss, "aux": aux,
+                                           "total": total}
         mb = grad_accum
-        if policy.num_boundaries and any(
-                policy.at(i).feedback == "aqsgd"
-                for i in range(policy.num_boundaries)):
-            raise NotImplementedError("aqsgd + gradient accumulation")
-        fw_bufs, bw_bufs = _split_states(bstates)
-        split = lambda t: jax.tree.map(
-            lambda a: a.reshape(mb, a.shape[0] // mb, *a.shape[1:]), t)
-        unsplit = lambda t: jax.tree.map(
-            lambda a: a.reshape(a.shape[0] * a.shape[1], *a.shape[2:]), t)
+        split = lambda t: _split_leading(t, mb)
         xs = (split(batch), split(ids), split(fw_bufs), split(bw_bufs))
         grad0 = jax.tree.map(
             lambda p: jnp.zeros(p.shape, jnp.float32), params)
@@ -182,17 +204,29 @@ def make_lm_train_step(cfg, policy: CompressionPolicy,
         (gacc, loss_s, aux_s), (new_fw_s, new_bw_s) = jax.lax.scan(
             body, (grad0, jnp.float32(0.0), jnp.float32(0.0)), xs)
         grads = jax.tree.map(lambda g: (g / mb).astype(jnp.bfloat16), gacc)
-        params, opt_state = apply_updates(opt, params, grads, opt_state)
-        new_fw = [unsplit(b) for b in new_fw_s]
-        new_bw = [unsplit(b) for b in new_bw_s]
-        new_states = _merge_states(new_fw if new_fw else [b for b in fw_bufs],
-                                   new_bw)
+        new_fw = [_merge_leading(b) for b in new_fw_s]
+        new_bw = [_merge_leading(b) for b in new_bw_s]
         metrics = {"loss": loss_s / mb, "aux": aux_s / mb,
                    "total": (loss_s + aux_weight * aux_s) / mb}
+        return grads, new_fw, new_bw, metrics
+
+    if grad_accum > 1 and policy.num_boundaries and any(
+            policy.at(i).feedback == "aqsgd"
+            for i in range(policy.num_boundaries)):
+        raise NotImplementedError("aqsgd + gradient accumulation")
+
+    def step(params, opt_state, bstates, batch, ids):
+        fw_bufs, bw_bufs = _split_states(bstates)
+        grads, new_fw, new_bw, metrics = compute_grads(
+            params, bw_bufs, fw_bufs, batch, ids)
+        params, opt_state = apply_updates(opt, params, grads, opt_state)
+        new_states = _merge_states(new_fw if new_fw else fw_bufs, new_bw)
         return params, opt_state, new_states, metrics
 
-    if grad_accum > 1:
-        step = step_accum
+    if dp > 1:
+        step = _make_dp_simulated_step(policy, opt, compute_grads, dp,
+                                       dp_codec, dp_feedback, dp_k_frac,
+                                       data_axis)
 
     if not jit:
         return step
@@ -200,12 +234,56 @@ def make_lm_train_step(cfg, policy: CompressionPolicy,
     return jax.jit(step, donate_argnums=donate_argnums)
 
 
+def _make_dp_simulated_step(policy, opt, compute_grads, dp, dp_codec,
+                            dp_feedback, dp_k_frac, data_axis):
+    """Data-parallel wrapper around the simulated-boundary gradient
+    computation: ``dp`` ``vmap`` lanes (one per contiguous batch shard),
+    then one compressed all-reduce of the per-lane gradients over the
+    ``data`` mesh axis.  Per-example feedback buffers split by shard;
+    AQ-SGD's dataset-indexed buffer has no per-replica split and is
+    rejected."""
+    from repro.launch.mesh import make_data_mesh
+    from repro.transport.collectives import make_grad_all_reduce
+    if policy.num_boundaries and any(
+            policy.at(i).feedback == "aqsgd"
+            for i in range(policy.num_boundaries)):
+        raise NotImplementedError(
+            "aqsgd boundary feedback + data parallelism: the "
+            "(num_samples, ...) buffer is dataset-indexed, not "
+            "per-example-sharded")
+    mesh = make_data_mesh(dp, data_axis=data_axis)
+    reduce_fn = make_grad_all_reduce(mesh, data_axis, dp_codec,
+                                     k_frac=dp_k_frac,
+                                     feedback=dp_feedback, average=True)
+
+    def step_dp(params, opt_state, bstates, batch, ids, dp_state):
+        fw_bufs, bw_bufs = _split_states(bstates)
+        g_dp, new_fw_dp, new_bw_dp, met = jax.vmap(
+            compute_grads, in_axes=(None, 0, 0, 0, 0))(
+                params, _split_leading(bw_bufs, dp),
+                _split_leading(fw_bufs, dp), _split_leading(batch, dp),
+                _split_leading(ids, dp))
+        grads, new_dp_state = reduce_fn(g_dp, dp_state)
+        params, opt_state = apply_updates(opt, params, grads, opt_state)
+        new_fw = [_merge_leading(b) for b in new_fw_dp]
+        new_bw = [_merge_leading(b) for b in new_bw_dp]
+        new_states = _merge_states(new_fw if new_fw else fw_bufs, new_bw)
+        metrics = jax.tree.map(jnp.mean, met)
+        return params, opt_state, new_states, new_dp_state, metrics
+
+    return step_dp
+
+
 def _make_pipeline_lm_train_step(cfg, policy: CompressionPolicy,
                                  opt: OptimizerConfig, *, mesh=None,
                                  stage_axis: str = "stage",
                                  microbatches: Optional[int] = None,
                                  jit: bool = True, schedule: str = "gpipe",
-                                 virtual_stages: int = 1):
+                                 virtual_stages: int = 1, dp: int = 1,
+                                 dp_codec: str = "none",
+                                 dp_feedback: str = "none",
+                                 dp_k_frac: float = 0.1,
+                                 data_axis: str = "data"):
     """LM training through the real compressed ``ppermute`` pipeline.
 
     Same ``step(params, opt_state, bstates, batch, ids)`` signature as the
@@ -223,9 +301,25 @@ def _make_pipeline_lm_train_step(cfg, policy: CompressionPolicy,
         raise NotImplementedError("pipeline transport: decoder-only archs")
     from repro.transport.pipeline import pipeline_apply
     bp = _uniform_boundary(policy)
-    mesh = _pipeline_mesh(policy, mesh, stage_axis)
     s_stages = policy.num_stages
     needs_state = bp.needs_fw_buffer or bp.needs_bw_buffer
+    if dp > 1:
+        if needs_state:
+            raise NotImplementedError(
+                "per-stage boundary feedback + data parallelism on the "
+                "pipeline transport: use a feedback-free boundary policy "
+                "(DP-side error feedback is dp_feedback=)")
+        from repro.launch.mesh import make_dp_pipeline_mesh
+        if mesh is None:
+            mesh = make_dp_pipeline_mesh(dp, s_stages, data_axis=data_axis,
+                                         stage_axis=stage_axis)
+        return _make_dp_pipeline_lm_train_step(
+            cfg, bp, opt, mesh=mesh, stage_axis=stage_axis,
+            data_axis=data_axis, microbatches=microbatches, jit=jit,
+            schedule=schedule, virtual_stages=virtual_stages, dp=dp,
+            dp_codec=dp_codec, dp_feedback=dp_feedback,
+            dp_k_frac=dp_k_frac, s_stages=s_stages)
+    mesh = _pipeline_mesh(policy, mesh, stage_axis)
 
     def forward(params, batch, fw_state, bw_state, ids):
         labels = jnp.roll(batch["tokens"], -1, axis=1)
@@ -265,6 +359,61 @@ def _make_pipeline_lm_train_step(cfg, policy: CompressionPolicy,
         return params, opt_state, {"fw": new_fw, "bw": new_bw}, metrics
 
     step = step_feedback if needs_state else step
+    return jax.jit(step) if jit else step
+
+
+def _make_dp_pipeline_lm_train_step(cfg, bp, opt: OptimizerConfig, *, mesh,
+                                    stage_axis: str, data_axis: str,
+                                    microbatches: Optional[int],
+                                    jit: bool, schedule: str,
+                                    virtual_stages: int, dp: int,
+                                    dp_codec: str, dp_feedback: str,
+                                    dp_k_frac: float, s_stages: int):
+    """LM training on the 2D ``(data, stages)`` mesh: every replica row
+    pipelines its contiguous batch shard through the compressed
+    ``ppermute`` wire, and the per-replica LAYER-STACK gradients cross the
+    ``data`` axis through the compressed all-reduce
+    (transport/collectives.py).  The stack rides into the loss as a
+    dp-stacked broadcast copy, so its gradient comes back per replica with
+    no hidden ``psum``; embed/head/norm run replicated on the global batch
+    and keep exact gradients.  Step signature:
+    ``step(params, opt_state, bstates, batch, ids, dp_state)``.
+    """
+    from repro.transport.pipeline import pipeline_apply
+    from repro.transport.collectives import make_grad_all_reduce
+    # shard the reduce over the stage axis too: each stage column rings
+    # only its own slice of the stack gradient (which pipeline_apply
+    # already leaves P(stage)-sharded — no reshard gather)
+    reduce_fn = make_grad_all_reduce(mesh, data_axis, dp_codec,
+                                     k_frac=dp_k_frac, feedback=dp_feedback,
+                                     average=False, shard_axis=stage_axis)
+    n_slices = s_stages * virtual_stages
+
+    def forward_dp(params, stack_dp, batch, ids):
+        labels = jnp.roll(batch["tokens"], -1, axis=1)
+        mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+        x = transformer._embed_input(params, batch, cfg)
+        x = pipeline_apply(
+            transformer.stage_stack_fn(cfg), stack_dp, x, mesh, stage_axis,
+            policy=bp, microbatches=microbatches, schedule=schedule,
+            virtual_stages=virtual_stages, dp_axis=data_axis)
+        return transformer.hidden_lm_loss(params, x, labels, cfg, mask)
+
+    def step(params, opt_state, bstates, batch, ids, dp_state):
+        stack = transformer.stack_layer_stages(params, n_slices)
+        stack_dp = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (dp, *a.shape)), stack)
+        loss, (g_params, g_stack_dp) = jax.value_and_grad(
+            forward_dp, argnums=(0, 1))(params, stack_dp, batch, ids)
+        g_stack, new_dp_state = reduce_fn(g_stack_dp, dp_state)
+        grads = dict(g_params)
+        grads["layers"] = jax.tree.map(
+            lambda a: a.reshape(a.shape[0] * a.shape[1], *a.shape[2:]),
+            g_stack)
+        params, opt_state = apply_updates(opt, params, grads, opt_state)
+        metrics = {"loss": loss, "aux": jnp.float32(0.0), "total": loss}
+        return params, opt_state, bstates, new_dp_state, metrics
+
     return jax.jit(step) if jit else step
 
 

@@ -3,17 +3,20 @@
 ``Transport.fw(x) / Transport.bw(g)`` is the one interface both boundary
 implementations realize; ``codecs`` is the shared wire-format registry.
 
-  codecs     — pack/unpack wire formats + registry (none/q8/q4/topk, ...)
-  base       — the Transport interface + wire-cost accounting
-  simulated  — single-device convergence-faithful transport (paper Sec. 2.1)
-  pipeline   — real shard_map/ppermute pipeline, differentiable (beyond-paper)
-  schedules  — pluggable pipeline schedules (gpipe / 1f1b / interleaved)
+  codecs      — pack/unpack wire formats + registry (none/q8/q4/topk, ...)
+  base        — the Transport interface + wire-cost accounting
+  simulated   — single-device convergence-faithful transport (paper Sec. 2.1)
+  pipeline    — real shard_map/ppermute pipeline, differentiable (beyond-paper)
+  schedules   — pluggable pipeline schedules (gpipe / 1f1b / interleaved)
+  collectives — compressed data-parallel gradient all-reduce (2D DPxPP mesh)
 """
-from repro.transport.base import Transport
+from repro.transport.base import Transport, shard_map_compat
 from repro.transport.codecs import (WireCodec, codec_for, fuse_payload,
                                     get_codec, pack_payload, register_codec,
                                     registered_codecs, unfuse_payload,
                                     unpack_payload, wire_bytes)
+from repro.transport.collectives import (dp_wire_report, init_dp_state,
+                                         make_grad_all_reduce)
 from repro.transport.pipeline import (PipelineTransport, init_feedback_state,
                                       pipeline_apply, pipeline_forward)
 from repro.transport.schedules import (Schedule, SCHEDULES, as_schedule,
@@ -23,9 +26,10 @@ from repro.transport.simulated import SimulatedTransport, simulated_transport
 __all__ = [
     "Transport", "WireCodec", "codec_for", "get_codec", "pack_payload",
     "register_codec", "registered_codecs", "unpack_payload", "wire_bytes",
-    "fuse_payload", "unfuse_payload",
+    "fuse_payload", "unfuse_payload", "shard_map_compat",
     "PipelineTransport", "init_feedback_state", "pipeline_apply",
     "pipeline_forward",
+    "dp_wire_report", "init_dp_state", "make_grad_all_reduce",
     "Schedule", "SCHEDULES", "as_schedule", "get_schedule",
     "SimulatedTransport", "simulated_transport",
 ]

@@ -26,8 +26,7 @@ On TPU the ``q8`` pack/unpack routes through the fused Pallas wire kernels
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

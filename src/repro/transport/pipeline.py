@@ -68,19 +68,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.feedback import needs_recv_mirror
 from repro.core.policy import (BoundaryPolicy, quant_policy, topk_policy)
-from repro.transport.base import Transport
+from repro.transport.base import Transport, shard_map_compat as _shard_map
 from repro.transport.codecs import codec_for, fuse_payload, unfuse_payload
 from repro.transport.schedules import Schedule, as_schedule
-
-def _shard_map(f, mesh, in_specs, out_specs):
-    """jax.shard_map moved between jax versions; replication checking is
-    off either way (payload pytrees confuse it)."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-    from jax.experimental.shard_map import shard_map
-    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                     check_rep=False)
 
 
 SCHEME_POLICIES = {
@@ -463,7 +453,8 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x, mesh: Mesh,
                    microbatches: Optional[int] = None,
                    schedule: Union[str, Schedule] = "gpipe",
                    virtual_stages: Optional[int] = None,
-                   fw_state=None, bw_state=None, ids=None):
+                   fw_state=None, bw_state=None, ids=None,
+                   dp_axis: Optional[str] = None):
     """Run ``stage_fn(stage_params, x) -> x`` as a pipelined stage stack
     over mesh axis ``axis``, ppermute-ing PACKED payloads between stages —
     differentiable end to end (compressed gradient payloads hop backward).
@@ -482,6 +473,16 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x, mesh: Mesh,
     positive when given (the interleaved schedule additionally requires it
     to be a multiple of S).
 
+    ``dp_axis``: run ``dp = mesh.shape[dp_axis]`` data-parallel replicas of
+    the pipeline on a 2D ``(data, stages)`` mesh.  ``params_stacked`` then
+    carries a LEADING replica dim ``(dp, S * v, ...)`` — one (usually
+    broadcast) copy per replica, so its gradient comes back PER REPLICA
+    with no hidden cross-replica ``psum``; the caller reduces it explicitly
+    (transport/collectives.py, the compressed DP gradient all-reduce).
+    The global batch splits into ``dp`` contiguous shards (replica r takes
+    ``x[r*B/dp:(r+1)*B/dp]``), each pipelined with ``microbatches``
+    microbatches exactly as a solo run on that shard would be.
+
     Feedback state: when the policy carries EF/EF21/EF-mixed/AQ-SGD
     buffers, pass ``fw_state``/``bw_state`` from
     :func:`init_feedback_state` (built with the same ``virtual_stages``,
@@ -495,6 +496,7 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x, mesh: Mesh,
     if policy is None:
         policy = _policy_for_scheme(scheme or "none", k_frac)
     s_stages = mesh.shape[axis]
+    dp = mesh.shape[dp_axis] if dp_axis is not None else 1
     sched = as_schedule(schedule, virtual_stages)
     v = sched.virtual_stages
     transport = PipelineTransport(policy, axis, s_stages,
@@ -506,30 +508,40 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x, mesh: Mesh,
         if not isinstance(microbatches, (int, np.integer)) \
                 or microbatches <= 0:
             raise ValueError(
-                f"microbatches must be a positive int, got "
+                "microbatches must be a positive int, got "
                 f"{microbatches!r} — pass None (or omit it) to default to "
-                f"the stage count")
+                "the stage count")
         mb = int(microbatches)
     sched.validate(mb, s_stages)
     b = x.shape[0]
-    if b % mb:
+    if b % (mb * dp):
         raise ValueError(f"batch {b} is not divisible by microbatch count "
-                         f"{mb} (defaults to the stage count)")
-    mbsz = b // mb
+                         f"{mb} x dp {dp} (microbatches defaults to the "
+                         "stage count)")
+    mbsz = b // (mb * dp)
 
     lead = {a.shape[0] for a in jax.tree.leaves(params_stacked)}
-    if lead != {s_stages * v}:
+    slice_dim = 1 if dp_axis is not None else 0
+    want_lead = dp if dp_axis is not None else s_stages * v
+    slices = ({a.shape[1] for a in jax.tree.leaves(params_stacked)}
+              if dp_axis is not None else lead)
+    if lead != {want_lead} or slices != {s_stages * v}:
+        got = (f"got leading dims {sorted(lead)}" if dp_axis is None else
+               f"got replica dims {sorted(lead)} (want {dp}) x slice dims "
+               f"{sorted(slices)}")
         raise ValueError(
-            f"params_stacked must have leading dim num_stages * "
-            f"virtual_stages = {s_stages}*{v} = {s_stages * v} (logical "
-            f"stage slices); got leading dims {sorted(lead)}")
+            "params_stacked must have leading dim"
+            f"{(' (dp=' + str(dp) + ',') if dp_axis else ''} num_stages * "
+            f"virtual_stages = {s_stages}*{v} = {s_stages * v}"
+            f"{')' if dp_axis else ''} (logical stage slices); {got}")
     if v > 1:
         # logical order -> device-major order: device d's contiguous block
         # (rows d*v .. d*v+v-1 under the P(axis) shard) holds its chunks
         # k = 0..v-1, i.e. logical stages d, d+S, ..., d+(v-1)S.
         order = np.array([k * s_stages + d
                           for d in range(s_stages) for k in range(v)])
-        params_dev = jax.tree.map(lambda a: a[order], params_stacked)
+        params_dev = jax.tree.map(
+            lambda a: jnp.take(a, order, axis=slice_dim), params_stacked)
     else:
         params_dev = params_stacked
 
@@ -537,17 +549,25 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x, mesh: Mesh,
     if (policy.needs_fw_buffer or policy.needs_bw_buffer) and not with_state:
         raise ValueError(
             f"policy {policy.name!r} carries feedback buffers: pass "
-            f"fw_state/bw_state from init_feedback_state()")
+            "fw_state/bw_state from init_feedback_state()")
+    if dp_axis is not None and (policy.needs_fw_buffer
+                                or policy.needs_bw_buffer):
+        raise NotImplementedError(
+            "per-stage boundary feedback buffers are not threaded through "
+            "the data-parallel pipeline yet — combine dp with a "
+            "feedback-free boundary policy (DP-side error feedback lives "
+            "in transport/collectives.py)")
     if fw_state is None:
         fw_state = _empty_state(s_stages, x.dtype)
     if bw_state is None:
         bw_state = _empty_state(s_stages, x.dtype)
     if ids is None:
         ids = jnp.zeros((b,), jnp.int32)
-    ids_mb = ids.reshape(mb, mbsz).astype(jnp.int32)
+    rep = (dp,) if dp_axis is not None else ()
+    ids_mb = ids.reshape(*rep, mb, mbsz).astype(jnp.int32)
 
-    x_mb = x.reshape(mb, mbsz, *x.shape[1:])
-    feat_shape = x_mb.shape[1:]
+    x_mb = x.reshape(*rep, mb, mbsz, *x.shape[1:])
+    feat_shape = x_mb.shape[len(rep) + 1:]
 
     local_fw = jax.tree.map(
         lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), fw_state)
@@ -558,7 +578,12 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x, mesh: Mesh,
 
     def body(params_local, x_local, fw_st, bw_st, ids_all):
         # params_local: this device's chunk stack (leading dim v);
-        # x_local: (mb, ...)
+        # x_local: (mb, ...).  Under dp_axis each carries one extra
+        # leading replica dim of size 1 (this device's replica shard).
+        if dp_axis is not None:
+            params_local = jax.tree.map(lambda a: a[0], params_local)
+            x_local = x_local[0]
+            ids_all = ids_all[0]
         if v == 1:
             params_local = jax.tree.map(lambda a: a[0], params_local)
         fw_st = jax.tree.map(lambda a: a[0], fw_st)
@@ -595,18 +620,25 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x, mesh: Mesh,
 
         (_, outs, fw_st), _ = jax.lax.scan(
             step, (buf, outs, fw_st), jnp.arange(n_steps))
-        # only the LAST device holds the pipeline output; return it stage-
-        # stacked (out_specs P(axis)) so the global slice [-1] is exactly
-        # that device's buffer — transposition-unambiguous (the cotangent
-        # lands on device S-1 alone, no psum involved).
-        return outs[None], jax.tree.map(lambda a: a[None], fw_st)
+        # only the LAST device (of each replica row) holds the pipeline
+        # output; return it stage-stacked (out_specs P(axis)) so the
+        # global slice [-1] is exactly that device's buffer —
+        # transposition-unambiguous (the cotangent lands on device S-1
+        # alone, no psum involved).
+        outs = outs[None] if dp_axis is None else outs[None, None]
+        return outs, jax.tree.map(lambda a: a[None], fw_st)
 
-    pspec = jax.tree.map(lambda _: P(axis), params_dev)
+    if dp_axis is None:
+        pspec = jax.tree.map(lambda _: P(axis), params_dev)
+        x_spec, out_spec = P(), P(axis)
+    else:
+        pspec = jax.tree.map(lambda _: P(dp_axis, axis), params_dev)
+        x_spec, out_spec = P(dp_axis), P(axis, dp_axis)
     st_spec = lambda st: jax.tree.map(lambda _: P(axis), st)
     out, new_fw = _shard_map(
         body, mesh,
-        (pspec, P(), st_spec(fw_state), st_spec(bw_state), P()),
-        (P(axis), st_spec(fw_state)),
+        (pspec, x_spec, st_spec(fw_state), st_spec(bw_state), x_spec),
+        (out_spec, st_spec(fw_state)),
     )(params_dev, x_mb, fw_state, bw_state, ids_mb)
     out = out[-1].reshape(b, *x.shape[1:])
     if with_state:

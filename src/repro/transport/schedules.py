@@ -101,7 +101,7 @@ class Schedule:
             raise ValueError(f"virtual_stages must be >= 1, got {v}")
         if v > 1 and microbatches % num_stages:
             raise ValueError(
-                f"the interleaved schedule advances microbatches in groups "
+                "the interleaved schedule advances microbatches in groups "
                 f"of the stage count: microbatches={microbatches} must be "
                 f"divisible by num_stages={num_stages}")
 

@@ -13,9 +13,8 @@ direction (``bw``) runs on the activation-gradient during backprop.
 from __future__ import annotations
 
 from functools import lru_cache
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.compressors import apply_mask, topk_mask

@@ -1,7 +1,6 @@
 """Beyond-paper features: int8 expert-dispatch quantization, enc-dec
 chunked hidden loss, pipeline payload wire-cost ordering."""
 import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 

@@ -2,15 +2,14 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.core import compressors as C
 from repro.core.boundary import (boundary_apply, boundary_eval,
                                  init_boundary_state)
 from repro.core.feedback import (aqsgd_message, ef21_message, ef_message,
                                  efmixed_message)
-from repro.core.policy import (BoundaryPolicy, aqsgd_policy, ef_policy,
-                               quant_policy, topk_policy, NO_COMPRESSION)
+from repro.core.policy import (aqsgd_policy, ef_policy, quant_policy,
+                               topk_policy, NO_COMPRESSION)
 
 
 def _run_boundary(policy, x, state=None, ids=None):

@@ -120,6 +120,63 @@ class TestRestoreErrors:
         assert step == 5
 
 
+class TestDPStateRoundtrip:
+    """The DP gradient-reduce residuals (transport/collectives.py) are
+    part of the trajectory: the train-state format saves them under a
+    ``dp`` key and exact resume restores them."""
+
+    def _state(self):
+        from repro.transport.collectives import init_dp_state
+        params = {"w": jnp.ones((3, 4))}
+        opt = {"step": jnp.zeros((), jnp.int32)}
+        dp_state = init_dp_state(params, 2, "ef21")
+        dp_state["resid"]["w"] = dp_state["resid"]["w"].at[0, 0, 0].set(3.5)
+        dp_state["agg"]["w"] = dp_state["agg"]["w"].at[1, 1].set(-2.0)
+        return params, opt, dp_state
+
+    def test_dp_residuals_roundtrip_exactly(self, tmp_path):
+        from repro.transport.collectives import init_dp_state
+        params, opt, dp_state = self._state()
+        path = str(tmp_path / "dp.npz")
+        ckpt_io.save_train_state(path, params, opt, [], step=7,
+                                 dp_state=dp_state)
+        like = init_dp_state(params, 2, "ef21")
+        p, o, b, dp2, step = ckpt_io.restore_train_state(
+            path, params, opt, [], dp_like=like)
+        assert step == 7 and b == []
+        for a, c in zip(jax.tree.leaves(dp_state), jax.tree.leaves(dp2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+    def test_dp_file_without_dp_like_is_rejected(self, tmp_path):
+        """Resuming a dp run without --dp must fail loudly, not silently
+        drop the residuals."""
+        params, opt, dp_state = self._state()
+        path = str(tmp_path / "dp.npz")
+        ckpt_io.save_train_state(path, params, opt, [], dp_state=dp_state)
+        with pytest.raises(ckpt_io.CheckpointMismatch,
+                           match=r"extra keys in file"):
+            ckpt_io.restore_train_state(path, params, opt, [])
+
+    def test_non_dp_file_with_dp_like_is_rejected(self, tmp_path):
+        from repro.transport.collectives import init_dp_state
+        params, opt, _ = self._state()
+        path = str(tmp_path / "plain.npz")
+        ckpt_io.save_train_state(path, params, opt, [])
+        with pytest.raises(ckpt_io.CheckpointMismatch,
+                           match=r"missing keys"):
+            ckpt_io.restore_train_state(
+                path, params, opt, [],
+                dp_like=init_dp_state(params, 2, "ef"))
+
+    def test_non_dp_format_unchanged(self, tmp_path):
+        """dp_state=None writes the PR-4 file layout (no dp keys)."""
+        params, opt, _ = self._state()
+        path = str(tmp_path / "plain.npz")
+        ckpt_io.save_train_state(path, params, opt, [])
+        flat, _ = ckpt_io._load_flat(path)
+        assert not any(k == "dp" or k.startswith("dp/") for k in flat)
+
+
 class TestTrainDriverResume:
     def test_cli_save_every_and_resume(self, tmp_path):
         """--ckpt '{step}' templating + --resume continue the run from the

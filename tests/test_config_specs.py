@@ -1,7 +1,7 @@
 """Pin the 10 assigned architecture configs to the assignment sheet."""
 import pytest
 
-from repro.configs.registry import ARCHS, ASSIGNED, get
+from repro.configs.registry import ASSIGNED, get
 
 # (layers, d_model, heads, kv, d_ff, vocab, family)
 SPEC = {

@@ -67,7 +67,7 @@ class TestContinuousMatchesSolo:
             np.testing.assert_array_equal(
                 solo.out, batched[i],
                 err_msg=f"req {i} (len={lens[i]}, new={news[i]}) differs "
-                        f"batched vs alone")
+                        "batched vs alone")
 
     def test_greedy_compressed(self):
         cfg = get("gpt2-small", smoke=True)
@@ -257,12 +257,12 @@ class TestFindingF3ThroughEngine:
         nll_u = self._nll(params, pol, compress=False)
         # measured gap ~0.7 nats at these settings; 0.15 leaves slack
         assert nll_u - nll_c > 0.15, \
-            f"TopK-trained model should degrade served uncompressed " \
+            "TopK-trained model should degrade served uncompressed " \
             f"(F3): nll_c={nll_c:.4f} nll_u={nll_u:.4f}"
         acc_c = self._engine_token_acc(params, pol, compress=True)
         acc_u = self._engine_token_acc(params, pol, compress=False)
         assert acc_c > acc_u, \
-            f"engine-served memorized continuation: compressed acc " \
+            "engine-served memorized continuation: compressed acc " \
             f"{acc_c:.3f} should beat uncompressed {acc_u:.3f}"
 
     def test_ef_trained_serves_uncompressed_without_drop(self):
@@ -273,7 +273,7 @@ class TestFindingF3ThroughEngine:
         # learned function is the UNCOMPRESSED one (measured: nll_u is
         # ~3.8 nats BETTER; assert merely "no drop")
         assert nll_u - nll_c < 0.15, \
-            f"EF-trained model should serve uncompressed without a " \
+            "EF-trained model should serve uncompressed without a " \
             f"quality drop: nll_c={nll_c:.4f} nll_u={nll_u:.4f}"
 
 
@@ -295,9 +295,9 @@ class TestWireEvalMatchesSimulated:
         assert (wire != 0).sum(axis=(1, 2)).tolist() == [k, k]  # exactly k
         assert (sim != 0).sum() >= (wire != 0).sum()            # ties extra
         agree = (sim == wire).mean()
-        assert agree > 0.995, f"wire and simulated TopK disagree on " \
+        assert agree > 0.995, "wire and simulated TopK disagree on " \
                               f"{(1 - agree):.2%} of elements (ties only " \
-                              f"should differ)"
+                              "should differ)"
         # end-to-end logits stay close through the full stack
         params = transformer.init_params(jax.random.PRNGKey(0), cfg)
         toks = np.random.RandomState(5).randint(

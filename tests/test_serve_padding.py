@@ -9,7 +9,6 @@ with pad slots masked the two servings are exactly equal.
 """
 import numpy as np
 import jax
-import pytest
 
 from repro.configs.registry import get
 from repro.models import transformer

@@ -1,6 +1,5 @@
 """System-level tests: optimizers, checkpoint round-trip, data determinism,
 policy plumbing, serving engine, train driver integration."""
-import math
 import os
 
 import numpy as np
