@@ -120,13 +120,61 @@ def fmt_dryrun(rows: List[dict]) -> str:
     return "\n".join(lines)
 
 
+def fmt_codecs(bench: dict) -> str:
+    """§Codec-roofline table: achieved bytes/s of each wire-codec path
+    (from benchmarks/codec_bench.py) against the HBM peak — pack/unpack
+    are memory-streaming ops, so HBM_BW is the relevant roof.  Numbers
+    measured on a CPU runner reflect interpret-mode kernels (a correctness
+    vehicle); on TPU the Pallas column is the deployment path and the
+    in-bench gate asserts pallas >= jnp."""
+    hdr = ("| path | op | dense MB | wire ratio | jnp GB/s | pallas GB/s "
+           "| pallas/jnp | % of peak (pallas) | parity |")
+    lines = [f"(measured on backend: {bench.get('backend', '?')}, "
+             f"peak HBM {HBM_BW / 1e9:.0f} GB/s)", "", hdr,
+             "|" + "---|" * 9]
+    rows = (bench.get("codecs", []) + bench.get("framing", [])
+            + bench.get("dp_decode_sum", []))
+    for r in rows:
+        dense = r.get("dense_bytes") or r.get("buffer_bytes") or 0
+        wire = (r.get("wire_bytes_pallas") or r.get("buffer_bytes")
+                or (r.get("hop_buffer_bytes", 0) * r.get("dp", 0)) or dense)
+        ratio = dense / wire if wire else 0.0
+        peak_pct = 100.0 * r["pallas_gbps"] * 1e9 / HBM_BW
+        parity = r.get("parity", r.get("byte_identical"))
+        lines.append(
+            f"| {r['name']} | {r.get('op', 'decode+sum')} "
+            f"| {dense / 1e6:.2f} | {ratio:.1f}x "
+            f"| {r['jnp_gbps']:.2f} | {r['pallas_gbps']:.2f} "
+            f"| {r['pallas_over_jnp']:.2f} | {peak_pct:.3f}% "
+            f"| {'ok' if parity else 'BROKEN'} |")
+    return "\n".join(lines)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("jsons", nargs="+", help="dryrun --json outputs")
+    ap.add_argument("jsons", nargs="*", help="dryrun --json outputs")
     ap.add_argument("--md", default=None, help="write markdown table here")
     ap.add_argument("--dryrun-table", action="store_true",
                     help="emit the §Dry-run table instead of §Roofline")
+    ap.add_argument("--codec-table", action="store_true",
+                    help="emit the §Codec-roofline table from the "
+                         "committed results/codec_bench.json (or a path "
+                         "given as the positional arg): achieved vs peak "
+                         "bytes/s per wire-codec pack/unpack path")
     args = ap.parse_args(argv)
+    if args.codec_table:
+        import os
+        path = args.jsons[0] if args.jsons else os.path.join(
+            os.path.dirname(__file__), "results", "codec_bench.json")
+        with open(path) as f:
+            table = fmt_codecs(json.load(f))
+        print(table)
+        if args.md:
+            with open(args.md, "w") as f:
+                f.write(table + "\n")
+        return 0
+    if not args.jsons:
+        ap.error("provide dryrun --json outputs (or use --codec-table)")
     rows = []
     for p in args.jsons:
         with open(p) as f:

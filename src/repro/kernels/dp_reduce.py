@@ -1,0 +1,154 @@
+"""Pallas TPU kernel: fused receive-side decode+sum for the DP ring.
+
+After the ``ppermute`` ring (transport/collectives.py) every replica holds
+``slots`` — the fused uint8 hop buffers of all ``dp`` source ranks, stacked
+in SOURCE-RANK order.  The jnp path then runs, per source rank and per
+parameter leaf, an unfuse slice + bitcast + dequantize + add: O(dp * leaves)
+kernel launches and a dense f32 HBM round-trip per step, on the receive path
+of every ring hop.  The kernel here does the whole thing in one launch: for
+each leaf it walks the ``dp`` byte segments at their static offsets,
+decodes the uint8 codes in-register (q8 bytes or q4 nibble pairs, the same
+``codes * scale + min`` dequant as ``dequantize_kbit``) and accumulates in
+a STATIC source-rank-ordered fold.  The fold association is fixed and every
+replica executes the identical program, so all replicas still compute a
+bitwise-identical reduced gradient — the DP acceptance invariant, asserted
+in tests/test_codec_kernels.py.  Against the unfused XLA reference loop the
+dequant may differ by at most 1 ulp where the compiler contracts the
+multiply-add into an FMA (a strictly-more-precise rounding; the tests pin
+this bound).
+
+The per-source per-leaf (min, scale) f32 scalars are extracted from the
+buffer bytes by XLA bitcasts beforehand (Mosaic has no size-changing
+bitcast) and ride into the kernel as one ``(dp, 2 * leaves)`` operand.
+``build_decode_plans`` validates the payload layout and returns ``None``
+whenever this kernel does not apply (raw/TopK/per-tile payloads, empty
+leaves, VMEM overflow) — the caller then keeps the reference loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# slots + meta + f32 accumulators all resident at once.
+DECODE_MAX_BYTES = 4 * 1024 * 1024
+
+_Q8_KEYS = frozenset(("codes", "min", "scale"))
+_Q4_KEYS = frozenset(("codes4", "min", "scale"))
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafPlan:
+    """Static byte layout of one leaf's payload inside the fused buffer:
+    ``kind`` q8/q4, codes at ``[off, off + nbytes)``, the f32 (min, scale)
+    pair at ``[meta_off, meta_off + 8)``, dense feature count ``n``."""
+    kind: str
+    off: int
+    nbytes: int
+    meta_off: int
+    n: int
+
+
+def build_decode_plans(structs, leaf_shapes) -> Optional[List[LeafPlan]]:
+    """Byte-layout plans for a list of per-leaf payload structs (the
+    ``eval_shape`` dicts ``fuse_payload`` flattens), or ``None`` when the
+    fused kernel does not apply.  Offsets follow ``jax.tree.leaves`` order
+    — per-dict keys sorted, so codes always precede min/scale."""
+    if len(structs) != len(leaf_shapes):
+        return None
+    plans, off = [], 0
+    for s, shape in zip(structs, leaf_shapes):
+        if not isinstance(s, dict):
+            return None                      # raw passthrough (codec none)
+        keys = frozenset(s)
+        if keys == _Q8_KEYS:
+            kind = "q8"
+            codes = s["codes"]
+        elif keys == _Q4_KEYS:
+            kind = "q4"
+            codes = s["codes4"]
+        else:
+            return None                      # topk / per-tile q8
+        n = 1
+        for d in shape:
+            n *= d
+        nbytes = 1
+        for d in codes.shape:
+            nbytes *= d
+        if (n == 0 or codes.dtype != jnp.uint8
+                or s["min"].shape != () or s["scale"].shape != ()
+                or jnp.dtype(s["min"].dtype).itemsize != 4
+                or jnp.dtype(s["scale"].dtype).itemsize != 4):
+            return None
+        expect = (n + 1) // 2 if kind == "q4" else n
+        if nbytes != expect:
+            return None
+        plans.append(LeafPlan(kind, off, nbytes, off + nbytes, n))
+        off += nbytes + 8
+    return plans
+
+
+def extract_meta(slots: jnp.ndarray, plans: Sequence[LeafPlan]):
+    """(dp, nbytes) uint8 slots -> (dp, 2 * leaves) f32 of per-source
+    (min, scale) pairs, bitcast straight from the payload bytes."""
+    dp = slots.shape[0]
+    cols = []
+    for p in plans:
+        for o in (p.meta_off, p.meta_off + 4):
+            cols.append(jax.lax.bitcast_convert_type(
+                slots[:, o:o + 4], jnp.float32))
+    return jnp.stack(cols, axis=1).reshape(dp, 2 * len(plans))
+
+
+def _decode_sum_kernel(slots_ref, meta_ref, *o_refs,
+                       plans: Sequence[LeafPlan], dp: int):
+    for li, p in enumerate(plans):
+        acc = None
+        for s in range(dp):                  # static rank-ordered fold
+            seg = slots_ref[s:s + 1, p.off:p.off + p.nbytes]
+            mn = meta_ref[s, 2 * li]
+            sc = meta_ref[s, 2 * li + 1]
+            if p.kind == "q8":
+                codes = seg.astype(jnp.float32)
+            else:
+                even = (seg & 0xF).astype(jnp.float32)
+                odd = (seg >> 4).astype(jnp.float32)
+                codes = jnp.stack([even, odd],
+                                  axis=-1).reshape(1, -1)[:, :p.n]
+            d = codes * sc + mn
+            acc = d if acc is None else acc + d
+        o_refs[li][...] = acc
+
+
+def decode_fits(plans: Sequence[LeafPlan], dp: int,
+                budget: int = DECODE_MAX_BYTES) -> bool:
+    nbytes = plans[-1].meta_off + 8 if plans else 0
+    dense = sum(p.n for p in plans) * 4
+    return dp * nbytes + dense + dp * len(plans) * 8 <= budget
+
+
+def decode_sum_fused(slots: jnp.ndarray, plans: Sequence[LeafPlan],
+                     dp: int, *,
+                     interpret: bool | None = None) -> List[jnp.ndarray]:
+    """slots: (dp, nbytes) uint8 source-rank-ordered hop buffers.  Returns
+    one (1, n) float32 rank-summed dense gradient per leaf plan — the same
+    static rank-ordered association as the unfuse->dequantize->add
+    reference loop (identical on every replica; <= 1 ulp of FMA rounding
+    vs the unfused loop)."""
+    assert slots.ndim == 2 and slots.dtype == jnp.uint8, (
+        slots.shape, slots.dtype)
+    assert slots.shape[0] == dp, (slots.shape, dp)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    meta = extract_meta(slots, plans)
+    out = pl.pallas_call(
+        functools.partial(_decode_sum_kernel, plans=tuple(plans), dp=dp),
+        out_shape=[jax.ShapeDtypeStruct((1, p.n), jnp.float32)
+                   for p in plans],
+        interpret=interpret,
+    )(slots, meta)
+    return list(out)

@@ -14,16 +14,9 @@ import jax
 
 from repro.kernels import ref
 from repro.kernels.quantize import quant_dequant as _qdq_pallas
+from repro.kernels.tiling import lane_block as _pick_bn
+from repro.kernels.tiling import pow2_row_block
 from repro.kernels.topk_mask import topk_block as _topk_pallas
-
-_BN_CANDIDATES = (2048, 1024, 512, 256, 128)
-
-
-def _pick_bn(n: int):
-    for bn in _BN_CANDIDATES:
-        if n % bn == 0:
-            return bn
-    return None
 
 
 def _to_2d(x):
@@ -39,10 +32,8 @@ def quant_dequant_op(x, bits: int):
     bn = _pick_bn(n)
     if bn is None:
         return ref.quant_dequant_ref(flat, bits, block=(m, n)).reshape(x.shape)
-    bm = max(1, min(256, m))
-    while m % bm:
-        bm -= 1
-    y = _qdq_pallas(flat, bits, block=(bm, bn))
+    bm = pow2_row_block(m)                  # O(1); the old `while m % bm:
+    y = _qdq_pallas(flat, bits, block=(bm, bn))  # bm -= 1` walked O(m)
     return y.reshape(x.shape)
 
 
@@ -54,9 +45,7 @@ def topk_block_op(x, k_frac: float):
     bn = _pick_bn(n)
     if bn is None:
         return ref.topk_block_ref(flat, k_frac, block=(m, n)).reshape(x.shape)
-    bm = max(1, min(256, m))
-    while m % bm:
-        bm -= 1
+    bm = pow2_row_block(m)
     y = _topk_pallas(flat, k_frac, block=(bm, bn))
     return y.reshape(x.shape)
 

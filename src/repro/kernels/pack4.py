@@ -1,0 +1,117 @@
+"""Pallas TPU kernels: fused 4-bit quantize->scale->pack and the inverse.
+
+The q4 wire format (transport/codecs.py) packs two 4-bit codes per uint8 —
+byte j of a row is ``code[2j] | code[2j+1] << 4`` — with PER-TENSOR
+min/scale and one zero pad code when the feature dim is odd.  The pure-jnp
+path materializes the dense code tensor, the padded copy, the even/odd
+strided slices and the shifted OR: five elementwise HBM round-trips on
+exactly the tensor compression is meant to shrink.  The kernels here do
+one each way: ``pack`` reads a row block into VMEM once, quantizes, pairs
+and packs in-register (the odd-n pad is a single lane of zero codes
+appended IN-KERNEL — HBM never sees a padded copy of x) and writes the
+half-width byte tensor once; ``unpack`` splits nibbles, dequantizes and
+writes the dense rows in one pass.
+
+Scales stay per-tensor (paper Sec. 2.2), so the packed bytes are
+BIT-IDENTICAL to the jnp path: the global min/max runs as one XLA reduce
+before the kernel (min/max are associative — the reduction shape cannot
+change the result), and the kernel consumes the two scalars as (1, 1)
+operands.  Bytes-on-wire never change.  The ``unpack`` dequant
+(``codes * scale + min``) may differ from ``dequantize_kbit`` by at most
+1 ulp where the compiler contracts the multiply-add into an FMA (a
+strictly-more-precise rounding).  Parity — including odd feature dims —
+is asserted in tests/test_codec_kernels.py; the wire dispatch lives in
+``transport/codecs.py`` behind ``_use_pallas_wire()``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.tiling import full_row_block
+
+_LEVELS = 15.0
+
+
+def _pack4_kernel(x_ref, mn_ref, sc_ref, o_ref, *, n: int):
+    x = x_ref[...].astype(jnp.float32)                  # (bm, n)
+    mn = mn_ref[0, 0]
+    sc = sc_ref[0, 0]
+    codes = jnp.clip(jnp.round((x - mn) / sc), 0.0, _LEVELS)
+    if n % 2:                                           # in-kernel pad lane
+        codes = jnp.pad(codes, ((0, 0), (0, 1)))
+    pair = codes.reshape(codes.shape[0], -1, 2)
+    even = pair[:, :, 0].astype(jnp.uint8)
+    odd = pair[:, :, 1].astype(jnp.uint8)
+    o_ref[...] = even | (odd << 4)
+
+
+def _unpack4_kernel(p_ref, mn_ref, sc_ref, o_ref, *, n: int):
+    p = p_ref[...]                                      # (bm, h) uint8
+    mn = mn_ref[0, 0]
+    sc = sc_ref[0, 0]
+    even = (p & 0xF).astype(jnp.float32)
+    odd = (p >> 4).astype(jnp.float32)
+    codes = jnp.stack([even, odd], axis=-1).reshape(p.shape[0], -1)[:, :n]
+    o_ref[...] = (codes * sc + mn).astype(o_ref.dtype)
+
+
+def _minmax_scalars(flat):
+    """Per-tensor (min, scale) — the same formula as quantize_kbit
+    (axis=None), computed as one XLA reduce over the f32 input."""
+    mn = jnp.min(flat)
+    span = jnp.max(flat) - mn
+    sc = jnp.where(span > 0, span / _LEVELS, jnp.ones_like(span))
+    return mn, sc
+
+
+def pack4_wire(flat: jnp.ndarray, *, interpret: bool | None = None):
+    """flat: (M, N) float32.  Returns ``(packed uint8 (M, ceil(N/2)),
+    min (), scale ())`` — bit-identical to the jnp q4 wire format."""
+    assert flat.ndim == 2 and flat.dtype == jnp.float32, (
+        flat.shape, flat.dtype)
+    m, n = flat.shape
+    h = (n + 1) // 2
+    bm = full_row_block(m, n)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    mn, sc = _minmax_scalars(flat)
+    packed = pl.pallas_call(
+        functools.partial(_pack4_kernel, n=n),
+        out_shape=jax.ShapeDtypeStruct((m, h), jnp.uint8),
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((bm, h), lambda i: (i, 0)),
+        interpret=interpret,
+    )(flat, mn.reshape(1, 1), sc.reshape(1, 1))
+    return packed, mn, sc
+
+
+def unpack4_wire(packed: jnp.ndarray, mn, sc, n: int, dtype=jnp.float32, *,
+                 interpret: bool | None = None) -> jnp.ndarray:
+    """Inverse of :func:`pack4_wire`: (M, ceil(n/2)) uint8 -> (M, n)
+    ``dtype`` — one fused unpack->dequant pass, pad column dropped
+    in-kernel."""
+    assert packed.ndim == 2 and packed.dtype == jnp.uint8, (
+        packed.shape, packed.dtype)
+    m, h = packed.shape
+    assert h == (n + 1) // 2, (h, n)
+    bm = full_row_block(m, n)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return pl.pallas_call(
+        functools.partial(_unpack4_kernel, n=n),
+        out_shape=jax.ShapeDtypeStruct((m, n), dtype),
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, h), lambda i: (i, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        interpret=interpret,
+    )(packed, jnp.asarray(mn, jnp.float32).reshape(1, 1),
+      jnp.asarray(sc, jnp.float32).reshape(1, 1))

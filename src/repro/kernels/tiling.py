@@ -1,0 +1,63 @@
+"""Tile-shape selection shared by the Pallas wire kernels and their
+transport-layer dispatch (transport/codecs.py).
+
+Two regimes:
+
+* ``wire_tiling`` — the TILED kernels (q8 quantize_wire) block both dims,
+  so the row block must respect the native f32 (8, 128) tile: the row
+  block is the largest POWER-OF-TWO divisor of m capped at 256 (O(1),
+  replacing an O(m) decrement scan that degraded to bm=1 on prime m), and
+  shapes whose best row block would under-fill the 8-sublane tile get
+  ``None`` — the dispatch falls back to the pure-jnp path rather than
+  running 1-sublane tiles at 1/8th VPU utilization.
+
+* ``full_row_block`` — the FULL-ROW kernels (q4 pair packing, TopK
+  threshold) keep the whole feature dim resident per instance (per-row
+  reductions / pair interleave need it), so any bm >= 1 is legal and the
+  only cap is the VMEM budget; under-filled sublanes are tolerated since
+  the lane dim dominates the layout for boundary-sized rows.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+LANE_BLOCKS = (2048, 1024, 512, 256, 128)
+MIN_SUBLANES = 8               # native f32 sublane tile
+MAX_ROW_BLOCK = 256
+VMEM_BUDGET = 4 * 1024 * 1024  # input bytes resident per kernel instance
+
+
+def pow2_row_block(m: int, cap: int = MAX_ROW_BLOCK) -> int:
+    """Largest power-of-two divisor of ``m``, capped at ``cap``."""
+    return min(cap, m & -m) if m > 0 else 1
+
+
+def lane_block(n: int) -> Optional[int]:
+    for c in LANE_BLOCKS:
+        if n % c == 0:
+            return c
+    return None
+
+
+def wire_tiling(flat_shape) -> Optional[Tuple[int, int]]:
+    """(bm, bn) for the tiled wire kernels, or None when no tiling fits
+    (feature dim not a 128-multiple, or the row block would under-fill
+    the native 8-sublane tile)."""
+    m, n = flat_shape
+    bn = lane_block(n)
+    if bn is None:
+        return None
+    bm = pow2_row_block(m)
+    if bm < MIN_SUBLANES:
+        return None
+    return bm, bn
+
+
+def full_row_block(m: int, n: int, bytes_per_elem: int = 4,
+                   budget: int = VMEM_BUDGET) -> int:
+    """Row-block size for full-row kernels: the largest power-of-two
+    divisor of ``m`` whose (bm, n) input block fits the VMEM budget."""
+    bm = pow2_row_block(m)
+    while bm > 1 and bm * n * bytes_per_elem > budget:
+        bm //= 2
+    return bm

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: exact per-row TopK threshold, sort-free.
+
+The TopK wire format (transport/codecs.py) sends the largest-|x| k entries
+per example as (values, indices).  The jnp path pays for a full
+``lax.top_k`` — an O(n log n) sort per row, hostile to the VPU and the
+single expensive op on the TopK hot path.  The kernel here replaces the
+sort with an EXACT threshold search: |x| is bitcast to int32 (the IEEE
+ordering trick — non-negative floats compare identically to their bit
+patterns), and 31 fixed bisection steps over the bit space find the
+k-th-largest magnitude's exact bit pattern with nothing but vector
+compares and per-row sum reductions, the whole row resident in VMEM.
+Unlike the approximate magnitude bisection in kernels/topk_mask.py, the
+bit-space search terminates at the EXACT k-th value, so the selected set
+matches ``lax.top_k`` entry-for-entry.
+
+The select/gather epilogue (tie resolution + index compaction) is a thin
+cumsum + one scatter in XLA — O(n) streaming work Mosaic cannot express
+(per-lane scatter), and exactly what XLA is good at.  Same on unpack: the
+dense scatter stays on ``topk_scatter``.  The selected (values, indices)
+SET equals the jnp path's; only the order differs — ascending index here
+vs descending value from ``lax.top_k`` — with ties broken toward lower
+indices in both, so the scattered dense tensor is bit-identical
+(tests/test_codec_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.tiling import full_row_block
+
+
+def _threshold_kernel(x_ref, t_ref, *, k: int):
+    mag = jnp.abs(x_ref[...].astype(jnp.float32))       # (bm, n)
+    bits = jax.lax.bitcast_convert_type(mag, jnp.int32)
+    t = jnp.zeros((bits.shape[0], 1), jnp.int32)
+    for b in range(30, -1, -1):                         # static unroll
+        cand = t | (1 << b)
+        cnt = jnp.sum((bits >= cand).astype(jnp.int32), axis=1,
+                      keepdims=True)
+        t = jnp.where(cnt >= k, cand, t)
+    t_ref[...] = jax.lax.bitcast_convert_type(t, jnp.float32)
+
+
+def topk_threshold(flat: jnp.ndarray, k: int, *,
+                   interpret: bool | None = None) -> jnp.ndarray:
+    """flat: (M, N).  Returns the EXACT k-th largest |x| per row, (M, 1)
+    float32 — count(|x| >= thresh) >= k and count(|x| > thresh) < k."""
+    assert flat.ndim == 2, flat.shape
+    m, n = flat.shape
+    assert 1 <= k <= n, (k, n)
+    bm = full_row_block(m, n)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return pl.pallas_call(
+        functools.partial(_threshold_kernel, k=k),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        interpret=interpret,
+    )(flat)
+
+
+def topk_select_wire(flat: jnp.ndarray, k: int, *,
+                     interpret: bool | None = None):
+    """(M, N) -> (values (M, k) flat.dtype, indices (M, k) int32).
+
+    Pallas threshold + cumsum/scatter compaction.  Keeps exactly the
+    ``lax.top_k`` set per row (entries above the exact k-th magnitude,
+    plus threshold ties broken toward LOWER index — top_k's stable tie
+    rule); indices come out ascending instead of value-sorted."""
+    m, n = flat.shape
+    thresh = topk_threshold(flat, k, interpret=interpret)
+    mag = jnp.abs(flat.astype(jnp.float32))
+    gt = mag > thresh
+    eq = mag == thresh
+    c_gt = jnp.sum(gt.astype(jnp.int32), axis=1, keepdims=True)
+    tie_rank = jnp.cumsum(eq.astype(jnp.int32), axis=1)
+    keep = gt | (eq & (tie_rank <= k - c_gt))           # exactly k per row
+    slot = jnp.where(keep, jnp.cumsum(keep.astype(jnp.int32), axis=1) - 1,
+                     k)                                 # k == dropped
+    rows = jax.lax.broadcasted_iota(jnp.int32, (m, n), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (m, n), 1)
+    idx = jnp.zeros((m, k), jnp.int32).at[rows, slot].set(
+        cols, mode="drop", unique_indices=True)
+    vals = jnp.take_along_axis(flat, idx, axis=1)
+    return vals, idx

@@ -20,9 +20,13 @@ simulated boundary's C(x) and the real wire round-trip are bit-identical
 (tested in tests/test_transport.py).  TopK indices are ``uint16`` whenever
 the flattened per-example feature dim fits in 16 bits, ``int32`` otherwise.
 
-On TPU the ``q8`` pack/unpack routes through the fused Pallas wire kernels
-(kernels/quantize.py, per-tile scales) when the flattened shape tiles into
-128-lane blocks; elsewhere the pure-jnp path is used.
+On TPU the codec hot path routes through the fused Pallas wire kernels
+(see the README "Kernels" section): ``q8`` via kernels/quantize.py
+(per-tile scales) when the flattened shape tiles into 128-lane blocks,
+``q4`` via kernels/pack4.py and TopK via kernels/topk_select.py (both
+per-tensor, byte- resp. set-identical to the jnp formats), and multi-leaf
+payload framing via kernels/framing.py.  Everywhere else — and whenever a
+shape fails a kernel's tiling/VMEM guard — the pure-jnp path is used.
 """
 from __future__ import annotations
 
@@ -58,6 +62,12 @@ class WireCodec:
 
     name: str = "?"
 
+    def payload_keysets(self) -> Tuple[Tuple[str, ...], ...]:
+        """The exact key sets this codec's ``pack`` can emit — registered
+        alongside the codec so ``unpack_payload`` dispatches on the full
+        key SET, not on whichever single key happens to probe first."""
+        raise NotImplementedError
+
     def pack(self, x: jnp.ndarray, k_frac: float = 1.0) -> dict:
         raise NotImplementedError
 
@@ -80,6 +90,9 @@ class NoneCodec(WireCodec):
 
     name = "none"
 
+    def payload_keysets(self):
+        return (("raw",),)
+
     def pack(self, x, k_frac: float = 1.0):
         return {"raw": x.astype(jnp.bfloat16)}
 
@@ -92,15 +105,19 @@ class NoneCodec(WireCodec):
 
 
 def _pallas_tiling(flat_shape) -> Optional[Tuple[int, int]]:
-    """(bm, bn) for the Pallas wire kernels, or None when no tiling fits."""
-    m, n = flat_shape
-    bn = next((c for c in (2048, 1024, 512, 256, 128) if n % c == 0), None)
-    if bn is None:
-        return None
-    bm = max(1, min(256, m))
-    while m % bm:
-        bm -= 1
-    return bm, bn
+    """(bm, bn) for the tiled Pallas wire kernels, or None when no tiling
+    fits — the feature dim is not a 128-multiple, or the row block (largest
+    power-of-two divisor of m, capped at 256) would under-fill the native
+    8-sublane tile.  See kernels/tiling.py."""
+    from repro.kernels.tiling import wire_tiling
+    return wire_tiling(flat_shape)
+
+
+def _fullrow_fits(n: int, bytes_per_elem: int = 4) -> bool:
+    """Can a full-feature-dim row block (q4 / TopK kernels) stay within
+    the per-instance VMEM budget at bm=1?"""
+    from repro.kernels.tiling import VMEM_BUDGET
+    return 0 < n * bytes_per_elem <= VMEM_BUDGET
 
 
 class QuantCodec(WireCodec):
@@ -116,6 +133,12 @@ class QuantCodec(WireCodec):
         self.bits = bits
         self.name = f"q{bits}"
 
+    def payload_keysets(self):
+        if self.bits == 4:
+            return (("codes4", "min", "scale"),)
+        return (("codes", "min", "scale"),      # per-tensor jnp format
+                ("codes", "tile_meta"))         # per-tile Pallas format
+
     def pack(self, x, k_frac: float = 1.0):
         b = x.shape[0]
         flat = x.reshape(b, -1)
@@ -126,6 +149,11 @@ class QuantCodec(WireCodec):
                 codes, meta = quantize_wire(flat.astype(jnp.float32), 8,
                                             block=tiling)
                 return {"codes": codes, "tile_meta": meta}
+        if (self.bits == 4 and _use_pallas_wire()
+                and _fullrow_fits(flat.shape[1])):
+            from repro.kernels.pack4 import pack4_wire
+            packed, mn, sc = pack4_wire(flat.astype(jnp.float32))
+            return {"codes4": packed, "min": mn, "scale": sc}
         codes, mn, sc = quantize_kbit(flat.astype(jnp.float32), self.bits,
                                       axis=None)
         if self.bits == 4:
@@ -143,6 +171,11 @@ class QuantCodec(WireCodec):
         n = _flat_n(shape)
         if "codes4" in payload:
             packed = payload["codes4"]
+            if _use_pallas_wire() and _fullrow_fits(n):
+                from repro.kernels.pack4 import unpack4_wire
+                flat = unpack4_wire(packed, payload["min"],
+                                    payload["scale"], n)
+                return flat.reshape(shape).astype(dtype)
             even = packed & 0xF
             odd = packed >> 4
             codes = jnp.stack([even, odd], axis=-1).reshape(b, -1)[:, :n]
@@ -175,11 +208,20 @@ class TopKCodec(WireCodec):
 
     name = "topk"
 
+    def payload_keysets(self):
+        return (("idx", "vals"),)
+
     def pack(self, x, k_frac: float = 0.1):
         b = x.shape[0]
         flat = x.reshape(b, -1)
-        vals, idx = topk_values_indices(flat, k_frac)
-        if flat.shape[1] <= _U16_MAX_N:
+        n = flat.shape[1]
+        if _use_pallas_wire() and _fullrow_fits(n):
+            from repro.kernels.topk_select import topk_select_wire
+            k = max(1, int(round(k_frac * n)))   # same k as the jnp path
+            vals, idx = topk_select_wire(flat, k)
+        else:
+            vals, idx = topk_values_indices(flat, k_frac)
+        if n <= _U16_MAX_N:
             idx = idx.astype(jnp.uint16)
         return {"vals": vals.astype(jnp.bfloat16), "idx": idx}
 
@@ -205,10 +247,21 @@ def _use_pallas_wire() -> bool:
 
 _REGISTRY: Dict[str, WireCodec] = {}
 
+# frozenset(payload keys) -> codec name: the unpack_payload dispatch table,
+# built at registration from each codec's declared payload_keysets().
+_PAYLOAD_KEYSETS: Dict[frozenset, str] = {}
+
 
 def register_codec(codec: WireCodec) -> WireCodec:
     """Add a codec to the registry (future schemes plug in here)."""
     _REGISTRY[codec.name] = codec
+    for keys in codec.payload_keysets():
+        ks = frozenset(keys)
+        owner = _PAYLOAD_KEYSETS.get(ks)
+        if owner is not None and owner != codec.name:
+            raise ValueError(f"payload key set {sorted(ks)} already "
+                             f"registered to codec {owner!r}")
+        _PAYLOAD_KEYSETS[ks] = codec.name
     return codec
 
 
@@ -258,12 +311,14 @@ def pack_payload(x: jnp.ndarray, scheme: str, k_frac: float = 0.1) -> dict:
 
 
 def unpack_payload(payload: dict, shape, dtype=jnp.bfloat16) -> jnp.ndarray:
-    """Inverse of :func:`pack_payload` (dispatches on payload keys)."""
-    for key, name in (("raw", "none"), ("codes4", "q4"), ("vals", "topk"),
-                      ("codes", "q8"), ("tile_meta", "q8")):
-        if key in payload:
-            return get_codec(name).unpack(payload, shape, dtype)
-    raise ValueError(list(payload))
+    """Inverse of :func:`pack_payload`: dispatches on the payload's EXACT
+    key set, registered per codec via ``payload_keysets()``."""
+    name = _PAYLOAD_KEYSETS.get(frozenset(payload))
+    if name is None:
+        known = sorted(sorted(ks) for ks in _PAYLOAD_KEYSETS)
+        raise ValueError(f"payload keys {sorted(payload)} match no "
+                         f"registered codec wire format; known: {known}")
+    return get_codec(name).unpack(payload, shape, dtype)
 
 
 def wire_bytes(payload) -> int:
@@ -280,6 +335,37 @@ def wire_bytes(payload) -> int:
 # overhead, so the fused schedules bitcast every leaf to uint8, concatenate,
 # and send ONE buffer per direction per tick — byte-identical on the wire
 # (same total payload bytes, pure bitcasts) but a single collective launch.
+#
+# When the Pallas wire kernels are on, the concatenate (and the slicing on
+# the receive side) routes through the one-pass framing kernel
+# (kernels/framing.py) — same bytes, one kernel instead of a concat chain.
+
+
+def _leaf_nbytes(s) -> int:
+    nb = jnp.dtype(s.dtype).itemsize
+    for dim in s.shape:
+        nb *= dim
+    return nb
+
+
+def _bytes_to_leaf(seg: jnp.ndarray, s):
+    """Flat uint8 segment -> array of the leaf's shape/dtype (the inverse
+    of the per-leaf bitcast in :func:`fuse_payload`)."""
+    itemsize = jnp.dtype(s.dtype).itemsize
+    if itemsize == 1:
+        a = seg.reshape(s.shape)
+        return a.astype(s.dtype) if s.dtype == jnp.bool_ else \
+            jax.lax.bitcast_convert_type(a, s.dtype)
+    return jax.lax.bitcast_convert_type(
+        seg.reshape(*s.shape, itemsize), s.dtype)
+
+
+def _use_pallas_framing(total_bytes: int, n_parts: int) -> bool:
+    if n_parts < 2 or not _use_pallas_wire():
+        return False
+    from repro.kernels.framing import FRAME_MAX_BYTES
+    return 0 < total_bytes <= FRAME_MAX_BYTES
+
 
 def fuse_payload(payload) -> jnp.ndarray:
     """Flatten a packed payload pytree into one contiguous uint8 vector."""
@@ -290,28 +376,26 @@ def fuse_payload(payload) -> jnp.ndarray:
         parts.append(b.reshape(-1))
     if not parts:
         return jnp.zeros((0,), jnp.uint8)
-    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+    if len(parts) == 1:
+        return parts[0]
+    if _use_pallas_framing(sum(p.size for p in parts), len(parts)):
+        from repro.kernels.framing import frame_parts
+        return frame_parts(parts)
+    return jnp.concatenate(parts)
 
 
 def unfuse_payload(buf: jnp.ndarray, payload_struct):
     """Inverse of :func:`fuse_payload` given the payload's shape/dtype
     structure (``jax.eval_shape`` of the pack, or the payload itself)."""
     leaves, treedef = jax.tree.flatten(payload_struct)
-    out, off = [], 0
-    for s in leaves:
-        itemsize = jnp.dtype(s.dtype).itemsize
-        size = 1
-        for dim in s.shape:
-            size *= dim
-        nbytes = size * itemsize
-        seg = buf[off:off + nbytes]
-        off += nbytes
-        if itemsize == 1:
-            a = seg.reshape(s.shape)
-            a = a.astype(s.dtype) if s.dtype == jnp.bool_ else \
-                jax.lax.bitcast_convert_type(a, s.dtype)
-        else:
-            a = jax.lax.bitcast_convert_type(
-                seg.reshape(*s.shape, itemsize), s.dtype)
-        out.append(a)
+    sizes = [_leaf_nbytes(s) for s in leaves]
+    if _use_pallas_framing(sum(sizes), len(leaves)):
+        from repro.kernels.framing import unframe_parts
+        segs = unframe_parts(buf, sizes)
+    else:
+        segs, off = [], 0
+        for nb in sizes:
+            segs.append(buf[off:off + nb])
+            off += nb
+    out = [_bytes_to_leaf(seg, s) for seg, s in zip(segs, leaves)]
     return jax.tree.unflatten(treedef, out)

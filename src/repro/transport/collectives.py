@@ -44,8 +44,9 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.transport.base import shard_map_compat
-from repro.transport.codecs import (WireCodec, fuse_payload, get_codec,
-                                    unfuse_payload, wire_bytes)
+from repro.transport.codecs import (WireCodec, _use_pallas_wire,
+                                    fuse_payload, get_codec, unfuse_payload,
+                                    wire_bytes)
 
 DP_FEEDBACK_MODES = ("none", "ef", "ef21")
 
@@ -246,12 +247,32 @@ def make_grad_all_reduce(mesh: Mesh, axis: str, codec: str = "none", *,
             slot = lambda s: jax.tree.map(lambda a: a[s], slots)
 
         # -- decode + sum in source-rank order ------------------------------
-        acc = [None] * len(gl)
-        for s in range(dp):
-            pls = slot(s)
-            for i, g in enumerate(gl):
-                m = unpack_grad_leaf(codec_obj, pls[i], g.shape)
-                acc[i] = m if acc[i] is None else acc[i] + m
+        # On the Pallas backend the whole receive side (unfuse -> dequant ->
+        # rank-ordered accumulate) fuses into ONE kernel per hop
+        # (kernels/dp_reduce.py) when every leaf rides the per-tensor
+        # q8/q4 wire format.  The fold is static and source-rank ordered
+        # and every replica runs the identical program, so the reduced
+        # gradient stays bitwise identical across replicas — same
+        # association as the reference loop below (the per-element dequant
+        # may round 1 ulp tighter where the compiler emits an FMA).
+        plans = None
+        if fused and codec_obj.name in ("q8", "q4") and _use_pallas_wire():
+            from repro.kernels.dp_reduce import (build_decode_plans,
+                                                 decode_fits,
+                                                 decode_sum_fused)
+            plans = build_decode_plans(struct, [g.shape for g in gl])
+            if plans is not None and not decode_fits(plans, dp):
+                plans = None
+        if plans is not None:
+            dense = decode_sum_fused(slots, plans, dp)
+            acc = [d.reshape(g.shape) for d, g in zip(dense, gl)]
+        else:
+            acc = [None] * len(gl)
+            for s in range(dp):
+                pls = slot(s)
+                for i, g in enumerate(gl):
+                    m = unpack_grad_leaf(codec_obj, pls[i], g.shape)
+                    acc[i] = m if acc[i] is None else acc[i] + m
 
         # -- feedback state updates (own decode == own slot, same bits) ----
         new_rl, new_al, out = [], [], []
