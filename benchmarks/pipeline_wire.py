@@ -403,6 +403,48 @@ def measure_dp(codecs=("none", "q8", "q4", "topk"), *, dp=2, stages=2,
     return reports
 
 
+def measure_policy_audit(*, stages=4, batch=8, k_frac=0.10,
+                         spec="q4@size>=65536;q8@size>=16384;none",
+                         check: bool = True):
+    """Per-boundary audit of an adaptive rule policy (core/policy.py).
+
+    Resolves the spec against a HETEROGENEOUS stack — per-example cut
+    sizes shrink with depth, like a pooling CNN — so a single size rule
+    legitimately picks different codecs at different cuts.  One row per
+    boundary: which rule fired, the resolved fw/bw compressors, and the
+    exact packed payload bytes that codec puts on the wire there.
+    """
+    from repro.core.policy import parse_policy_rules
+    from repro.transport.codecs import codec_for, wire_bytes
+    feats = [(256, 512), (128, 256), (32, 128)]   # per-example (seq, d)
+    sizes = [s * d for s, d in feats]
+    rules = parse_policy_rules(spec, num_stages=stages)
+    policy = rules.resolve(sizes)
+    rows = []
+    for i, (feat, size) in enumerate(zip(feats, sizes)):
+        bp = policy.at(i)
+        x = jax.ShapeDtypeStruct((batch // stages, *feat), jnp.bfloat16)
+        fw = wire_bytes(jax.eval_shape(
+            lambda a, c=bp.fw: codec_for(c).pack(a, c.k_frac), x))
+        bw = wire_bytes(jax.eval_shape(
+            lambda a, c=bp.bw: codec_for(c).pack(a, c.k_frac), x))
+        rows.append({
+            "boundary": i, "size_per_example": size,
+            "fw_rule": rules.pick(size, i, "fw").name,
+            "bw_rule": rules.pick(size, i, "bw").name,
+            "fw_codec": bp.fw.name, "bw_codec": bp.bw.name,
+            "fw_payload_bytes": fw, "bw_payload_bytes": bw,
+        })
+    if check:
+        # the point of the rule engine: one spec, distinct per-cut codecs
+        assert len({r["fw_codec"] for r in rows}) >= 2, rows
+        # and shallower (bigger) cuts never pack FEWER bytes/elem than
+        # deeper ones under a monotone size spec
+        bpe = [r["fw_payload_bytes"] / r["size_per_example"] for r in rows]
+        assert all(a <= b + 1e-6 for a, b in zip(bpe, bpe[1:])), rows
+    return rows
+
+
 def main(argv=None):
     import argparse
     ap = argparse.ArgumentParser()
@@ -423,8 +465,12 @@ def main(argv=None):
     dp_reports = measure_dp()
     for r in dp_reports:
         print(json.dumps(r))
+    audit_reports = measure_policy_audit()
+    for r in audit_reports:
+        print(json.dumps(r))
     fresh = {"schemes": reports, "feedback": fb_reports,
-             "schedules": sched_reports, "dp": dp_reports}
+             "schedules": sched_reports, "dp": dp_reports,
+             "policy_audit": audit_reports}
     if args.check:
         from benchmarks.common import run_check
         # payload bytes and launch counts are jax-version-stable (payloads

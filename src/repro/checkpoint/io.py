@@ -9,9 +9,13 @@ Two formats share the machinery:
   * params-only  — ``save(path, params)``: flat keys ``embed/...`` (what
     PR-0..3 trainers wrote; serve-time restore still reads it).
   * train-state  — ``save_train_state(path, ...)``: one tree
-    ``{"params", "opt", "bstates"}`` covering the model, optimizer moments,
-    and the boundary feedback buffers, so ``--resume`` reproduces the exact
+    ``{"params", "opt", "feedback": {"boundary", ["dp"]}}`` covering the
+    model, optimizer moments, and every feedback thread (boundary
+    fw/bw :class:`~repro.core.feedback.FeedbackState` list + the optional
+    DP gradient-reduce state), so ``--resume`` reproduces the exact
     training trajectory (error-feedback state is part of the trajectory).
+    Files written by the older ``bstates``/``dp`` layout are migrated on
+    restore — key remap only, arrays untouched, so the resume is bitwise.
 
 ``restore`` restores the subset of keys named by ``like`` — extra keys in
 the file are ignored (that is how ``restore_params`` pulls just the params
@@ -23,6 +27,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 from typing import Any, Dict, Tuple
 
 import numpy as np
@@ -34,11 +39,25 @@ class CheckpointMismatch(ValueError):
     """The checkpoint's keys/shapes do not cover the requested pytree."""
 
 
+def _path_key(p) -> str:
+    """One path entry -> its key string.  DictKey carries ``.key``,
+    GetAttrKey (registered dataclasses like FeedbackState) ``.name``,
+    SequenceKey ``.idx`` — and ``.idx`` may be 0, so test against None."""
+    for attr in ("key", "name", "idx"):
+        v = getattr(p, attr, None)
+        if v is not None:
+            return str(v)
+    return str(p)
+
+
+def _tree_key(path) -> str:
+    return "/".join(_path_key(p) for p in path)
+
+
 def _flatten(tree) -> Dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
+        key = _tree_key(path)
         arr = np.asarray(leaf)
         if arr.dtype == jnp.bfloat16:
             flat[key + "@bf16"] = arr.view(np.uint16)
@@ -83,11 +102,15 @@ def restore(path: str, like, strict: bool = False) -> Tuple[Any, int]:
     listing ALL missing / extra / shape-mismatched keys.
     """
     flat, meta = _load_flat(path)
+    return _restore_from_flat(path, flat, meta, like, strict)
+
+
+def _restore_from_flat(path: str, flat, meta, like,
+                       strict: bool) -> Tuple[Any, int]:
     leaves_like, _ = jax.tree_util.tree_flatten_with_path(like)
     wanted, missing, mismatched, leaves = set(), [], [], []
     for path_, leaf in leaves_like:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path_)
+        key = _tree_key(path_)
         wanted.add(key)
         arr = flat.get(key)
         if arr is None:
@@ -129,19 +152,46 @@ def save_train_state(path: str, params, opt_state, bstates, step: int = 0,
                      extra: dict = None, dp_state=None) -> None:
     """One file covering everything ``--resume`` needs (see module doc).
 
-    ``dp_state``: the data-parallel gradient-reduce state
+    Every feedback thread lives under one ``feedback`` key:
+    ``feedback/boundary`` holds the per-boundary fw/bw
+    :class:`~repro.core.feedback.FeedbackState` list and ``feedback/dp``
+    (present only for dp runs) the data-parallel gradient-reduce state
     (:func:`repro.transport.collectives.init_dp_state` — per-replica
-    EF/EF21 residuals and the EF21 aggregate).  Like the boundary
-    feedback buffers it is part of the training trajectory, so a dp run's
-    exact resume must restore it; saved under a ``dp`` key only when
-    given, keeping non-dp files byte-compatible with the PR-4 format.
+    EF/EF21 residuals and the EF21 aggregate).  All of it is part of the
+    training trajectory, so an exact resume must restore it.
     """
     extra = dict(extra or {})
     extra["format"] = "train-state"
-    tree = {"params": params, "opt": opt_state, "bstates": bstates}
+    feedback = {"boundary": bstates}
     if dp_state is not None:
-        tree["dp"] = dp_state
+        feedback["dp"] = dp_state
+    tree = {"params": params, "opt": opt_state, "feedback": feedback}
     save(path, tree, step=step, extra=extra)
+
+
+_LEGACY_BSTATE_RE = re.compile(r"^bstates/(.+?)(?:/(send|recv))?$")
+
+
+def _migrate_legacy_feedback(flat):
+    """PR-4/PR-5 era key layout -> the unified ``feedback`` schema.
+
+    Old files stored boundary buffers under ``bstates/...`` (simulated:
+    raw per-direction arrays; pipeline: ``{"send", "recv"}`` dicts) and
+    the DP reduce state under ``dp/...``.  The remap is key-only — every
+    stored array passes through untouched, so a migrated restore is
+    bitwise identical to one from the era that wrote the file.
+    """
+    out = {}
+    for k, v in flat.items():
+        if k == "dp" or k.startswith("dp/"):
+            out["feedback/" + k] = v
+        elif k.startswith("bstates/"):
+            m = _LEGACY_BSTATE_RE.match(k)
+            leaf = {"send": "resid", "recv": "mirror", None: "resid"}
+            out[f"feedback/boundary/{m.group(1)}/{leaf[m.group(2)]}"] = v
+        else:
+            out[k] = v
+    return out
 
 
 def restore_train_state(path: str, params_like, opt_like, bstates_like,
@@ -151,17 +201,37 @@ def restore_train_state(path: str, params_like, opt_like, bstates_like,
     boundaries, another optimizer, a dp run resumed without --dp), and
     resuming minus that state would not reproduce its trajectory.
 
+    Files in the pre-``feedback`` layout are migrated transparently (see
+    :func:`_migrate_legacy_feedback`); the restored arrays are bitwise
+    identical either way.
+
     Returns ``(params, opt, bstates, step)``, or
     ``(params, opt, bstates, dp_state, step)`` when ``dp_like`` is given.
     """
-    like = {"params": params_like, "opt": opt_like, "bstates": bstates_like}
+    like = {"params": params_like, "opt": opt_like,
+            "feedback": {"boundary": bstates_like}}
     if dp_like is not None:
-        like["dp"] = dp_like
-    state, step = restore(path, like, strict=True)
+        like["feedback"]["dp"] = dp_like
+    flat, meta = _load_flat(path)
+    legacy = (not any(k.startswith("feedback/") for k in flat)
+              and any(k == "dp" or k.startswith(("bstates/", "dp/"))
+                      for k in flat))
+    if legacy:
+        flat = _migrate_legacy_feedback(flat)
+        # Legacy files predate FeedbackState, so its always-present
+        # size-0 leaves (mirror/agg without a receiver copy) have no
+        # stored key — synthesize the empty arrays; stored data is
+        # never touched.
+        for path_, leaf in jax.tree_util.tree_flatten_with_path(like)[0]:
+            key = _tree_key(path_)
+            if key not in flat and leaf.size == 0:
+                flat[key] = np.zeros(leaf.shape, leaf.dtype)
+    state, step = _restore_from_flat(path, flat, meta, like, strict=True)
+    bstates = state["feedback"]["boundary"]
     if dp_like is not None:
-        return (state["params"], state["opt"], state["bstates"],
-                state["dp"], step)
-    return state["params"], state["opt"], state["bstates"], step
+        return (state["params"], state["opt"], bstates,
+                state["feedback"]["dp"], step)
+    return state["params"], state["opt"], bstates, step
 
 
 def restore_params(path: str, params_like) -> Tuple[Any, int]:

@@ -6,7 +6,12 @@ from repro.core.compressors import (Compressor, IDENTITY, quant, topk,
                                     topk_scatter)
 from repro.core.policy import (BoundaryPolicy, CompressionPolicy,
                                NO_COMPRESSION, NO_POLICY, quant_policy,
-                               topk_policy, ef_policy, aqsgd_policy)
+                               topk_policy, ef_policy, aqsgd_policy,
+                               PolicyRule, PolicyRules, parse_policy_rules,
+                               resolve_policy)
+from repro.core.feedback import (FeedbackState, FEEDBACK_REGISTRY,
+                                 DELTA_CODED_MODES, feedback_message,
+                                 init_feedback, needs_recv_mirror)
 from repro.core.boundary import (boundary_apply, boundary_eval,
                                  init_boundary_state,
                                  init_all_boundary_states)
@@ -17,6 +22,9 @@ __all__ = [
     "topk_values_indices", "topk_scatter",
     "BoundaryPolicy", "CompressionPolicy", "NO_COMPRESSION", "NO_POLICY",
     "quant_policy", "topk_policy", "ef_policy", "aqsgd_policy",
+    "PolicyRule", "PolicyRules", "parse_policy_rules", "resolve_policy",
+    "FeedbackState", "FEEDBACK_REGISTRY", "DELTA_CODED_MODES",
+    "feedback_message", "init_feedback", "needs_recv_mirror",
     "boundary_apply", "boundary_eval", "init_boundary_state",
     "init_all_boundary_states",
 ]

@@ -45,11 +45,13 @@ def _transport(policy: BoundaryPolicy):
 
 @partial(jax.custom_vjp, nondiff_argnums=(0,))
 def boundary_apply(policy: BoundaryPolicy, x, fw_buf, bw_buf, ids):
-    """Training-time boundary.  Returns ``(y, new_fw_buf)``.
+    """Training-time boundary.  Returns ``(y, new_fw_state)``.
 
-    ``fw_buf``/``bw_buf``: feedback buffers (size-0 arrays when unused).
-    ``ids``: (B,) int32 example ids (AQ-SGD only; zeros otherwise).
-    The updated backward buffer is delivered as the cotangent of ``bw_buf``.
+    ``fw_buf``/``bw_buf``: per-direction
+    :class:`~repro.core.feedback.FeedbackState` (``resid`` size-0 when the
+    direction has no feedback).  ``ids``: (B,) int32 example ids (AQ-SGD
+    only; zeros otherwise).  The updated backward state is delivered as
+    the cotangent of ``bw_buf``.
     """
     m, new_fw, _ = _transport(policy).fw(x, fw_buf, ids)
     return m, new_fw
@@ -136,14 +138,24 @@ def boundary_wire_bytes_per_token(policy, d_model: int,
 # State container helpers
 # ---------------------------------------------------------------------------
 
+def empty_boundary_state(dtype=jnp.float32):
+    """Buffer-free ``{'fw', 'bw'}`` FeedbackState pair — what a boundary
+    without feedback threads through :func:`boundary_apply` (size-0
+    ``resid``, stable pytree structure across policies)."""
+    from repro.core.feedback import init_feedback
+    return {"fw": init_feedback("none", (), direction="fw", dtype=dtype),
+            "bw": init_feedback("none", (), direction="bw", dtype=dtype)}
+
+
 def init_boundary_state(policy: BoundaryPolicy, feat_shape, *, batch: int,
                         num_samples: int = 0, dtype=jnp.float32):
-    """``{'fw': buf, 'bw': buf}`` for one boundary (size-0 when unused)."""
-    from repro.core.feedback import init_buffer
-    fw = init_buffer(policy.feedback, feat_shape, dtype=dtype,
-                     num_samples=num_samples, batch=batch)
-    bw = init_buffer(policy.bw_feedback, feat_shape, dtype=dtype,
-                     num_samples=num_samples, batch=batch)
+    """``{'fw': FeedbackState, 'bw': FeedbackState}`` for one boundary
+    (``resid`` is size-0 when the direction has no feedback)."""
+    from repro.core.feedback import init_feedback
+    fw = init_feedback(policy.feedback, feat_shape, direction="fw",
+                       dtype=dtype, num_samples=num_samples, batch=batch)
+    bw = init_feedback(policy.bw_feedback, feat_shape, direction="bw",
+                       dtype=dtype, num_samples=num_samples, batch=batch)
     return {"fw": fw, "bw": bw}
 
 

@@ -1,40 +1,46 @@
-"""Error-compensation message functions (paper Sec. 2.4, 2.5).
+"""Error-compensation state and message functions (paper Sec. 2.4, 2.5).
 
-Each function maps ``(compressor, x, buffer) -> (message, new_buffer)``.
-``message`` is what crosses the wire (and what the downstream stage sees);
-``new_buffer`` is the updated compensation state.
+One abstraction covers every compensation thread in the repo:
 
-Modes:
+  * the per-boundary fw/bw buffers of the simulated boundary
+    (core/boundary.py) and the real pipeline (transport/pipeline.py);
+  * AQ-SGD's dataset-indexed ``(num_samples, *feat)`` buffer;
+  * the data-parallel gradient-reduce residuals
+    (transport/collectives.py).
+
+:class:`FeedbackState` is the unified pytree: static ``(scope, direction,
+mode)`` metadata plus three array slots — ``resid`` (the sender-side
+compensation buffer), ``mirror`` (the receiver-side replica a real wire
+keeps for delta-coded modes) and ``agg`` (the replicated aggregate of the
+DP EF21 reduce).  Unused slots are size-0 placeholders so the pytree
+structure is mode-stable (jit caches don't fragment per policy).
+
+:data:`FEEDBACK_REGISTRY` holds one :class:`FeedbackMode` entry per mode:
+its message function, whether it is delta-coded (the receiver cannot
+decode the payload without a mirror), whether its buffer is indexed by
+dataset example id, and which scopes may use it.
+
+Message semantics (each maps ``(compressor, x, buffer) -> (message,
+new_buffer)``; ``message`` is what crosses the wire):
+
   EF       (Seide et al.):     m = C(x + e);           e' = x + e - m
   EF21     (Richtarik et al.): m = g + C(x - g);       g' = m
   EF-mixed (this paper):       m = C_{K/2}(x) + C_{K/2}(e);  e' = x + e - m
   AQ-SGD   (Wang et al.):      per-example EF21 on activations only:
                                m_i = b_i + C(x_i - b_i); b_i' = m_i
 
-Buffers are plain arrays; AQ-SGD's buffer is ``(num_samples, *feat)`` and is
-gathered/scattered by example id.  All functions are pure.
+Buffers are plain arrays; AQ-SGD's buffer is ``(num_samples, *feat)`` and
+is gathered/scattered by example id.  All functions are pure.
 """
 from __future__ import annotations
 
-from typing import Tuple
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.compressors import Compressor, topk_compress
-
-
-# Modes whose wire message is a compressed DELTA against the buffer
-# (m = buf + C(x - buf)): the receiver cannot reconstruct m from the payload
-# alone, so a real transport keeps a receiver-side MIRROR of the sender's
-# buffer (Wang et al. AQ-SGD Sec. 3: both machines store the activation
-# buffer).  EF / EF-mixed messages decode directly from the payload.
-DELTA_CODED_MODES = ("ef21", "aqsgd")
-
-
-def needs_recv_mirror(mode: str) -> bool:
-    """True when a real (packed-wire) transport of this mode must keep a
-    receiver-side replica of the compensation buffer."""
-    return mode in DELTA_CODED_MODES
 
 
 def ef_message(comp: Compressor, x: jnp.ndarray, e: jnp.ndarray
@@ -68,25 +74,140 @@ def aqsgd_message(comp: Compressor, x: jnp.ndarray, buf: jnp.ndarray,
     return m, new_buf
 
 
+# ---------------------------------------------------------------------------
+# The mode registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FeedbackMode:
+    """One registry entry: how a compensation mode inits, messages, and
+    addresses its buffer.
+
+    ``delta_coded``: the wire message is a compressed DELTA against the
+    buffer (m = buf + C(x - buf)) — the receiver cannot reconstruct m from
+    the payload alone, so a real (packed-wire) transport keeps a
+    receiver-side MIRROR of the sender's buffer (Wang et al. AQ-SGD
+    Sec. 3: both machines store the activation buffer).  EF / EF-mixed
+    messages decode directly from the payload.
+
+    ``per_example``: the buffer is ``(num_samples, *feat)``, indexed by
+    dataset example id (AQ-SGD); otherwise it is slotted by batch row /
+    microbatch index.
+
+    ``scopes``: where the mode is valid — at a stage boundary
+    ("boundary") and/or on the DP gradient reduce ("dp").
+    """
+    name: str
+    message: Callable
+    delta_coded: bool = False
+    per_example: bool = False
+    scopes: Tuple[str, ...] = ("boundary",)
+
+
+def _none_message(comp, x, buf, ids=None):
+    return comp(x), buf
+
+
+FEEDBACK_REGISTRY = {
+    "none": FeedbackMode("none", _none_message, scopes=("boundary", "dp")),
+    "ef": FeedbackMode(
+        "ef", lambda comp, x, buf, ids=None: ef_message(comp, x, buf),
+        scopes=("boundary", "dp")),
+    "ef21": FeedbackMode(
+        "ef21", lambda comp, x, buf, ids=None: ef21_message(comp, x, buf),
+        delta_coded=True, scopes=("boundary", "dp")),
+    "efmixed": FeedbackMode(
+        "efmixed",
+        lambda comp, x, buf, ids=None: efmixed_message(comp, x, buf)),
+    "aqsgd": FeedbackMode(
+        "aqsgd",
+        lambda comp, x, buf, ids=None: aqsgd_message(comp, x, buf, ids),
+        delta_coded=True, per_example=True),
+}
+
+# Modes whose wire message is a compressed delta (receiver keeps a mirror).
+DELTA_CODED_MODES = tuple(m.name for m in FEEDBACK_REGISTRY.values()
+                          if m.delta_coded)
+
+
+def get_mode(mode: str) -> FeedbackMode:
+    try:
+        return FEEDBACK_REGISTRY[mode]
+    except KeyError:
+        raise ValueError(f"unknown feedback mode {mode!r}; known: "
+                         f"{sorted(FEEDBACK_REGISTRY)}") from None
+
+
+def needs_recv_mirror(mode: str) -> bool:
+    """True when a real (packed-wire) transport of this mode must keep a
+    receiver-side replica of the compensation buffer."""
+    return get_mode(mode).delta_coded
+
+
 def feedback_message(mode: str, comp: Compressor, x: jnp.ndarray,
                      buf, ids=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Dispatch. ``mode='none'`` ignores the buffer and returns it unchanged."""
-    if mode == "none":
-        return comp(x), buf
-    if mode == "ef":
-        return ef_message(comp, x, buf)
-    if mode == "ef21":
-        return ef21_message(comp, x, buf)
-    if mode == "efmixed":
-        return efmixed_message(comp, x, buf)
-    if mode == "aqsgd":
-        return aqsgd_message(comp, x, buf, ids)
-    raise ValueError(f"unknown feedback mode {mode}")
+    return get_mode(mode).message(comp, x, buf, ids)
+
+
+# ---------------------------------------------------------------------------
+# The unified state pytree
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FeedbackState:
+    """One compensation thread's state, as a registered pytree.
+
+    Array slots (pytree data — what checkpoints persist):
+      resid  : the sender-side buffer (EF's error e / EF21's model g /
+               AQ-SGD's per-example rows / the DP residuals).
+      mirror : the receiver-side replica of ``resid`` a real packed-wire
+               transport keeps for delta-coded modes (size-0 otherwise;
+               the simulated boundary collapses both ends into ``resid``).
+      agg    : the DP EF21 reduce's replicated aggregate G = sum_r w_r
+               (size-0 otherwise).
+
+    Static metadata (pytree aux — jit-hashable, never traced):
+      scope     : "boundary" | "dp"
+      direction : "fw" | "bw" (boundary) | "grad" (dp)
+      mode      : a :data:`FEEDBACK_REGISTRY` key
+    """
+    resid: Any
+    mirror: Any
+    agg: Any
+    scope: str = "boundary"
+    direction: str = "fw"
+    mode: str = "none"
+
+    def __post_init__(self):
+        spec = get_mode(self.mode)
+        if self.scope not in spec.scopes:
+            raise ValueError(
+                f"feedback mode {self.mode!r} is not valid at scope "
+                f"{self.scope!r} (valid scopes: {spec.scopes})")
+
+    @property
+    def spec(self) -> FeedbackMode:
+        return FEEDBACK_REGISTRY[self.mode]
+
+    def replace(self, **kw) -> "FeedbackState":
+        return dataclasses.replace(self, **kw)
+
+    def map(self, f) -> "FeedbackState":
+        """Apply ``f`` to every array slot (structure/metadata preserved)."""
+        return self.replace(resid=jax.tree.map(f, self.resid),
+                            mirror=jax.tree.map(f, self.mirror),
+                            agg=jax.tree.map(f, self.agg))
+
+
+jax.tree_util.register_dataclass(
+    FeedbackState, data_fields=("resid", "mirror", "agg"),
+    meta_fields=("scope", "direction", "mode"))
 
 
 def init_buffer(mode: str, feat_shape, dtype=jnp.float32, num_samples: int = 0,
                 batch: int = 0):
-    """Initial buffer for a boundary direction.
+    """Initial buffer array for one boundary direction.
 
     Global-buffer modes (ef/ef21/efmixed) keep one buffer of the full
     boundary-tensor shape ``(batch, *feat)`` (paper: "global error buffer
@@ -94,10 +215,76 @@ def init_buffer(mode: str, feat_shape, dtype=jnp.float32, num_samples: int = 0,
     ``mode='none'`` returns a size-0 placeholder so pytree structure is
     stable across policies.
     """
+    spec = get_mode(mode)
     if mode == "none":
         return jnp.zeros((0,), dtype=dtype)
-    if mode == "aqsgd":
-        assert num_samples > 0, "aqsgd needs the dataset size"
+    if spec.per_example:
+        assert num_samples > 0, f"{mode} needs the dataset size"
         return jnp.zeros((num_samples, *feat_shape), dtype=dtype)
     assert batch > 0, "global EF buffer needs the batch size"
     return jnp.zeros((batch, *feat_shape), dtype=dtype)
+
+
+def init_feedback(mode: str, feat_shape, *, scope: str = "boundary",
+                  direction: str = "fw", dtype=jnp.float32,
+                  num_samples: int = 0, batch: int = 0) -> FeedbackState:
+    """A fresh single-program :class:`FeedbackState` for one boundary
+    direction (the simulated transport's view: ``mirror`` collapsed into
+    ``resid``, ``agg`` unused)."""
+    z = jnp.zeros((0,), dtype=dtype)
+    return FeedbackState(
+        resid=init_buffer(mode, feat_shape, dtype=dtype,
+                          num_samples=num_samples, batch=batch),
+        mirror=z, agg=z, scope=scope, direction=direction, mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# Buffer row addressing (shared by every scan-carry consumer)
+# ---------------------------------------------------------------------------
+#
+# The pipeline's scan carries stage-local buffers and touches ONE
+# microbatch slice per tick; the row is the microbatch slot for global
+# modes and the example ids for per-example modes.  These two helpers are
+# the schedule- and scope-agnostic gather/scatter the registry exports:
+# transport/pipeline.py uses them for both directions of every schedule,
+# and the same addressing backs the dataset-sharded AQ-SGD + DP split
+# (train/steps.py slices the example-id axis instead).
+
+def gather_rows(buf, k, slot, ids, mode: str, v: int = 1):
+    """One microbatch's slice of a feedback buffer (size-0 passes
+    through).  ``k`` selects the virtual chunk when ``v > 1``; the row is
+    ``ids`` for per-example modes, the microbatch ``slot`` otherwise."""
+    if mode == "none":
+        return buf
+    row = ids if get_mode(mode).per_example else slot
+    return buf[row] if v == 1 else buf[k, row]
+
+
+def scatter_rows(buf, k, slot, ids, mode: str, v: int, new_slice, old_slice,
+                 valid):
+    """Masked functional update of one microbatch's slice (the inverse of
+    :func:`gather_rows`)."""
+    if mode == "none":
+        return buf
+    upd = jnp.where(valid, new_slice, old_slice).astype(buf.dtype)
+    row = ids if get_mode(mode).per_example else slot
+    return buf.at[row].set(upd) if v == 1 else buf.at[k, row].set(upd)
+
+
+def shard_ids(ids, replica, num_samples: int, dp: int):
+    """Translate global example ids into a replica's id-shard rows.
+
+    AQ-SGD + DP shards the ``(num_samples, *feat)`` buffer by example id
+    over the data axis: replica ``r`` owns rows
+    ``[r * num_samples/dp, (r+1) * num_samples/dp)`` and gathers/scatters
+    with LOCAL row indices, so the per-example compensation never leaves
+    the replica.  The data stream must route example ``i`` to replica
+    ``i // (num_samples/dp)`` (the synthetic stream's contiguous id blocks
+    do; see launch/train.py) — an out-of-shard id would clamp to the
+    shard edge, compensating against a wrong row.
+    """
+    if num_samples % dp:
+        raise ValueError(
+            f"aqsgd + dp shards the per-example buffer by id: num_samples "
+            f"{num_samples} must be divisible by dp {dp}")
+    return ids - replica * (num_samples // dp)

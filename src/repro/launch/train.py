@@ -36,8 +36,9 @@ import jax.numpy as jnp
 from repro.checkpoint import io as ckpt_io
 from repro.configs.registry import ARCHS, get
 from repro.core.boundary import init_boundary_state
-from repro.core.policy import (CompressionPolicy, NO_POLICY, aqsgd_policy,
-                               ef_policy, quant_policy, topk_policy)
+from repro.core.policy import (CompressionPolicy, NO_POLICY, PolicyRules,
+                               aqsgd_policy, ef_policy, parse_policy_rules,
+                               quant_policy, resolve_policy, topk_policy)
 from repro.models import encdec, transformer
 from repro.models.config import active_param_count, param_count
 from repro.optim.optimizers import OptimizerConfig, init_opt_state
@@ -57,11 +58,17 @@ POLICIES = {
 
 
 def synthetic_stream(cfg, batch: int, seq: int, seed: int = 0,
-                     num_samples: int = 4096, start_step: int = 0):
+                     num_samples: int = 4096, start_step: int = 0,
+                     dp: int = 1):
     """Deterministic order-2 Markov token stream (see data/synthetic.py),
     vocab-clipped to the model's vocabulary.  Each step's batch is a pure
     function of (seed, step), so ``start_step`` fast-forwards the stream —
-    a resumed run sees exactly the batches the interrupted run would have."""
+    a resumed run sees exactly the batches the interrupted run would have.
+
+    ``dp > 1`` deals ids per replica: contiguous batch shard r cycles over
+    its own id block ``[r*num_samples/dp, (r+1)*num_samples/dp)`` — the
+    AQ-SGD dp routing contract (each replica owns the buffer rows of the
+    examples it sees; see ``repro.core.feedback.shard_ids``)."""
     rng = np.random.RandomState(seed)
     vocab = min(cfg.vocab_size, 1024)
     succ = rng.randint(0, vocab, size=(vocab, vocab, 4))
@@ -76,7 +83,14 @@ def synthetic_stream(cfg, batch: int, seq: int, seed: int = 0,
                              r.randint(0, 4, batch)]
         # ids cycle over a bounded "dataset" so AQ-SGD's per-example
         # buffers revisit rows (the premise of the compensation)
-        ids = (np.arange(batch, dtype=np.int32) + batch * step) % num_samples
+        if dp > 1:
+            sh, per = batch // dp, num_samples // dp
+            ids = np.concatenate(
+                [r * per + (np.arange(sh, dtype=np.int32) + sh * step) % per
+                 for r in range(dp)])
+        else:
+            ids = (np.arange(batch, dtype=np.int32)
+                   + batch * step) % num_samples
         yield out, ids
         step += 1
 
@@ -101,7 +115,14 @@ def main(argv=None) -> int:
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--policy", default="none", choices=sorted(POLICIES))
+    ap.add_argument("--policy", default="none",
+                    help="a named policy (%s) OR an adaptive rule spec: "
+                         "';'-separated 'codec[:k_frac][@cond,...]' rules, "
+                         "conds size>=N | size<N | depth>=N | depth<N | "
+                         "dir=fw|bw — first match wins per boundary, e.g. "
+                         "'q4@size>=65536;q8@size>=16384;none' (resolved "
+                         "against seq*d_model at trace time)"
+                         % ", ".join(sorted(POLICIES)))
     ap.add_argument("--transport", default="simulated",
                     choices=("simulated", "pipeline"),
                     help="simulated boundary (paper) or the real "
@@ -213,7 +234,15 @@ def main(argv=None) -> int:
             grad_accum = args.microbatches
     virtual_stages = (args.virtual_stages if args.virtual_stages is not None
                       else (2 if args.schedule == "interleaved" else 1))
-    policy = POLICIES[args.policy]()
+    if args.policy in POLICIES:
+        policy = POLICIES[args.policy]()
+    else:
+        try:
+            policy = parse_policy_rules(args.policy)
+        except ValueError as e:
+            ap.error(f"--policy {args.policy!r} is neither a named policy "
+                     f"({', '.join(sorted(POLICIES))}) nor a valid rule "
+                     f"spec: {e}")
     if args.feedback != "none":
         bp = (aqsgd_policy(args.k_frac) if args.feedback == "aqsgd"
               else ef_policy(args.k_frac, args.feedback))
@@ -221,6 +250,10 @@ def main(argv=None) -> int:
         policy = CompressionPolicy(num_stages=stages, boundary=bp)
     if args.stages:
         policy = dataclasses.replace(policy, num_stages=args.stages)
+    if isinstance(policy, PolicyRules):
+        # static resolution: rules -> concrete per-boundary codecs, keyed
+        # by the LM's uniform cut size (hashable before any jit tracing)
+        policy = resolve_policy(policy, seq * cfg.d_model)
     need_devices = (args.dp * policy.num_stages
                     if args.transport == "pipeline" else args.dp)
     if (need_devices > 1
@@ -248,7 +281,7 @@ def main(argv=None) -> int:
             policy, (seq, cfg.d_model), batch=args.batch,
             microbatches=pipeline_mb,
             num_samples=args.num_samples, dtype=jnp.bfloat16,
-            virtual_stages=virtual_stages)
+            virtual_stages=virtual_stages, dp=args.dp)
     else:
         # boundaries that actually exist in the stack: segment_bounds caps
         # the stage count at the group count (a 2-group smoke model under a
@@ -303,7 +336,7 @@ def main(argv=None) -> int:
               flush=True)
     stream = synthetic_stream(cfg, args.batch, seq, args.seed,
                               num_samples=args.num_samples,
-                              start_step=start_step)
+                              start_step=start_step, dp=args.dp)
     metrics, t0 = [], time.time()
     tokens_per_step = args.batch * seq
     for step in range(start_step + 1, args.steps + 1):

@@ -13,7 +13,8 @@ from typing import List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.boundary import boundary_apply, boundary_eval
+from repro.core.boundary import (boundary_apply, boundary_eval,
+                                 empty_boundary_state)
 from repro.core.policy import CompressionPolicy, NO_POLICY
 
 
@@ -108,8 +109,7 @@ def forward_train(params, images, policy: CompressionPolicy = NO_POLICY,
         if s < n - 1 and policy.num_boundaries > s:
             bp = policy.at(s)
             st = (bstates[s] if bstates is not None
-                  else {"fw": jnp.zeros((0,), x.dtype),
-                        "bw": jnp.zeros((0,), x.dtype)})
+                  else empty_boundary_state(x.dtype))
             x, nf = boundary_apply(bp, x, st["fw"], st["bw"], ids)
             new_fw.append(nf)
     return _head(params, x), new_fw

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.boundary import (boundary_apply, boundary_eval,
+                                 empty_boundary_state,
                                  boundary_wire_eval)
 from repro.core.policy import CompressionPolicy, NO_POLICY
 from repro.models import attention as A
@@ -147,8 +148,7 @@ def forward_hidden(params, batch, cfg: ModelConfig,
         if si < len(segs) - 1:
             bp = policy.at(si)
             st = (bstates[si] if bstates is not None
-                  else {"fw": jnp.zeros((0,), x.dtype),
-                        "bw": jnp.zeros((0,), x.dtype)})
+                  else empty_boundary_state(x.dtype))
             x, nf = boundary_apply(bp, x, st["fw"], st["bw"], ids)
             new_fw.append(nf)
     return x, jnp.float32(0.0), new_fw

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.boundary import (boundary_apply, boundary_eval,
+                                 empty_boundary_state,
                                  boundary_wire_eval)
 from repro.core.policy import CompressionPolicy, NO_POLICY
 from repro.models import blocks as B
@@ -160,8 +161,7 @@ def forward_hidden(params, batch, cfg: ModelConfig,
         if si < len(segs) - 1:
             bp = policy.at(si)
             st = (bstates[si] if bstates is not None
-                  else {"fw": jnp.zeros((0,), x.dtype),
-                        "bw": jnp.zeros((0,), x.dtype)})
+                  else empty_boundary_state(x.dtype))
             x, nf = boundary_apply(bp, x, st["fw"], st["bw"], ids)
             new_fw.append(nf)
     return x, aux, new_fw

@@ -19,7 +19,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import CompressionPolicy, NO_POLICY
+from repro.core.policy import (CompressionPolicy, NO_POLICY, PolicyRules,
+                               resolve_policy)
 from repro.data.synthetic import ImageClassData, LMData
 from repro.models import cnn, transformer
 from repro.models.config import ModelConfig
@@ -77,6 +78,14 @@ def run_cnn_experiment(policy: CompressionPolicy, *, epochs: int = 8,
     latter builds ``num_stages * virtual_stages`` logical stage slices).
     """
     data = data or ImageClassData()
+    if isinstance(policy, PolicyRules):
+        # CNN cuts are heterogeneous: resolve each rule against the real
+        # per-boundary element count (pipeline stages are homogeneous)
+        sizes = (data.image * data.image * width
+                 if transport == "pipeline" else
+                 [int(np.prod(s)) for s in
+                  cnn.boundary_shapes(width, data.image)])
+        policy = resolve_policy(policy, sizes)
     opt = opt or OptimizerConfig(kind="sgd", lr=0.02, momentum=0.9,
                                  weight_decay=5e-4, schedule="cosine",
                                  t_max=epochs * (data.num_train // batch))
@@ -127,7 +136,8 @@ def run_cnn_experiment(policy: CompressionPolicy, *, epochs: int = 8,
 
 def _pipeline_bstates(policy: CompressionPolicy, feat_shape, *, batch: int,
                       microbatches=None, num_samples: int = 0,
-                      dtype=jnp.float32, virtual_stages: int = 1):
+                      dtype=jnp.float32, virtual_stages: int = 1,
+                      dp: int = 1):
     """Feedback state for the real pipeline transport: the stage-stacked
     ``init_feedback_state`` pytree, or ``[]`` for feedback-free policies
     (pass-through, PR-1 behaviour)."""
@@ -139,7 +149,7 @@ def _pipeline_bstates(policy: CompressionPolicy, feat_shape, *, batch: int,
     return init_feedback_state(bp, feat_shape, num_stages=policy.num_stages,
                                batch=batch, microbatches=microbatches,
                                num_samples=num_samples, dtype=dtype,
-                               virtual_stages=virtual_stages)
+                               virtual_stages=virtual_stages, dp=dp)
 
 
 def init_lm_dp_state(cfg, params, policy: CompressionPolicy, dp: int,
@@ -209,6 +219,8 @@ def run_lm_experiment(cfg: ModelConfig, policy: CompressionPolicy, *,
     needs ``dp`` (simulated) or ``dp * num_stages`` (pipeline) devices.
     """
     data = data or LMData()
+    if isinstance(policy, PolicyRules):
+        policy = resolve_policy(policy, data.seq_len * cfg.d_model)
     opt = opt or OptimizerConfig(kind="adamw", lr=3e-4, weight_decay=0.01,
                                  schedule="constant", grad_clip=1.0)
     params = pretrained_params or transformer.init_params(
@@ -228,7 +240,7 @@ def run_lm_experiment(cfg: ModelConfig, policy: CompressionPolicy, *,
                                     microbatches=pipeline_microbatches,
                                     num_samples=data.num_train,
                                     dtype=jnp.bfloat16,
-                                    virtual_stages=virtual_stages)
+                                    virtual_stages=virtual_stages, dp=dp)
     step = make_lm_train_step(cfg, policy, opt, remat=False, donate=False,
                               transport=transport, mesh=mesh,
                               stage_axis=stage_axis,

@@ -27,10 +27,29 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import CompressionPolicy
+from repro.core.policy import CompressionPolicy, PolicyRules, resolve_policy
 from repro.models import encdec, transformer
 from repro.models.transformer import lm_loss
 from repro.optim.optimizers import OptimizerConfig, apply_updates
+
+
+def _resolve_rules(policy, boundary_feat):
+    """Resolve a :class:`~repro.core.policy.PolicyRules` rule set into a
+    concrete :class:`CompressionPolicy` at trace time.
+
+    ``boundary_feat``: per-boundary tensor element count (one int for
+    homogeneous cuts, or a sequence with one entry per cut).  Plain
+    ``CompressionPolicy`` values pass through untouched, so a degenerate
+    one-rule set reproduces a static-policy run bit-for-bit.
+    """
+    if isinstance(policy, PolicyRules):
+        if boundary_feat is None:
+            raise ValueError(
+                "policy is a PolicyRules rule set — pass boundary_feat= "
+                "(elements crossing each cut, e.g. seq_len * d_model for "
+                "the LM) so rules can resolve to concrete codecs")
+        return resolve_policy(policy, boundary_feat)
+    return policy
 
 
 def _uniform_boundary(policy: CompressionPolicy):
@@ -113,7 +132,7 @@ def make_lm_train_step(cfg, policy: CompressionPolicy,
                        schedule: str = "gpipe", virtual_stages: int = 1,
                        dp: int = 1, dp_codec: str = "none",
                        dp_feedback: str = "none", dp_k_frac: float = 0.1,
-                       data_axis: str = "data"):
+                       data_axis: str = "data", boundary_feat=None):
     """Returns jit'd ``step(params, opt_state, bstates, batch, ids)
     -> (params, opt_state, bstates, metrics)``.
 
@@ -146,6 +165,7 @@ def make_lm_train_step(cfg, policy: CompressionPolicy,
     stack (embed/head/norm grads stay exact: they run replicated).
     """
     mod = encdec if cfg.enc_dec else transformer
+    policy = _resolve_rules(policy, boundary_feat)
     grad_accum = _resolve_grad_accum(grad_accum, microbatches)
     if transport == "pipeline":
         if grad_accum > 1:
@@ -239,18 +259,17 @@ def _make_dp_simulated_step(policy, opt, compute_grads, dp, dp_codec,
     """Data-parallel wrapper around the simulated-boundary gradient
     computation: ``dp`` ``vmap`` lanes (one per contiguous batch shard),
     then one compressed all-reduce of the per-lane gradients over the
-    ``data`` mesh axis.  Per-example feedback buffers split by shard;
-    AQ-SGD's dataset-indexed buffer has no per-replica split and is
-    rejected."""
+    ``data`` mesh axis.  Global feedback buffers split by batch shard;
+    AQ-SGD's dataset-indexed ``(num_samples, *feat)`` buffer splits BY
+    EXAMPLE ID (lane r owns rows ``[r*ns/dp, (r+1)*ns/dp)`` and addresses
+    them with localized ids — :func:`repro.core.feedback.shard_ids`), so
+    the per-example compensation never crosses lanes."""
+    from repro.core.feedback import shard_ids
     from repro.launch.mesh import make_data_mesh
     from repro.transport.collectives import make_grad_all_reduce
-    if policy.num_boundaries and any(
-            policy.at(i).feedback == "aqsgd"
-            for i in range(policy.num_boundaries)):
-        raise NotImplementedError(
-            "aqsgd boundary feedback + data parallelism: the "
-            "(num_samples, ...) buffer is dataset-indexed, not "
-            "per-example-sharded")
+    has_aqsgd = policy.num_boundaries and any(
+        policy.at(i).feedback == "aqsgd"
+        for i in range(policy.num_boundaries))
     mesh = make_data_mesh(dp, data_axis=data_axis)
     reduce_fn = make_grad_all_reduce(mesh, data_axis, dp_codec,
                                      k_frac=dp_k_frac,
@@ -258,11 +277,21 @@ def _make_dp_simulated_step(policy, opt, compute_grads, dp, dp_codec,
 
     def step_dp(params, opt_state, bstates, batch, ids, dp_state):
         fw_bufs, bw_bufs = _split_states(bstates)
+        ids_sh = _split_leading(ids, dp)
+        if has_aqsgd:
+            # the (num_samples, *feat) resid's _split_leading IS the
+            # id-shard: localize each lane's ids to its shard rows
+            ns = next(fw_bufs[i].resid.shape[0]
+                      for i in range(policy.num_boundaries)
+                      if policy.at(i).feedback == "aqsgd")
+            ids_sh = jax.vmap(
+                lambda i, r: shard_ids(i, r, ns, dp))(
+                    ids_sh, jnp.arange(dp, dtype=ids.dtype))
         g_dp, new_fw_dp, new_bw_dp, met = jax.vmap(
             compute_grads, in_axes=(None, 0, 0, 0, 0))(
                 params, _split_leading(bw_bufs, dp),
                 _split_leading(fw_bufs, dp), _split_leading(batch, dp),
-                _split_leading(ids, dp))
+                ids_sh)
         grads, new_dp_state = reduce_fn(g_dp, dp_state)
         params, opt_state = apply_updates(opt, params, grads, opt_state)
         new_fw = [_merge_leading(b) for b in new_fw_dp]
@@ -304,11 +333,6 @@ def _make_pipeline_lm_train_step(cfg, policy: CompressionPolicy,
     s_stages = policy.num_stages
     needs_state = bp.needs_fw_buffer or bp.needs_bw_buffer
     if dp > 1:
-        if needs_state:
-            raise NotImplementedError(
-                "per-stage boundary feedback + data parallelism on the "
-                "pipeline transport: use a feedback-free boundary policy "
-                "(DP-side error feedback is dp_feedback=)")
         from repro.launch.mesh import make_dp_pipeline_mesh
         if mesh is None:
             mesh = make_dp_pipeline_mesh(dp, s_stages, data_axis=data_axis,
@@ -378,6 +402,13 @@ def _make_dp_pipeline_lm_train_step(cfg, bp, opt: OptimizerConfig, *, mesh,
     no hidden ``psum``; embed/head/norm run replicated on the global batch
     and keep exact gradients.  Step signature:
     ``step(params, opt_state, bstates, batch, ids, dp_state)``.
+
+    Boundary feedback composes with dp: ``bstates`` is the
+    :func:`repro.transport.pipeline.init_feedback_state` pytree built with
+    ``dp=dp`` (leading replica dim, sharded over the ``data`` axis — each
+    replica row compensates its own batch shard; AQ-SGD id-shards), and
+    the bw side comes back as the gradient w.r.t. ``bstates["bw"]``,
+    exactly like the solo pipeline step.
     """
     from repro.transport.pipeline import pipeline_apply
     from repro.transport.collectives import make_grad_all_reduce
@@ -388,23 +419,35 @@ def _make_dp_pipeline_lm_train_step(cfg, bp, opt: OptimizerConfig, *, mesh,
                                      k_frac=dp_k_frac, feedback=dp_feedback,
                                      average=False, shard_axis=stage_axis)
     n_slices = s_stages * virtual_stages
+    needs_state = bp.needs_fw_buffer or bp.needs_bw_buffer
 
-    def forward_dp(params, stack_dp, batch, ids):
+    def forward_dp(params, stack_dp, batch, ids, fw_state, bw_state):
         labels = jnp.roll(batch["tokens"], -1, axis=1)
         mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
         x = transformer._embed_input(params, batch, cfg)
-        x = pipeline_apply(
-            transformer.stage_stack_fn(cfg), stack_dp, x, mesh, stage_axis,
-            policy=bp, microbatches=microbatches, schedule=schedule,
-            virtual_stages=virtual_stages, dp_axis=data_axis)
-        return transformer.hidden_lm_loss(params, x, labels, cfg, mask)
+        new_fw = None
+        if needs_state:
+            x, new_fw = pipeline_apply(
+                transformer.stage_stack_fn(cfg), stack_dp, x, mesh,
+                stage_axis, policy=bp, microbatches=microbatches,
+                schedule=schedule, virtual_stages=virtual_stages,
+                dp_axis=data_axis, fw_state=fw_state, bw_state=bw_state,
+                ids=ids)
+        else:
+            x = pipeline_apply(
+                transformer.stage_stack_fn(cfg), stack_dp, x, mesh,
+                stage_axis, policy=bp, microbatches=microbatches,
+                schedule=schedule, virtual_stages=virtual_stages,
+                dp_axis=data_axis)
+        loss = transformer.hidden_lm_loss(params, x, labels, cfg, mask)
+        return loss, new_fw
 
-    def step(params, opt_state, bstates, batch, ids, dp_state):
+    def _stack_dp(params):
         stack = transformer.stack_layer_stages(params, n_slices)
-        stack_dp = jax.tree.map(
+        return jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (dp, *a.shape)), stack)
-        loss, (g_params, g_stack_dp) = jax.value_and_grad(
-            forward_dp, argnums=(0, 1))(params, stack_dp, batch, ids)
+
+    def _finish(params, opt_state, g_params, g_stack_dp, dp_state, loss):
         g_stack, new_dp_state = reduce_fn(g_stack_dp, dp_state)
         grads = dict(g_params)
         grads["layers"] = jax.tree.map(
@@ -412,8 +455,29 @@ def _make_dp_pipeline_lm_train_step(cfg, bp, opt: OptimizerConfig, *, mesh,
             g_stack)
         params, opt_state = apply_updates(opt, params, grads, opt_state)
         metrics = {"loss": loss, "aux": jnp.float32(0.0), "total": loss}
+        return params, opt_state, new_dp_state, metrics
+
+    def step(params, opt_state, bstates, batch, ids, dp_state):
+        loss, (g_params, g_stack_dp) = jax.value_and_grad(
+            lambda p, s: forward_dp(p, s, batch, ids, None, None)[0],
+            argnums=(0, 1))(params, _stack_dp(params))
+        params, opt_state, new_dp_state, metrics = _finish(
+            params, opt_state, g_params, g_stack_dp, dp_state, loss)
         return params, opt_state, bstates, new_dp_state, metrics
 
+    def step_feedback(params, opt_state, bstates, batch, ids, dp_state):
+        def loss_fn(params, stack_dp, bw_state):
+            return forward_dp(params, stack_dp, batch, ids,
+                              bstates["fw"], bw_state)
+        (loss, new_fw), (g_params, g_stack_dp, new_bw) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1, 2), has_aux=True)(
+                params, _stack_dp(params), bstates["bw"])
+        params, opt_state, new_dp_state, metrics = _finish(
+            params, opt_state, g_params, g_stack_dp, dp_state, loss)
+        return (params, opt_state, {"fw": new_fw, "bw": new_bw},
+                new_dp_state, metrics)
+
+    step = step_feedback if needs_state else step
     return jax.jit(step) if jit else step
 
 
@@ -444,9 +508,11 @@ def make_cnn_train_step(policy: CompressionPolicy, opt: OptimizerConfig,
                         transport: str = "simulated", mesh=None,
                         stage_axis: str = "stage",
                         pipeline_microbatches: Optional[int] = None,
-                        schedule: str = "gpipe", virtual_stages: int = 1):
+                        schedule: str = "gpipe", virtual_stages: int = 1,
+                        boundary_feat=None):
     from repro.models import cnn
 
+    policy = _resolve_rules(policy, boundary_feat)
     if transport == "pipeline":
         return _make_pipeline_cnn_train_step(
             policy, opt, mesh=mesh, stage_axis=stage_axis,

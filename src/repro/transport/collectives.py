@@ -43,12 +43,15 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.feedback import FEEDBACK_REGISTRY, FeedbackState
 from repro.transport.base import shard_map_compat
 from repro.transport.codecs import (WireCodec, _use_pallas_wire,
                                     fuse_payload, get_codec, unfuse_payload,
                                     wire_bytes)
 
-DP_FEEDBACK_MODES = ("none", "ef", "ef21")
+# The modes whose registry entry admits the "dp" scope (core/feedback.py).
+DP_FEEDBACK_MODES = tuple(m.name for m in FEEDBACK_REGISTRY.values()
+                          if "dp" in m.scopes)
 
 
 def _leaf_n(shape) -> int:
@@ -118,26 +121,30 @@ def dp_wire_report(grads_like, codec_name: str, *, k_frac: float = 0.1,
 
 
 def init_dp_state(grads_like, dp: int, feedback: str = "none",
-                  dtype=jnp.float32):
+                  dtype=jnp.float32) -> FeedbackState:
     """Per-replica DP feedback state, carried in the train state (and the
     train-state checkpoint — exact-resume includes the residuals).
 
-    ``{"resid", "agg"}``: ``resid`` holds ``(dp, *leaf)`` per-replica
-    buffers (EF's error ``e_r`` / EF21's gradient model ``w_r``); ``agg``
-    is EF21's replicated aggregate ``G = sum_r w_r``.  Unused slots are
-    size-0 placeholders so the pytree structure is mode-stable.
+    A :class:`repro.core.feedback.FeedbackState` at scope ``"dp"``:
+    ``resid`` holds ``(dp, *leaf)`` per-replica buffers (EF's error
+    ``e_r`` / EF21's gradient model ``w_r``); ``agg`` is EF21's replicated
+    aggregate ``G = sum_r w_r``.  ``mirror`` and unused slots are size-0
+    placeholders so the pytree structure is mode-stable.
     """
     if feedback not in DP_FEEDBACK_MODES:
         raise ValueError(f"unknown dp feedback {feedback!r}; "
                          f"known: {DP_FEEDBACK_MODES}")
+    z = jnp.zeros((0,), dtype)
     if feedback == "none":
-        return {"resid": jnp.zeros((dp, 0), dtype),
-                "agg": jnp.zeros((0,), dtype)}
+        return FeedbackState(resid=jnp.zeros((dp, 0), dtype), mirror=z,
+                             agg=z, scope="dp", direction="grad",
+                             mode=feedback)
     resid = jax.tree.map(lambda a: jnp.zeros((dp, *a.shape), dtype),
                          grads_like)
     agg = (jax.tree.map(lambda a: jnp.zeros(a.shape, dtype), grads_like)
-           if feedback == "ef21" else jnp.zeros((0,), dtype))
-    return {"resid": resid, "agg": agg}
+           if feedback == "ef21" else z)
+    return FeedbackState(resid=resid, mirror=z, agg=agg, scope="dp",
+                         direction="grad", mode=feedback)
 
 
 def _ring_gather(payload_tree, axis: str, dp: int):
@@ -301,20 +308,20 @@ def make_grad_all_reduce(mesh: Mesh, axis: str, codec: str = "none", *,
                        else jax.tree.map(lambda a: a, agg))
         return reduced_tree, new_resid, new_agg
 
-    def reduce(grads_dp, dp_state):
+    def reduce(grads_dp, dp_state: FeedbackState):
         dp_spec = lambda a: (P(axis, shard_axis)
                              if _sharded(a.shape, 1) else P(axis))
         out_spec = lambda a: (P(shard_axis)
                               if _sharded(a.shape, 1) else P())
         gspec = jax.tree.map(dp_spec, grads_dp)
-        rspec = jax.tree.map(dp_spec, dp_state["resid"])
+        rspec = jax.tree.map(dp_spec, dp_state.resid)
         aspec = jax.tree.map(
             lambda a: P(shard_axis) if _sharded(a.shape, 0) else P(),
-            dp_state["agg"])
+            dp_state.agg)
         reduced, new_resid, new_agg = shard_map_compat(
             body, mesh, (gspec, rspec, aspec),
             (jax.tree.map(out_spec, grads_dp), rspec, aspec),
-        )(grads_dp, dp_state["resid"], dp_state["agg"])
-        return reduced, {"resid": new_resid, "agg": new_agg}
+        )(grads_dp, dp_state.resid, dp_state.agg)
+        return reduced, dp_state.replace(resid=new_resid, agg=new_agg)
 
     return reduce

@@ -66,7 +66,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.feedback import needs_recv_mirror
+from repro.core.feedback import (FeedbackState, gather_rows, get_mode,
+                                 needs_recv_mirror, scatter_rows)
 from repro.core.policy import (BoundaryPolicy, quant_policy, topk_policy)
 from repro.transport.base import Transport, shard_map_compat as _shard_map
 from repro.transport.codecs import codec_for, fuse_payload, unfuse_payload
@@ -103,63 +104,69 @@ def init_feedback_state(policy: BoundaryPolicy, feat_shape, *,
                         num_stages: int, batch: int,
                         microbatches: Optional[int] = None,
                         num_samples: int = 0, dtype=jnp.float32,
-                        virtual_stages: int = 1):
+                        virtual_stages: int = 1, dp: int = 1):
     """Per-stage feedback buffers for the real pipeline.
 
-    Returns ``{"fw": {"send", "recv"}, "bw": {"send", "recv"}}`` of arrays
-    with leading dim ``num_stages`` (shard ``P(axis)``: device d's slice
-    holds the buffers of the cuts it owns — cut d for ``send`` / the mirror
-    of cut d-1 for ``recv``; with ``virtual_stages=v`` a chunk dim follows,
-    slot k being cut ``k*S + d`` / its mirror).
+    Returns ``{"fw": FeedbackState, "bw": FeedbackState}`` whose ``resid``
+    (the sender-side buffer) / ``mirror`` (the receiver-side replica of
+    the delta-coded modes) arrays carry leading dim ``num_stages`` (shard
+    ``P(axis)``: device d's slice holds the buffers of the cuts it owns —
+    cut d for ``resid`` / the mirror of cut d-1; with ``virtual_stages=v``
+    a chunk dim follows, slot k being cut ``k*S + d`` / its mirror).
 
-    Global modes (ef/ef21/efmixed) keep ``(S, [v,] mb, B/mb, *feat)`` — the
-    simulated ``(B, *feat)`` buffer split by microbatch; AQ-SGD keeps
-    ``(S, [v,] num_samples, *feat)``.  Unused buffers are size-0
+    Global modes (ef/ef21/efmixed) keep ``(S, [v,] mb, B/(mb*dp), *feat)``
+    — the simulated ``(B, *feat)`` buffer split by microbatch; AQ-SGD
+    keeps ``(S, [v,] num_samples/dp, *feat)``.  Unused buffers are size-0
     placeholders ``(S, 0)`` so the pytree structure is policy-stable.
+
+    ``dp > 1`` (the 2D ``(data, stages)`` mesh) prepends a replica dim —
+    shard ``P(data_axis, stage_axis)``: each replica row compensates its
+    own contiguous batch shard exactly as a solo run on that shard would,
+    and AQ-SGD's dataset-indexed buffer shards BY EXAMPLE ID (replica r
+    owns rows ``[r*num_samples/dp, (r+1)*num_samples/dp)``; see
+    :func:`repro.core.feedback.shard_ids` for the data-routing contract).
     """
     mb = microbatches or num_stages
-    if batch % mb:
-        raise ValueError(f"batch {batch} not divisible by microbatches {mb}")
-    mbsz = batch // mb
+    if batch % (mb * dp):
+        raise ValueError(f"batch {batch} not divisible by microbatches "
+                         f"{mb} x dp {dp}")
+    mbsz = batch // (mb * dp)
     v = virtual_stages
     chunk = () if v == 1 else (v,)
+    rep = () if dp == 1 else (dp,)
 
     def buf(mode: str, mirror: bool):
         if mode == "none" or (mirror and not needs_recv_mirror(mode)):
-            return jnp.zeros((num_stages, 0), dtype)
-        if mode == "aqsgd":
+            return jnp.zeros((*rep, num_stages, 0), dtype)
+        if get_mode(mode).per_example:
             assert num_samples > 0, "aqsgd needs the dataset size"
-            return jnp.zeros((num_stages, *chunk, num_samples, *feat_shape),
-                             dtype)
-        return jnp.zeros((num_stages, *chunk, mb, mbsz, *feat_shape), dtype)
+            if num_samples % dp:
+                raise ValueError(
+                    f"aqsgd + dp shards the per-example buffer by id: "
+                    f"num_samples {num_samples} must be divisible by "
+                    f"dp {dp}")
+            return jnp.zeros(
+                (*rep, num_stages, *chunk, num_samples // dp, *feat_shape),
+                dtype)
+        return jnp.zeros((*rep, num_stages, *chunk, mb, mbsz, *feat_shape),
+                         dtype)
 
-    return {"fw": {"send": buf(policy.feedback, False),
-                   "recv": buf(policy.feedback, True)},
-            "bw": {"send": buf(policy.bw_feedback, False),
-                   "recv": buf(policy.bw_feedback, True)}}
+    def fbs(mode: str, direction: str) -> FeedbackState:
+        return FeedbackState(
+            resid=buf(mode, False), mirror=buf(mode, True),
+            agg=jnp.zeros((0,), dtype), scope="boundary",
+            direction=direction, mode=mode)
 
-
-def _empty_state(num_stages: int, dtype):
-    z = jnp.zeros((num_stages, 0), dtype)
-    return {"send": z, "recv": z}
-
-
-def _gather(buf, k, jc, ids, mode, v):
-    """One microbatch's slice of a feedback buffer (size-0 passes through).
-    With virtual stages the leading chunk dim selects the cut."""
-    if mode == "none":
-        return buf
-    row = ids if mode == "aqsgd" else jc
-    return buf[row] if v == 1 else buf[k, row]
+    return {"fw": fbs(policy.feedback, "fw"),
+            "bw": fbs(policy.bw_feedback, "bw")}
 
 
-def _scatter(buf, k, jc, ids, mode, v, new_slice, old_slice, valid):
-    """Masked functional update of one microbatch's slice."""
-    if mode == "none":
-        return buf
-    upd = jnp.where(valid, new_slice, old_slice).astype(buf.dtype)
-    row = ids if mode == "aqsgd" else jc
-    return buf.at[row].set(upd) if v == 1 else buf.at[k, row].set(upd)
+def _empty_state(num_stages: int, dtype, direction: str,
+                 dp: int = 1) -> FeedbackState:
+    rep = () if dp == 1 else (dp,)
+    z = jnp.zeros((*rep, num_stages, 0), dtype)
+    return FeedbackState(resid=z, mirror=z, agg=jnp.zeros((0,), dtype),
+                         scope="boundary", direction=direction, mode="none")
 
 
 class PipelineTransport(Transport):
@@ -182,10 +189,16 @@ class PipelineTransport(Transport):
         if policy.reuse_indices and (policy.feedback != "none"
                                      or policy.bw_feedback != "none"):
             raise NotImplementedError(
-                "reuse_indices composes the backward payload from the "
-                "forward TopK indices, which no longer index the message "
-                "under feedback compensation — run one or the other on the "
-                "real pipeline")
+                f"reuse_indices=True conflicts with feedback="
+                f"{policy.feedback!r} / bw_feedback={policy.bw_feedback!r} "
+                "on the real pipeline: the backward payload is values-only, "
+                "gathered at the forward TopK indices — but a compensated "
+                "message C(x + e) keeps different coordinates than C(x), "
+                "so those indices no longer address the wire message. "
+                "Valid configurations: (a) reuse_indices=True with "
+                "feedback='none' and bw_feedback='none' (paper Table 5), "
+                "or (b) feedback/bw_feedback modes with "
+                "reuse_indices=False (paper Tables 3-4).")
         for mode, comp, nm in ((policy.feedback, policy.fw, "fw"),
                                (policy.bw_feedback, policy.bw, "bw")):
             if mode == "efmixed" and comp.kind != "topk":
@@ -313,8 +326,9 @@ class PipelineTransport(Transport):
     def fw_hop(self, y, fw_st, meta):
         """Feedback-compensated forward hop inside the pipeline scan.
 
-        ``fw_st``: this device's local {"send","recv"} buffers; ``meta``:
-        the tick's bookkeeping pytree — clipped microbatch indices
+        ``fw_st``: this device's local {"resid","mirror"} buffers (one
+        :class:`~repro.core.feedback.FeedbackState` slice); ``meta``: the
+        tick's bookkeeping pytree — clipped microbatch indices
         (``jc_s``/``jc_r``: send / receive side), virtual chunk indices
         (``ks``/``kr``), AQ-SGD example ids (``ids_s``/``ids_r``) and
         validity masks (``vs``/``vr``) from the schedule's plan.
@@ -324,23 +338,23 @@ class PipelineTransport(Transport):
             out, _, ctx = self.fw(y)
             return out, fw_st, ctx
         v = self.virtual_stages
-        send_sl = _gather(fw_st["send"], meta["ks"], meta["jc_s"],
-                          meta["ids_s"], mode, v)
+        send_sl = gather_rows(fw_st["resid"], meta["ks"], meta["jc_s"],
+                              meta["ids_s"], mode, v)
         payload, _, new_send = self.pack_fw_message(y, send_sl)
         moved = self._hop(payload, self.perm_fw)
-        recv_sl = (_gather(fw_st["recv"], meta["kr"], meta["jc_r"],
-                           meta["ids_r"], mode, v)
+        recv_sl = (gather_rows(fw_st["mirror"], meta["kr"], meta["jc_r"],
+                               meta["ids_r"], mode, v)
                    if needs_recv_mirror(mode) else None)
         out, new_recv = self.unpack_fw_message(moved, y.shape, y.dtype,
                                                recv_sl)
         new_st = {
-            "send": _scatter(fw_st["send"], meta["ks"], meta["jc_s"],
-                             meta["ids_s"], mode, v,
-                             new_send, send_sl, meta["vs"]),
-            "recv": (fw_st["recv"] if new_recv is None else
-                     _scatter(fw_st["recv"], meta["kr"], meta["jc_r"],
-                              meta["ids_r"], mode, v,
-                              new_recv, recv_sl, meta["vr"])),
+            "resid": scatter_rows(fw_st["resid"], meta["ks"], meta["jc_s"],
+                                  meta["ids_s"], mode, v,
+                                  new_send, send_sl, meta["vs"]),
+            "mirror": (fw_st["mirror"] if new_recv is None else
+                       scatter_rows(fw_st["mirror"], meta["kr"],
+                                    meta["jc_r"], meta["ids_r"], mode, v,
+                                    new_recv, recv_sl, meta["vr"])),
         }
         return out, new_st, None
 
@@ -416,8 +430,8 @@ class PipelineTransport(Transport):
         """
         transport = self
         fw_template = fw_template or {
-            "send": jax.ShapeDtypeStruct((0,), jnp.float32),
-            "recv": jax.ShapeDtypeStruct((0,), jnp.float32)}
+            "resid": jax.ShapeDtypeStruct((0,), jnp.float32),
+            "mirror": jax.ShapeDtypeStruct((0,), jnp.float32)}
 
         @jax.custom_vjp
         def send(y, fw_st, bw_send_sl, bw_recv_sl, meta):
@@ -550,17 +564,20 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x, mesh: Mesh,
         raise ValueError(
             f"policy {policy.name!r} carries feedback buffers: pass "
             "fw_state/bw_state from init_feedback_state()")
-    if dp_axis is not None and (policy.needs_fw_buffer
-                                or policy.needs_bw_buffer):
-        raise NotImplementedError(
-            "per-stage boundary feedback buffers are not threaded through "
-            "the data-parallel pipeline yet — combine dp with a "
-            "feedback-free boundary policy (DP-side error feedback lives "
-            "in transport/collectives.py)")
+    state_dp = dp if dp_axis is not None else 1
     if fw_state is None:
-        fw_state = _empty_state(s_stages, x.dtype)
+        fw_state = _empty_state(s_stages, x.dtype, "fw", dp=state_dp)
     if bw_state is None:
-        bw_state = _empty_state(s_stages, x.dtype)
+        bw_state = _empty_state(s_stages, x.dtype, "bw", dp=state_dp)
+    for st, nm in ((fw_state, "fw_state"), (bw_state, "bw_state")):
+        if st.resid.size and st.resid.shape[0] != \
+                (state_dp if dp_axis is not None else s_stages):
+            raise ValueError(
+                f"{nm} was built for a different mesh: expected leading "
+                f"{'(dp, stages)' if dp_axis is not None else '(stages,)'} "
+                f"dims {(state_dp, s_stages) if dp_axis is not None else (s_stages,)}, "
+                f"got shape {st.resid.shape} — rebuild with "
+                f"init_feedback_state(..., dp={state_dp})")
     if ids is None:
         ids = jnp.zeros((b,), jnp.int32)
     rep = (dp,) if dp_axis is not None else ()
@@ -569,8 +586,22 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x, mesh: Mesh,
     x_mb = x.reshape(*rep, mb, mbsz, *x.shape[1:])
     feat_shape = x_mb.shape[len(rep) + 1:]
 
+    # the scan carry / shard_map threading works on plain {resid, mirror}
+    # dicts (the per-direction slices of the FeedbackState; ``agg`` is
+    # dp-scope-only and stays outside the pipeline)
+    fw_c = {"resid": fw_state.resid, "mirror": fw_state.mirror}
+    bw_c = {"resid": bw_state.resid, "mirror": bw_state.mirror}
+    strip = 2 if dp_axis is not None else 1
+    # AQ-SGD + dp: the (num_samples/dp, *feat) id-shard is addressed with
+    # LOCAL rows — each replica row subtracts its shard offset from the
+    # global example ids (core.feedback.shard_ids routing contract)
+    per_example = (policy.needs_fw_buffer
+                   and get_mode(policy.feedback).per_example)
+    ns_shard = (fw_state.resid.shape[strip + (1 if v > 1 else 0)]
+                if per_example else 0)
+
     local_fw = jax.tree.map(
-        lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), fw_state)
+        lambda a: jax.ShapeDtypeStruct(a.shape[strip:], a.dtype), fw_c)
     send = transport.make_send(local_fw)
     bw_mode = policy.bw_feedback
     stage = jax.checkpoint(stage_fn) if sched.remat_ticks else stage_fn
@@ -584,6 +615,12 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x, mesh: Mesh,
             params_local = jax.tree.map(lambda a: a[0], params_local)
             x_local = x_local[0]
             ids_all = ids_all[0]
+            fw_st = jax.tree.map(lambda a: a[0], fw_st)
+            bw_st = jax.tree.map(lambda a: a[0], bw_st)
+            if per_example:
+                replica = jax.lax.axis_index(dp_axis)
+                ids_all = (ids_all
+                           - (replica * ns_shard).astype(ids_all.dtype))
         if v == 1:
             params_local = jax.tree.map(lambda a: a[0], params_local)
         fw_st = jax.tree.map(lambda a: a[0], fw_st)
@@ -607,12 +644,12 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x, mesh: Mesh,
                     "vs": pl.valid, "vr": pn.valid, "last": pl.last}
             # bw buffer slices gather OUTSIDE send: their cotangents
             # scatter-add the per-step updates back into the full buffers
-            bss = (bw_st["send"] if bw_mode == "none"
-                   else _gather(bw_st["send"], pn.k, pn.jc, meta["ids_r"],
-                                bw_mode, v))
-            brs = (bw_st["recv"] if not needs_recv_mirror(bw_mode)
-                   else _gather(bw_st["recv"], pl.k, pl.jc, meta["ids_s"],
-                                bw_mode, v))
+            bss = (bw_st["resid"] if bw_mode == "none"
+                   else gather_rows(bw_st["resid"], pn.k, pn.jc,
+                                    meta["ids_r"], bw_mode, v))
+            brs = (bw_st["mirror"] if not needs_recv_mirror(bw_mode)
+                   else gather_rows(bw_st["mirror"], pl.k, pl.jc,
+                                    meta["ids_s"], bw_mode, v))
             buf, fw_st = send(y, fw_st, bss, brs, meta)
             # the LAST LOGICAL STAGE's valid y is a pipeline output
             outs = jnp.where(pl.last & pl.valid, outs.at[pl.jc].set(y), outs)
@@ -626,23 +663,27 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x, mesh: Mesh,
         # transposition-unambiguous (the cotangent lands on device S-1
         # alone, no psum involved).
         outs = outs[None] if dp_axis is None else outs[None, None]
-        return outs, jax.tree.map(lambda a: a[None], fw_st)
+        expand = ((lambda a: a[None]) if dp_axis is None
+                  else (lambda a: a[None, None]))
+        return outs, jax.tree.map(expand, fw_st)
 
     if dp_axis is None:
         pspec = jax.tree.map(lambda _: P(axis), params_dev)
-        x_spec, out_spec = P(), P(axis)
+        x_spec, out_spec, st_axes = P(), P(axis), P(axis)
     else:
         pspec = jax.tree.map(lambda _: P(dp_axis, axis), params_dev)
         x_spec, out_spec = P(dp_axis), P(axis, dp_axis)
-    st_spec = lambda st: jax.tree.map(lambda _: P(axis), st)
+        st_axes = P(dp_axis, axis)
+    st_spec = lambda st: jax.tree.map(lambda _: st_axes, st)
     out, new_fw = _shard_map(
         body, mesh,
-        (pspec, x_spec, st_spec(fw_state), st_spec(bw_state), x_spec),
-        (out_spec, st_spec(fw_state)),
-    )(params_dev, x_mb, fw_state, bw_state, ids_mb)
+        (pspec, x_spec, st_spec(fw_c), st_spec(bw_c), x_spec),
+        (out_spec, st_spec(fw_c)),
+    )(params_dev, x_mb, fw_c, bw_c, ids_mb)
     out = out[-1].reshape(b, *x.shape[1:])
     if with_state:
-        return out, new_fw
+        return out, fw_state.replace(resid=new_fw["resid"],
+                                     mirror=new_fw["mirror"])
     return out
 
 

@@ -18,39 +18,42 @@ from typing import Any, Tuple
 import jax.numpy as jnp
 
 from repro.core.compressors import apply_mask, topk_mask
-from repro.core.feedback import feedback_message
+from repro.core.feedback import FeedbackState, feedback_message
 from repro.core.policy import BoundaryPolicy
 from repro.transport.base import Transport
 
 
 class SimulatedTransport(Transport):
-    """Feedback-wrapped compressors at one cut, no real communication."""
+    """Feedback-wrapped compressors at one cut, no real communication.
+
+    State is a :class:`repro.core.feedback.FeedbackState` per direction;
+    this single-program boundary only uses its ``resid`` slot (the real
+    packed-wire pipeline additionally maintains ``mirror`` for the
+    delta-coded modes — here both ends of the wire are one array).
+    """
 
     def __init__(self, policy: BoundaryPolicy):
         self.policy = policy
 
-    def fw(self, x, fw_buf=None, ids=None) -> Tuple[jnp.ndarray, Any, Any]:
-        """Forward message + new fw buffer + ctx (TopK mask for reuse).
-
-        The single buffer here stands for BOTH ends of the wire: the real
-        transport keeps a receiver-side mirror for the delta-coded modes
-        (ef21/aqsgd — see core.feedback.needs_recv_mirror), which this
-        single-program boundary collapses into one array.
-        """
+    def fw(self, x, fw_state: FeedbackState, ids=None
+           ) -> Tuple[jnp.ndarray, FeedbackState, Any]:
+        """Forward message + new fw state + ctx (TopK mask for reuse)."""
         p = self.policy
         if p.feedback == "aqsgd" and ids is None:
             raise ValueError("aqsgd feedback needs per-example ids")
-        m, new_fw = feedback_message(p.feedback, p.fw, x, fw_buf, ids)
+        m, new_resid = feedback_message(p.feedback, p.fw, x,
+                                        fw_state.resid, ids)
         mask = None
         if p.reuse_indices:
             # Mask of what the forward direction actually kept.  With plain
             # TopK this is the TopK mask of x itself (paper Table 5).
             src = x if p.feedback == "none" else m
             mask = topk_mask(src, p.fw.k_frac)
-        return m, new_fw, mask
+        return m, fw_state.replace(resid=new_resid), mask
 
-    def bw(self, g, bw_buf=None, ctx=None) -> Tuple[jnp.ndarray, Any]:
-        """Backward gradient message + new bw buffer.
+    def bw(self, g, bw_state: FeedbackState, ctx=None
+           ) -> Tuple[jnp.ndarray, FeedbackState]:
+        """Backward gradient message + new bw state.
 
         ``ctx`` is the forward TopK mask when ``reuse_indices`` is set
         (paper Table 5: the gradient reuses the forward indices, so no
@@ -58,8 +61,10 @@ class SimulatedTransport(Transport):
         """
         p = self.policy
         if p.reuse_indices:
-            return apply_mask(g, ctx), jnp.zeros_like(bw_buf)
-        return feedback_message(p.bw_feedback, p.bw, g, bw_buf)
+            return apply_mask(g, ctx), bw_state.map(jnp.zeros_like)
+        m, new_resid = feedback_message(p.bw_feedback, p.bw, g,
+                                        bw_state.resid)
+        return m, bw_state.replace(resid=new_resid)
 
 
 @lru_cache(maxsize=None)

@@ -149,11 +149,13 @@ class TestBoundaryWithFeedback:
         (_, (y, new_fw)), (g_x, new_bw) = jax.value_and_grad(
             f, argnums=(0, 1), has_aux=True)(x, state["bw"])
         # EF invariant at the boundary level
-        np.testing.assert_allclose(np.asarray(y + new_fw), np.asarray(x), rtol=1e-5)
-        assert new_bw.shape == x.shape     # bw EF buffer updated via cotangent
+        np.testing.assert_allclose(np.asarray(y + new_fw.resid),
+                                   np.asarray(x), rtol=1e-5)
+        assert new_bw.resid.shape == x.shape  # bw EF buffer via cotangent
         # dense cotangent w compressed by top-20% leaves a nonzero error
-        assert float(jnp.abs(new_bw).sum()) > 0
-        np.testing.assert_allclose(np.asarray(g_x + new_bw), np.asarray(w), rtol=1e-5)
+        assert float(jnp.abs(new_bw.resid).sum()) > 0
+        np.testing.assert_allclose(np.asarray(g_x + new_bw.resid),
+                                   np.asarray(w), rtol=1e-5)
 
     def test_bw_buffer_update_via_cotangent(self):
         pol = ef_policy(0.2, mode="ef21")
@@ -167,7 +169,8 @@ class TestBoundaryWithFeedback:
 
         g_x, new_bw = jax.grad(f, argnums=(0, 1))(x, state["bw"])
         # EF21: new buffer == the message that was passed upstream == g_x
-        np.testing.assert_allclose(np.asarray(new_bw), np.asarray(g_x), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(new_bw.resid),
+                                   np.asarray(g_x), rtol=1e-5)
 
     def test_aqsgd_boundary(self):
         pol = aqsgd_policy(0.5)
@@ -175,8 +178,9 @@ class TestBoundaryWithFeedback:
         state = init_boundary_state(pol, x.shape[1:], batch=2, num_samples=8)
         ids = jnp.array([1, 5], jnp.int32)
         y, g_x, new_fw, _ = _run_boundary(pol, x, state=state, ids=ids)
-        assert new_fw.shape == (8, 64)
-        np.testing.assert_allclose(np.asarray(new_fw[ids]), np.asarray(y))
+        assert new_fw.resid.shape == (8, 64)
+        np.testing.assert_allclose(np.asarray(new_fw.resid[ids]),
+                                   np.asarray(y))
 
     def test_jit_and_grad_compose(self):
         pol = ef_policy(0.3, mode="efmixed")

@@ -130,8 +130,9 @@ class TestDPStateRoundtrip:
         params = {"w": jnp.ones((3, 4))}
         opt = {"step": jnp.zeros((), jnp.int32)}
         dp_state = init_dp_state(params, 2, "ef21")
-        dp_state["resid"]["w"] = dp_state["resid"]["w"].at[0, 0, 0].set(3.5)
-        dp_state["agg"]["w"] = dp_state["agg"]["w"].at[1, 1].set(-2.0)
+        dp_state = dp_state.replace(
+            resid={"w": dp_state.resid["w"].at[0, 0, 0].set(3.5)},
+            agg={"w": dp_state.agg["w"].at[1, 1].set(-2.0)})
         return params, opt, dp_state
 
     def test_dp_residuals_roundtrip_exactly(self, tmp_path):
@@ -207,3 +208,101 @@ class TestTrainDriverResume:
                        "--ckpt-every", "2", "--no-remat"])
         assert rc == 0
         assert any(issubclass(x.category, DeprecationWarning) for x in w)
+
+class TestLegacyFormatMigration:
+    """Files written before the unified ``feedback`` schema (PR-4 era
+    ``bstates`` raw arrays / PR-5 era pipeline ``send``/``recv`` dicts +
+    top-level ``dp``) must restore BITWISE through the key migration."""
+
+    def _params_opt(self):
+        params = {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                  "h": jnp.ones((2, 2), jnp.bfloat16) * 1.5}
+        opt = {"step": jnp.asarray(4, jnp.int32)}
+        return params, opt
+
+    def test_simulated_era_bstates_restore_bitwise(self, tmp_path):
+        from repro.core.feedback import init_feedback
+        params, opt = self._params_opt()
+        fw_buf = jax.random.normal(jax.random.PRNGKey(1), (8, 16))
+        # what PR-4's save_train_state flattened: raw per-direction arrays
+        legacy = {"params": params, "opt": opt,
+                  "bstates": [{"fw": fw_buf, "bw": jnp.zeros((0,))}]}
+        path = str(tmp_path / "old.npz")
+        ckpt_io.save(path, legacy, step=9,
+                     extra={"format": "train-state"})
+        like = [{"fw": init_feedback("ef", (16,), direction="fw", batch=8),
+                 "bw": init_feedback("none", (), direction="bw")}]
+        p, o, b, step = ckpt_io.restore_train_state(path, params, opt, like)
+        assert step == 9
+        np.testing.assert_array_equal(np.asarray(b[0]["fw"].resid),
+                                      np.asarray(fw_buf))
+        assert b[0]["fw"].mode == "ef" and b[0]["fw"].direction == "fw"
+        assert b[0]["fw"].mirror.size == 0 and b[0]["fw"].agg.size == 0
+        for a, c in zip(jax.tree.leaves(params), jax.tree.leaves(p)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+    def test_pipeline_era_send_recv_and_dp_restore_bitwise(self, tmp_path):
+        from repro.core.feedback import FeedbackState
+        from repro.transport.collectives import init_dp_state
+        params, opt = self._params_opt()
+        k = jax.random.PRNGKey(2)
+        send = jax.random.normal(k, (2, 2, 4, 16))
+        recv = jax.random.normal(jax.random.PRNGKey(3), (2, 2, 4, 16))
+        legacy = {
+            "params": params, "opt": opt,
+            "bstates": {"fw": {"send": send, "recv": recv},
+                        "bw": {"send": jnp.zeros((2, 0)),
+                               "recv": jnp.zeros((2, 0))}},
+            "dp": {"resid": {"w": jnp.full((2, 3, 4), 0.25)},
+                   "agg": jnp.zeros((0,))},
+        }
+        path = str(tmp_path / "old_pipe.npz")
+        ckpt_io.save(path, legacy, step=5, extra={"format": "train-state"})
+        z = jnp.zeros((0,))
+        like = {"fw": FeedbackState(resid=jnp.zeros_like(send),
+                                    mirror=jnp.zeros_like(recv), agg=z,
+                                    mode="ef21", direction="fw"),
+                "bw": FeedbackState(resid=jnp.zeros((2, 0)),
+                                    mirror=jnp.zeros((2, 0)), agg=z,
+                                    mode="none", direction="bw")}
+        dp_like = init_dp_state({"w": jnp.zeros((3, 4))}, 2, "ef")
+        p, o, b, dp, step = ckpt_io.restore_train_state(
+            path, params, opt, like, dp_like=dp_like)
+        assert step == 5
+        np.testing.assert_array_equal(np.asarray(b["fw"].resid),
+                                      np.asarray(send))
+        np.testing.assert_array_equal(np.asarray(b["fw"].mirror),
+                                      np.asarray(recv))
+        np.testing.assert_array_equal(np.asarray(dp.resid["w"]),
+                                      np.full((2, 3, 4), 0.25))
+        assert dp.scope == "dp" and dp.mode == "ef"
+        assert dp.mirror.size == 0
+
+    def test_new_format_has_unified_feedback_keys(self, tmp_path):
+        from repro.core.feedback import init_feedback
+        params, opt = self._params_opt()
+        bst = [{"fw": init_feedback("ef", (4,), direction="fw", batch=2),
+                "bw": init_feedback("none", (), direction="bw")}]
+        path = str(tmp_path / "new.npz")
+        ckpt_io.save_train_state(path, params, opt, bst, step=1)
+        flat, _ = ckpt_io._load_flat(path)
+        assert "feedback/boundary/0/fw/resid" in flat
+        assert not any(k.startswith("bstates") for k in flat)
+
+    def test_mismatch_lists_all_offending_keys(self, tmp_path):
+        """CheckpointMismatch must name EVERY missing/extra key, not just
+        the first — resuming with the wrong config should be one-shot
+        debuggable."""
+        from repro.core.feedback import init_feedback
+        params, opt = self._params_opt()
+        path = str(tmp_path / "plain.npz")
+        ckpt_io.save_train_state(path, params, opt, [], step=1)
+        like = [{"fw": init_feedback("ef", (4,), direction="fw", batch=2),
+                 "bw": init_feedback("ef", (4,), direction="bw", batch=2)}]
+        with pytest.raises(ckpt_io.CheckpointMismatch) as ei:
+            ckpt_io.restore_train_state(path, {"bad": params["w"]}, opt,
+                                        like)
+        msg = str(ei.value)
+        assert re.search(r"missing keys \(\d+\): .*bad", msg)
+        assert "feedback/boundary/0/fw/resid" in msg
+        assert re.search(r"extra keys in file \(\d+\): .*params/h", msg)

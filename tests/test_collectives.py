@@ -146,12 +146,12 @@ class TestDPStateAndValidation:
     def test_state_structure(self):
         tree = _ragged_tree()
         st = init_dp_state(tree, 2, "none")
-        assert st["resid"].shape == (2, 0) and st["agg"].shape == (0,)
+        assert st.resid.shape == (2, 0) and st.agg.shape == (0,)
         st = init_dp_state(tree, 3, "ef")
-        assert st["resid"]["w"].shape == (3, 2, 16, 32)
-        assert st["agg"].shape == (0,)
+        assert st.resid["w"].shape == (3, 2, 16, 32)
+        assert st.agg.shape == (0,)
         st = init_dp_state(tree, 2, "ef21")
-        assert st["agg"]["gamma"].shape == (33,)
+        assert st.agg["gamma"].shape == (33,)
 
     def test_unknown_feedback_rejected(self):
         with pytest.raises(ValueError, match="unknown dp feedback"):
@@ -180,7 +180,7 @@ class TestAllReduceSingleReplica:
         for a, b in zip(jax.tree.leaves(reduced), jax.tree.leaves(tree)):
             assert a.dtype == b.dtype
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-        assert st2["resid"].shape == (1, 0)
+        assert st2.resid.shape == (1, 0)
 
     def test_q8_is_codec_roundtrip(self):
         mesh = make_data_mesh(1)
@@ -209,7 +209,7 @@ class TestAllReduceSingleReplica:
         g_dp = jax.tree.map(lambda a: a[None], tree)
         st = init_dp_state(tree, 1, "ef")
         r1, st = fn(g_dp, st)
-        e = np.asarray(st["resid"]["w"][0])
+        e = np.asarray(st.resid["w"][0])
         np.testing.assert_allclose(
             e, np.asarray(tree["w"]) - np.asarray(r1["w"]), atol=1e-5)
         r2, st = fn(g_dp, st)
@@ -219,7 +219,7 @@ class TestAllReduceSingleReplica:
         err2 = np.abs(want2 - got2).sum()
         assert err2 < 2 * err1          # residual stays bounded, no blow-up
         # and the classic EF telescoping: g1 + g2 - (m1 + m2) == e2
-        np.testing.assert_allclose(np.asarray(st["resid"]["w"][0]),
+        np.testing.assert_allclose(np.asarray(st.resid["w"][0]),
                                    want2 - got2, atol=1e-4)
 
     def test_ef21_aggregate_tracks_reduced(self):
@@ -232,9 +232,9 @@ class TestAllReduceSingleReplica:
         r1, st = fn(g_dp, st)
         for k in tree:
             # G' == reduced, and w_r' == G' with one replica
-            np.testing.assert_allclose(np.asarray(st["agg"][k]),
+            np.testing.assert_allclose(np.asarray(st.agg[k]),
                                        np.asarray(r1[k]), atol=1e-5)
-            np.testing.assert_allclose(np.asarray(st["resid"][k][0]),
+            np.testing.assert_allclose(np.asarray(st.resid[k][0]),
                                        np.asarray(r1[k]), atol=1e-5)
         # repeated identical grads converge: C(g - w) has shrinking error
         r2, st = fn(g_dp, st)

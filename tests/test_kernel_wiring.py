@@ -40,14 +40,17 @@ def test_topk_compressor_uses_kernel(pallas_backend):
 def test_boundary_with_pallas_quant(pallas_backend):
     """Full custom_vjp boundary with the kernel-backed compressor."""
     from repro.core.boundary import boundary_apply
+    from repro.core.feedback import FeedbackState
     from repro.core.policy import quant_policy
     bp = quant_policy(8, 8)
     x = jax.random.normal(jax.random.PRNGKey(2), (2, 512), jnp.float32)
     zero = jnp.zeros((0,), x.dtype)
+    fw = FeedbackState(resid=zero, mirror=zero, agg=zero, direction="fw")
+    bw = FeedbackState(resid=zero, mirror=zero, agg=zero, direction="bw")
     ids = jnp.zeros((2,), jnp.int32)
 
     def f(x):
-        y, _ = boundary_apply(bp, x, zero, zero, ids)
+        y, _ = boundary_apply(bp, x, fw, bw, ids)
         return (y ** 2).sum()
 
     g = jax.grad(f)(x)

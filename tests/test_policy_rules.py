@@ -1,0 +1,172 @@
+"""Tests for the adaptive compression-policy rule engine (core/policy.py)
+and the boundary-policy mode validation it builds on."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.policy import (BoundaryPolicy, BW_FEEDBACK_MODES,
+                               CompressionPolicy, FEEDBACK_MODES, PolicyRule,
+                               PolicyRules, parse_policy_rules, parse_rule,
+                               resolve_policy, topk_policy)
+from repro.core.compressors import topk
+
+
+class TestBoundaryPolicyValidation:
+    """Satellite: the flattened ``__post_init__`` mode checks — every
+    rejected string raises, with the aqsgd-is-activations-only note."""
+
+    @pytest.mark.parametrize("mode", ["aqsgd", "momentum", "EF", "ef-21", ""])
+    def test_every_bad_bw_feedback_rejected(self, mode):
+        assert mode not in BW_FEEDBACK_MODES
+        with pytest.raises(ValueError, match="bad bw_feedback mode"):
+            BoundaryPolicy(fw=topk(0.1), bw=topk(0.1), bw_feedback=mode)
+
+    def test_aqsgd_bw_rejection_explains_why(self):
+        with pytest.raises(ValueError, match="activations-only"):
+            BoundaryPolicy(fw=topk(0.1), bw=topk(0.1), bw_feedback="aqsgd")
+
+    @pytest.mark.parametrize("mode", ["q8", "EF21", "ef_mixed", ""])
+    def test_every_bad_fw_feedback_rejected(self, mode):
+        assert mode not in FEEDBACK_MODES
+        with pytest.raises(ValueError, match="bad feedback mode"):
+            BoundaryPolicy(fw=topk(0.1), bw=topk(0.1), feedback=mode)
+
+    @pytest.mark.parametrize("mode", BW_FEEDBACK_MODES)
+    def test_every_valid_bw_mode_accepted(self, mode):
+        BoundaryPolicy(fw=topk(0.1), bw=topk(0.1), bw_feedback=mode)
+
+
+class TestReuseIndicesFeedbackRejection:
+    """Satellite: the pipeline's reuse_indices x feedback error names the
+    conflicting fields and both valid configurations."""
+
+    def test_message_names_fields_and_valid_configs(self):
+        from repro.transport.pipeline import PipelineTransport
+        bp = BoundaryPolicy(fw=topk(0.1), bw=topk(0.1), feedback="ef",
+                            reuse_indices=True)
+        with pytest.raises(NotImplementedError) as ei:
+            PipelineTransport(bp, "stage", 4)
+        msg = str(ei.value)
+        assert "feedback='ef'" in msg and "bw_feedback='none'" in msg
+        assert "(a) reuse_indices=True with feedback='none'" in msg
+        assert "(b) feedback/bw_feedback modes with reuse_indices=False" \
+            in msg
+
+
+class TestRuleParsing:
+    def test_plain_codec(self):
+        r = parse_rule("q8")
+        assert r == PolicyRule(codec="q8")
+        assert r.matches(1, 0, "fw") and r.matches(10**9, 9, "bw")
+
+    def test_full_spec(self):
+        r = parse_rule("topk:0.25@size>=4096,depth<2,dir=fw")
+        assert r.codec == "topk" and r.k_frac == 0.25
+        assert r.matches(4096, 1, "fw")
+        assert not r.matches(4095, 1, "fw")      # size below threshold
+        assert not r.matches(4096, 2, "fw")      # too deep
+        assert not r.matches(4096, 1, "bw")      # wrong direction
+        assert r.name == "topk:0.25@dir=fw,size>=4096,depth<2"
+
+    @pytest.mark.parametrize("spec,err", [
+        ("zstd", "unknown rule codec"),
+        ("topk:0", "k_frac"),
+        ("topk:1.5", "k_frac"),
+        ("q8@size=4096", "bad rule condition"),
+        ("q8@banana", "bad rule condition"),
+        ("", "empty"),
+    ])
+    def test_bad_specs_rejected(self, spec, err):
+        with pytest.raises(ValueError, match=err):
+            parse_policy_rules(spec)
+
+
+class TestResolve:
+    def test_degenerate_one_rule_equals_static(self):
+        """The acceptance hinge: a one-rule set resolves to a policy that
+        is ``==`` the hand-written static one, so it shares jit caches and
+        reproduces static runs bit-for-bit."""
+        rules = parse_policy_rules("topk:0.1")
+        assert rules.resolve(4096) == CompressionPolicy(
+            num_stages=4, boundary=topk_policy(0.1))
+        # resolve_policy passes static policies through untouched
+        static = CompressionPolicy(num_stages=4, boundary=topk_policy(0.1))
+        assert resolve_policy(static, 4096) is static
+
+    def test_degenerate_rule_trains_bitwise_like_static(self):
+        from repro.data.synthetic import ImageClassData
+        from repro.optim.optimizers import OptimizerConfig, init_opt_state
+        from repro.train.steps import make_cnn_train_step
+        from repro.models import cnn
+        data = ImageClassData()
+        opt = OptimizerConfig(kind="sgd", lr=0.05, momentum=0.9,
+                              schedule="constant")
+        static = CompressionPolicy(num_stages=4, boundary=topk_policy(0.1))
+        sizes = [int(np.prod(s)) for s in cnn.boundary_shapes(8, data.image)]
+        rules = PolicyRules((PolicyRule(codec="topk", k_frac=0.1),),
+                            num_stages=4)
+
+        def run(policy, boundary_feat=None):
+            params = cnn.init_params(jax.random.PRNGKey(0), width=8)
+            step = make_cnn_train_step(policy, opt,
+                                       boundary_feat=boundary_feat)
+            o = init_opt_state(opt, params)
+            losses = []
+            for i, (x, y, ids) in enumerate(data.epoch(20, 0)):
+                if i >= 3:
+                    break
+                params, o, _, m = step(params, o, [], jnp.asarray(x),
+                                       jnp.asarray(y), jnp.asarray(ids))
+                losses.append(float(m["loss"]))
+            return losses, params
+
+        l_static, p_static = run(static)
+        l_rules, p_rules = run(rules, boundary_feat=sizes)
+        assert l_static == l_rules                       # float-exact
+        for a, b in zip(jax.tree.leaves(p_static), jax.tree.leaves(p_rules)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_size_adaptive_resolves_distinct_codecs(self):
+        rules = parse_policy_rules("q4@size>=65536;q8@size>=16384;none")
+        pol = rules.resolve([128 * 1024, 32 * 1024, 4 * 1024])
+        kinds = [pol.at(i).fw.name for i in range(3)]
+        assert kinds == ["q4", "q8", "none"]
+        assert len(set(kinds)) == 3
+
+    def test_direction_rules_split_fw_bw(self):
+        rules = parse_policy_rules("q4@dir=fw;q8@dir=bw")
+        bp = rules.resolve(4096).at(0)
+        assert bp.fw.name == "q4" and bp.bw.name == "q8"
+
+    def test_unmatched_boundary_suggests_catch_all(self):
+        rules = parse_policy_rules("q8@size>=65536")
+        with pytest.raises(ValueError, match="catch-all"):
+            rules.resolve(4096)
+
+    def test_wrong_size_count_rejected(self):
+        rules = parse_policy_rules("q8")
+        with pytest.raises(ValueError, match="boundary sizes"):
+            rules.resolve([4096, 4096])    # 3 boundaries, 2 sizes
+
+    def test_train_step_requires_boundary_feat_for_rules(self):
+        from repro.optim.optimizers import OptimizerConfig
+        from repro.train.steps import make_cnn_train_step
+        opt = OptimizerConfig(kind="sgd", lr=0.05, schedule="constant")
+        with pytest.raises(ValueError, match="boundary_feat"):
+            make_cnn_train_step(parse_policy_rules("q8"), opt)
+
+
+class TestShardIds:
+    """AQ-SGD id-sharding: the routing contract for dp example buffers."""
+
+    def test_localizes_per_replica(self):
+        from repro.core.feedback import shard_ids
+        ids = jnp.array([8, 11, 9], jnp.int32)
+        local = shard_ids(ids, replica=1, num_samples=16, dp=2)
+        np.testing.assert_array_equal(np.asarray(local), [0, 3, 1])
+
+    def test_indivisible_num_samples_rejected(self):
+        from repro.core.feedback import shard_ids
+        with pytest.raises(ValueError, match="num_samples"):
+            shard_ids(jnp.zeros((2,), jnp.int32), 0, num_samples=10, dp=4)

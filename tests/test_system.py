@@ -100,6 +100,25 @@ class TestData:
                     seen[key] = t.copy()
         assert len(seen) == 64
 
+    def test_synthetic_stream_deals_ids_per_replica_under_dp(self):
+        """AQ-SGD dp routing contract: contiguous batch shard r must carry
+        ids from its own block [r*N/dp, (r+1)*N/dp) every step."""
+        from repro.configs.registry import get
+        from repro.launch.train import synthetic_stream
+        cfg = get("gpt2-small", smoke=True)
+        dp, batch, ns = 2, 8, 16
+        stream = synthetic_stream(cfg, batch, 32, num_samples=ns, dp=dp)
+        seen = [set() for _ in range(dp)]
+        for _ in range(6):
+            _, ids = next(stream)
+            for r in range(dp):
+                shard = ids[r * (batch // dp):(r + 1) * (batch // dp)]
+                lo, hi = r * ns // dp, (r + 1) * ns // dp
+                assert ((shard >= lo) & (shard < hi)).all(), (r, shard)
+                seen[r].update(int(i) for i in shard)
+        # the cycling still revisits every row of each replica's block
+        assert all(len(s) == ns // dp for s in seen)
+
     def test_lm_task_learnable_structure(self):
         """Order-2 Markov: the same (t-2,t-1) context has <=4 successors."""
         d = LMData(num_train=32)

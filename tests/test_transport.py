@@ -181,6 +181,7 @@ TRAIN_SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
     import jax, jax.numpy as jnp
     from repro.core.boundary import boundary_apply
+    from repro.core.feedback import FeedbackState
     from repro.core.policy import CompressionPolicy, quant_policy, topk_policy
     from repro.data.synthetic import ImageClassData
     from repro.models import cnn
@@ -216,8 +217,11 @@ TRAIN_SCRIPT = textwrap.dedent("""
             x = cnn.pipeline_stage_apply(
                 jax.tree.map(lambda a: a[s], params["stages"]), x)
             if s < n - 1:
+                z = jnp.zeros((0,))
                 x, _ = boundary_apply(
-                    pol.at(s), x, jnp.zeros((0,)), jnp.zeros((0,)),
+                    pol.at(s), x,
+                    FeedbackState(resid=z, mirror=z, agg=z, direction="fw"),
+                    FeedbackState(resid=z, mirror=z, agg=z, direction="bw"),
                     jnp.zeros((x.shape[0],), jnp.int32))
         return xent_loss(cnn.pipeline_head(params, x), labels)
 
@@ -256,9 +260,15 @@ FEEDBACK_COMMON = textwrap.dedent("""
     import numpy as np
     import jax, jax.numpy as jnp
     from repro.core.boundary import boundary_apply
+    from repro.core.feedback import FeedbackState
     from repro.core.policy import BoundaryPolicy, aqsgd_policy, ef_policy
     from repro.core.compressors import quant
     from repro.transport.pipeline import pipeline_apply, init_feedback_state
+
+    def fbs(arr, mode, direction):
+        z = jnp.zeros((0,))
+        return FeedbackState(resid=arr, mirror=z, agg=z, mode=mode,
+                             direction=direction)
 
     S, B, D, MB = 2, 4, 16, 2
     MBSZ = B // MB
@@ -326,7 +336,10 @@ FEEDBACK_COMMON = textwrap.dedent("""
                     bb = (bw_buf[sl] if bp.bw_feedback != "none"
                           else jnp.zeros((0,)))
                     h = stage_fn(jax.tree.map(lambda a: a[0], params), x[sl])
-                    h, nf = boundary_apply(bp, h, fb, bb, ids[sl])
+                    h, nf = boundary_apply(bp, h, fbs(fb, bp.feedback, "fw"),
+                                           fbs(bb, bp.bw_feedback, "bw"),
+                                           ids[sl])
+                    nf = nf.resid
                     if bp.feedback == "aqsgd":
                         fwb = nf
                     h = stage_fn(jax.tree.map(lambda a: a[1], params), h)
@@ -374,12 +387,12 @@ FEEDBACK_EQUIV_SCRIPT = FEEDBACK_COMMON + textwrap.dedent("""
         assert dp < 1e-4, (tag, dp)
         # pipeline cut-0 buffer == simulated buffer (stage 0 owns cut 0)
         if bp.feedback == "aqsgd":
-            d = float(jnp.max(jnp.abs(pst["fw"]["send"][0] - sfw)))
-            dm = float(jnp.max(jnp.abs(pst["fw"]["recv"][1] - sfw)))
+            d = float(jnp.max(jnp.abs(pst["fw"].resid[0] - sfw)))
+            dm = float(jnp.max(jnp.abs(pst["fw"].mirror[1] - sfw)))
             assert d < 1e-4 and dm < 1e-4, (tag, d, dm)
         else:
             d = float(jnp.max(jnp.abs(
-                pst["fw"]["send"][0].reshape(B, D) - sfw)))
+                pst["fw"].resid[0].reshape(B, D) - sfw)))
             assert d < 1e-4, (tag, d)
         print(tag, "tracks simulated:", pl[-1], slr[-1])
 
@@ -396,18 +409,19 @@ FEEDBACK_EQUIV_SCRIPT = FEEDBACK_COMMON + textwrap.dedent("""
     (_, nf), _ = jax.value_and_grad(loss_fn, has_aux=True)(
         params0, st["bw"], st["fw"], x)
     touched = np.nonzero(np.asarray(
-        jnp.any(nf["send"][0].reshape(16, -1) != 0, axis=-1)))[0]
+        jnp.any(nf.resid[0].reshape(16, -1) != 0, axis=-1)))[0]
     assert set(touched) <= set(np.asarray(seen).tolist()), touched
     assert len(touched) == B, touched
 
     # (c) feedback='none': size-0 buffers ride the scan carry untouched
     none_bp = BoundaryPolicy(fw=q8, bw=q8)
     st0 = init_feedback_state(none_bp, (D,), num_stages=S, batch=B)
-    assert all(a.shape == (S, 0) for a in jax.tree.leaves(st0)), st0
+    assert all(st0[d].resid.shape == (S, 0)
+               and st0[d].mirror.shape == (S, 0) for d in ("fw", "bw")), st0
     y, nf0 = pipeline_apply(stage_fn, params0, x, mesh, "stage",
                             policy=none_bp, fw_state=st0["fw"],
                             bw_state=st0["bw"])
-    assert all(a.shape == (S, 0) for a in jax.tree.leaves(nf0)), nf0
+    assert nf0.resid.shape == (S, 0) and nf0.mirror.shape == (S, 0), nf0
     print("FEEDBACK_EQUIV_OK")
 """)
 
@@ -430,6 +444,176 @@ FEEDBACK_TOPK_SCRIPT = FEEDBACK_COMMON + textwrap.dedent("""
     pl, _, _ = pipe_train(aqsgd_policy(0.3), 12, steps=10)
     assert pl[-1] < pl[0], pl
     print("FEEDBACK_TOPK_OK")
+""")
+
+
+FEEDBACK_DP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro.core.policy import BoundaryPolicy
+    from repro.core.compressors import quant
+    from repro.launch.mesh import make_dp_pipeline_mesh
+    from repro.transport.pipeline import pipeline_apply, init_feedback_state
+    from repro.transport.collectives import (init_dp_state,
+                                             make_grad_all_reduce)
+
+    DP, S, B, D, MB = 2, 2, 8, 16, 2
+    SH = B // DP                          # per-replica shard
+    mesh = make_dp_pipeline_mesh(DP, S)
+    mesh1 = jax.make_mesh((S,), ("stage",))
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    params0 = {"w1": jax.random.normal(k1, (S, D, 2 * D)) * 0.1,
+               "w2": jax.random.normal(k2, (S, 2 * D, D)) * 0.1}
+    stage_fn = lambda p, h: h + jnp.tanh(h @ p["w1"]) @ p["w2"]
+    LR = 0.05
+    q8 = quant(8)
+
+    def dp_train(bp, steps, num_samples=0, ids_fn=None):
+        '''2x2 mesh: boundary feedback states carry a leading (dp,) dim;
+        gradients reduce EXACTLY (codec none), so any trajectory drift vs
+        the per-shard solo reference is the boundary feedback itself.'''
+        st = init_feedback_state(bp, (D,), num_stages=S, batch=B,
+                                 microbatches=MB, num_samples=num_samples,
+                                 dp=DP)
+        reduce_fn = make_grad_all_reduce(mesh, "data", "none")
+        dpst = init_dp_state(params0, DP, "none")
+
+        @jax.jit
+        def train_step(params, fw_state, bw_state, dpst, x, ids):
+            pdp = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (DP, *a.shape)), params)
+            def loss_fn(pdp, bw_state):
+                y, new_fw = pipeline_apply(
+                    stage_fn, pdp, x, mesh, "stage", policy=bp,
+                    microbatches=MB, dp_axis="data",
+                    fw_state=fw_state, bw_state=bw_state, ids=ids)
+                return jnp.sum(y.astype(jnp.float32) ** 2) / B, new_fw
+            (l, new_fw), (g_dp, new_bw) = jax.value_and_grad(
+                loss_fn, argnums=(0, 1), has_aux=True)(pdp, bw_state)
+            g, dpst = reduce_fn(g_dp, dpst)
+            params = jax.tree.map(lambda p, gg: p - LR * gg, params, g)
+            return params, new_fw, new_bw, dpst, l
+
+        rng = np.random.RandomState(0)
+        params, losses = params0, []
+        for t in range(steps):
+            x = jnp.asarray(rng.randn(B, D), jnp.float32)
+            ids = (ids_fn(rng) if ids_fn is not None
+                   else jnp.zeros((B,), jnp.int32))
+            params, fw, bw, dpst, l = train_step(
+                params, st["fw"], st["bw"], dpst, x, ids)
+            st = {"fw": fw, "bw": bw}
+            losses.append(float(l))
+        return losses, st, params
+
+    def solo_train(bp, steps, num_samples=0, ids_fn=None):
+        '''Reference: each replica's shard through the SAME single-replica
+        pipeline program with its own feedback state; shard grads summed
+        serially (what an exact DP reduce computes).'''
+        ns_sh = num_samples // DP if num_samples else 0
+        sts = [init_feedback_state(bp, (D,), num_stages=S, batch=SH,
+                                   microbatches=MB, num_samples=ns_sh)
+               for _ in range(DP)]
+
+        @jax.jit
+        def shard_grad(params, fw_state, bw_state, xs, ids):
+            def loss_fn(params, bw_state):
+                y, new_fw = pipeline_apply(
+                    stage_fn, params, xs, mesh1, "stage", policy=bp,
+                    microbatches=MB, fw_state=fw_state,
+                    bw_state=bw_state, ids=ids)
+                return jnp.sum(y.astype(jnp.float32) ** 2) / B, new_fw
+            (l, new_fw), (g, new_bw) = jax.value_and_grad(
+                loss_fn, argnums=(0, 1), has_aux=True)(params, bw_state)
+            return l, g, new_fw, new_bw
+
+        rng = np.random.RandomState(0)
+        params, losses = params0, []
+        for t in range(steps):
+            x = jnp.asarray(rng.randn(B, D), jnp.float32)
+            ids = (ids_fn(rng) if ids_fn is not None
+                   else jnp.zeros((B,), jnp.int32))
+            ltot, g = 0.0, None
+            for r in range(DP):
+                sl = slice(r * SH, (r + 1) * SH)
+                lids = ids[sl] - r * ns_sh     # replica-local buffer rows
+                l, gr, nf, nb = shard_grad(params, sts[r]["fw"],
+                                           sts[r]["bw"], x[sl], lids)
+                sts[r] = {"fw": nf, "bw": nb}
+                ltot = ltot + l
+                g = gr if g is None else jax.tree.map(jnp.add, g, gr)
+            params = jax.tree.map(lambda p, gg: p - LR * gg, params, g)
+            losses.append(float(ltot))
+        return losses, sts, params
+
+    # (a) EF / EF21 boundary feedback + dp: the 2x2 run tracks the
+    # per-shard solo reference step-for-step, and replica r's slice of
+    # the sharded feedback state equals solo run r's state
+    for mode in ("ef", "ef21"):
+        bp = BoundaryPolicy(fw=q8, bw=q8, feedback=mode, bw_feedback=mode)
+        dl, dst, dparams = dp_train(bp, 6)
+        slr, ssts, sparams = solo_train(bp, 6)
+        for t, (a, b) in enumerate(zip(dl, slr)):
+            assert abs(a - b) < 1e-4 * max(abs(b), 1.0), (mode, t, dl, slr)
+        dmax = max(float(np.max(np.abs(
+            np.asarray(dparams[k]) - np.asarray(sparams[k]))))
+            for k in dparams)
+        assert dmax < 1e-4, (mode, dmax)
+        for r in range(DP):
+            for dname in ("fw", "bw"):
+                d = float(np.max(np.abs(
+                    np.asarray(dst[dname].resid)[r]
+                    - np.asarray(ssts[r][dname].resid))))
+                assert d < 1e-4, (mode, dname, r, d)
+        print(mode, "+dp tracks per-shard solo:", dl[-1], slr[-1])
+
+    # (b) AQ-SGD + dp: id-sharded buffers — with the routing contract
+    # (example i lives on replica i // (NS/DP)) training matches the
+    # per-shard solo reference and each replica touches ONLY its rows
+    NS = 16
+    PER = NS // DP
+    bp = BoundaryPolicy(fw=q8, bw=q8, feedback="aqsgd")
+
+    def routed_ids(rng):
+        return jnp.asarray(np.concatenate(
+            [rng.permutation(PER)[:SH] + r * PER for r in range(DP)]),
+            jnp.int32)
+
+    dl, dst, dparams = dp_train(bp, 5, num_samples=NS, ids_fn=routed_ids)
+    slr, ssts, sparams = solo_train(bp, 5, num_samples=NS,
+                                    ids_fn=routed_ids)
+    for t, (a, b) in enumerate(zip(dl, slr)):
+        assert abs(a - b) < 1e-4 * max(abs(b), 1.0), (t, dl, slr)
+    for r in range(DP):
+        d = float(np.max(np.abs(np.asarray(dst["fw"].resid)[r]
+                                - np.asarray(ssts[r]["fw"].resid))))
+        assert d < 1e-4, (r, d)
+    print("aqsgd+dp tracks per-shard solo:", dl[-1], slr[-1])
+
+    # single known step: the touched buffer rows are EXACTLY the local
+    # ids each replica saw (gather/scatter stayed replica-local)
+    st = init_feedback_state(bp, (D,), num_stages=S, batch=B,
+                             microbatches=MB, num_samples=NS, dp=DP)
+    ids = jnp.asarray([3, 7, 1, 5, 10, 14, 8, 12], jnp.int32)
+    x = jax.random.normal(jax.random.PRNGKey(9), (B, D))
+    pdp = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (DP, *a.shape)), params0)
+    def one(pdp, bw_state):
+        y, new_fw = pipeline_apply(stage_fn, pdp, x, mesh, "stage",
+                                   policy=bp, microbatches=MB,
+                                   dp_axis="data", fw_state=st["fw"],
+                                   bw_state=bw_state, ids=ids)
+        return jnp.sum(y.astype(jnp.float32) ** 2), new_fw
+    (_, nf), _ = jax.value_and_grad(one, has_aux=True)(pdp, st["bw"])
+    for r, local in ((0, {3, 7, 1, 5}), (1, {2, 6, 0, 4})):
+        rows = np.asarray(jnp.any(
+            nf.resid[r][0].reshape(PER, D) != 0, axis=-1))
+        touched = set(np.nonzero(rows)[0].tolist())
+        assert touched == local, (r, touched, local)
+    print("FEEDBACK_DP_OK")
 """)
 
 
@@ -491,9 +675,16 @@ SCHEDULE_INTERLEAVED_SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp
     from repro.core.boundary import boundary_apply
     from repro.core.compressors import quant
+    from repro.core.feedback import FeedbackState
     from repro.core.policy import BoundaryPolicy, quant_policy
     from repro.transport.pipeline import (init_feedback_state,
                                           pipeline_apply)
+
+    def fbs(arr, mode, direction):
+        z = jnp.zeros((0,))
+        return FeedbackState(resid=arr, mirror=z, agg=z, mode=mode,
+                             direction=direction)
+
     S, V, B, D, MB = 2, 2, 8, 16, 4
     MBSZ = B // MB
     L = S * V
@@ -567,8 +758,9 @@ SCHEDULE_INTERLEAVED_SCRIPT = textwrap.dedent("""
             for l in range(L):
                 h = stage_fn(jax.tree.map(lambda a: a[l], p), h)
                 if l < L - 1:
-                    h, _ = boundary_apply(bp, h, jnp.zeros((0,)),
-                                          jnp.zeros((0,)),
+                    h, _ = boundary_apply(bp, h,
+                                          fbs(jnp.zeros((0,)), "none", "fw"),
+                                          fbs(jnp.zeros((0,)), "none", "bw"),
                                           jnp.zeros((MBSZ,), jnp.int32))
             hs.append(h)
         return jnp.sum(jnp.concatenate(hs).astype(jnp.float32) ** 2)
@@ -622,9 +814,11 @@ SCHEDULE_INTERLEAVED_SCRIPT = textwrap.dedent("""
             for l in range(L):
                 h = stage_fn(jax.tree.map(lambda a: a[l], p), h)
                 if l < L - 1:
-                    h, nf = boundary_apply(bp21, h, fw0[l, sl],
-                                           bw_bufs[l, sl], ids0[sl])
-                    cut_nf.append(nf)
+                    h, nf = boundary_apply(bp21, h,
+                                           fbs(fw0[l, sl], "ef21", "fw"),
+                                           fbs(bw_bufs[l, sl], "ef21", "bw"),
+                                           ids0[sl])
+                    cut_nf.append(nf.resid)
             ys.append(h)
             nfs.append(cut_nf)
         y = jnp.concatenate(ys, 0)
@@ -645,10 +839,10 @@ SCHEDULE_INTERLEAVED_SCRIPT = textwrap.dedent("""
     for l in range(L - 1):
         snd, rcv = (l % S, l // S), ((l + 1) % S, (l + 1) // S)
         for tag, got, want in [
-                ("fw send", nfp["send"][snd].reshape(B, D), nfr[l]),
-                ("fw mirror", nfp["recv"][rcv].reshape(B, D), nfr[l]),
-                ("bw send", nbp["send"][rcv].reshape(B, D), nbr[l]),
-                ("bw mirror", nbp["recv"][snd].reshape(B, D), nbr[l])]:
+                ("fw send", nfp.resid[snd].reshape(B, D), nfr[l]),
+                ("fw mirror", nfp.mirror[rcv].reshape(B, D), nfr[l]),
+                ("bw send", nbp.resid[rcv].reshape(B, D), nbr[l]),
+                ("bw mirror", nbp.mirror[snd].reshape(B, D), nbr[l])]:
             d = float(jnp.max(jnp.abs(got - want)))
             assert d < 1e-4, (tag, l, d)
     print("interleaved EF21 buffers match per-cut simulated boundary")
@@ -673,12 +867,12 @@ SCHEDULE_FEEDBACK_SCRIPT = FEEDBACK_COMMON + textwrap.dedent("""
         dp = max(float(jnp.max(jnp.abs(pp[k] - sp[k]))) for k in pp)
         assert dp < 1e-4, (tag, dp)
         if bp.feedback == "aqsgd":
-            d = float(jnp.max(jnp.abs(pst["fw"]["send"][0] - sfw)))
-            dm = float(jnp.max(jnp.abs(pst["fw"]["recv"][1] - sfw)))
+            d = float(jnp.max(jnp.abs(pst["fw"].resid[0] - sfw)))
+            dm = float(jnp.max(jnp.abs(pst["fw"].mirror[1] - sfw)))
             assert d < 1e-4 and dm < 1e-4, (tag, d, dm)
         else:
             d = float(jnp.max(jnp.abs(
-                pst["fw"]["send"][0].reshape(B, D) - sfw)))
+                pst["fw"].resid[0].reshape(B, D) - sfw)))
             assert d < 1e-4, (tag, d)
         print(tag, "under 1f1b tracks simulated:", pl[-1], slr[-1])
     print("SCHEDULE_FEEDBACK_OK")
@@ -726,6 +920,18 @@ def test_pipeline_feedback_topk_tracks_simulated_subprocess():
     r = _run_sub(FEEDBACK_TOPK_SCRIPT)
     assert r.returncode == 0, r.stderr[-2000:]
     assert "FEEDBACK_TOPK_OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_dp_pipeline_boundary_feedback_subprocess():
+    """Acceptance (run explicitly in CI): boundary feedback on the 2x2
+    DPxPP mesh.  EF / EF21 with dp-sharded buffers track a per-shard
+    single-replica pipeline reference step-for-step (exact grad reduce
+    isolates the feedback path), and AQ-SGD's id-sharded buffer touches
+    only the example ids each replica saw."""
+    r = _run_sub(FEEDBACK_DP_SCRIPT)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "FEEDBACK_DP_OK" in r.stdout
 
 
 # ---------------------------------------------------------------------------
