@@ -16,6 +16,14 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
 
 def _path(table: str) -> str:
+    if table.startswith("fresh-"):
+        # fresh-*.json files are per-run CI artifacts (gitignored) — using
+        # one as a regression baseline would gate against whatever the
+        # last run produced instead of the committed numbers.
+        raise ValueError(
+            f"refusing to use {table!r} as a results table: fresh-* files "
+            "are uncommitted run artifacts, not baselines (compare "
+            f"against {table[len('fresh-'):]!r})")
     return os.path.join(RESULTS_DIR, table + ".json")
 
 

@@ -1,22 +1,33 @@
-"""Serving throughput: static batching vs continuous batching.
+"""Serving throughput: static vs continuous vs paged continuous.
 
-The workload is the one the paper's throughput claim actually meets in
-production: a mixed stream — Zipf-distributed prompt lengths AND
-Zipf-distributed max-new-tokens.  A static engine pads every prompt to the
-batch max and decodes everyone until the batch's largest max-new-tokens,
-burning slots on finished requests; the continuous engine evicts a
-finished slot and refills it the same tick.
+Two workload tiers, each swept per codec variant (top-10% wire
+compression vs the --no-compress ablation):
 
-Asserted acceptance criteria (per policy variant):
+  * ``zipf``        — mixed stream, Zipf prompt lengths AND Zipf
+    max-new-tokens.  Static batching pads every prompt to the batch max
+    and decodes everyone to the group's largest max-new-tokens; the
+    continuous engine evicts finished slots and refills the same tick.
+  * ``shared_zipf`` — the production shape paged KV exists for: every
+    request opens with the SAME system prompt (here 96 tokens) followed
+    by a short Zipf tail, and decodes a short Zipf completion.  Prefill
+    dominates, so the prefix cache (skip the shared pages) and chunked
+    prefill (never stall decode behind a whole prompt) carry the win.
 
-  * continuous tokens/s >= 1.5x the static engine on the mixed workload;
-  * every request's continuous-batching output is BIT-IDENTICAL to the
-    same request served alone through the engine;
-  * the measured serving run adds ZERO jit compilations after warmup
-    (slot eviction/refill never recompiles).
+Asserted acceptance criteria:
 
-Variants cover the paper's serve-time story: compressed boundaries
-(top-10% through the wire codecs) vs the --no-compress ablation.
+  * zipf tier: continuous tokens/s >= 1.5x static;
+  * shared tier: paged (prefix cache + chunked prefill) tokens/s >= 1.3x
+    the PR-4 slab continuous engine, AND strictly lower p99 TTFT —
+    asserted on the compressed (paper-config) rows; the no-compress
+    ablation records its smaller speedup unasserted;
+  * every continuous/paged output is BIT-IDENTICAL to the same request
+    served alone through an identically configured engine;
+  * speculative decoding emits exactly the paged engine's greedy stream;
+  * the measured runs add ZERO jit compilations after warmup (slot
+    eviction/refill, page eviction and prefix hits never recompile).
+
+Static engines have no per-request TTFT (a whole group prefills and
+returns together), so the static rows report throughput only.
 
 Writes benchmarks/results/serve_bench.json.
 
@@ -55,6 +66,22 @@ def build_workload(cfg, n, max_prompt, max_new, seed=0, a=1.2):
     return prompts, news
 
 
+def build_shared_workload(cfg, n, prefix_len, max_tail, max_new, seed=0,
+                          a=1.2):
+    """Shared-system-prompt stream: every request is the same
+    ``prefix_len``-token prefix plus a short Zipf tail, decoding a short
+    Zipf completion.  Prompt ingestion dominates the run, which is the
+    regime the prefix cache converts into page reuse."""
+    rng = np.random.RandomState(seed)
+    vocab = min(cfg.vocab_size, 1024)
+    shared = rng.randint(1, vocab, prefix_len).astype(np.int32)
+    tails = zipf_lengths(rng, n, 1, max_tail, a)
+    news = zipf_lengths(rng, n, 4, max_new, a)
+    prompts = [np.concatenate([shared, rng.randint(1, vocab, t)
+                               .astype(np.int32)]) for t in tails]
+    return prompts, news
+
+
 def run_static(params, cfg, policy, compress, prompts, news, slots,
                max_seq):
     """FIFO groups of ``slots`` requests; each group pads to its own max
@@ -87,10 +114,13 @@ def run_static(params, cfg, policy, compress, prompts, news, slots,
 
 
 def run_continuous(params, cfg, policy, compress, prompts, news, slots,
-                   max_seq, max_prompt):
+                   max_seq, max_prompt, **engine_kw):
+    """One timed streaming run; returns (metrics, outputs, engine).
+    ``engine_kw`` selects the variant: {} is the PR-4 slab engine,
+    prefix_cache/prefill_chunk the paged one, draft_params speculative."""
     eng = ContinuousEngine(params, cfg, policy, compress=compress,
                            num_slots=slots, max_seq=max_seq,
-                           max_prompt=max_prompt)
+                           max_prompt=max_prompt, **engine_kw)
     eng.warmup()
     compiles0 = eng.compile_stats()
     t0 = time.time()
@@ -103,30 +133,122 @@ def run_continuous(params, cfg, policy, compress, prompts, news, slots,
         f"{eng.compile_stats()}"
     outs = {r.req_id: r.out for r in done}
     useful = int(sum(news))
+    ttfts = [r.ttft_s for r in done]
     stats = eng.stats()
-    return {"wall_s": round(wall, 3),
-            "tok_per_s": round(useful / wall, 1),
-            "useful_tokens": useful,
-            "slot_utilization": stats["slot_utilization"],
-            "mean_ttft_s": stats["mean_ttft_s"],
-            "boundary_bytes_per_tok": stats["boundary_bytes_per_tok"],
-            **compiles0}, outs, eng
+    metrics = {"wall_s": round(wall, 3),
+               "tok_per_s": round(useful / wall, 1),
+               "useful_tokens": useful,
+               # TTFT SLO percentiles over the full request stream
+               # (includes queueing — the latency a client actually sees)
+               "p50_ttft_s": round(float(np.percentile(ttfts, 50)), 4),
+               "p99_ttft_s": round(float(np.percentile(ttfts, 99)), 4),
+               "mean_ttft_s": stats["mean_ttft_s"],
+               "slot_utilization": stats["slot_utilization"],
+               "boundary_bytes_per_tok": stats["boundary_bytes_per_tok"],
+               **compiles0}
+    for k in ("prefix_hits", "prefix_hit_tokens", "cow_copies",
+              "acceptance_rate"):
+        if k in stats:
+            metrics[k] = stats[k]
+    return metrics, outs, eng
 
 
 def solo_reference(params, cfg, policy, compress, prompts, news, slots,
-                   max_seq, max_prompt):
+                   max_seq, max_prompt, **engine_kw):
     """Each request alone on the SAME engine shape (num_slots unchanged —
     bit-identity is guaranteed across batch composition, i.e. per-row
     numerics; a different batch SIZE is a different XLA program)."""
     eng = ContinuousEngine(params, cfg, policy, compress=compress,
                            num_slots=slots, max_seq=max_seq,
-                           max_prompt=max_prompt)
+                           max_prompt=max_prompt, **engine_kw)
     outs = {}
     for i, (p, n) in enumerate(zip(prompts, news)):
         eng.submit(p, max_new_tokens=int(n), seed=i)
         (r,) = eng.drain()
         outs[i] = r.out
     return outs
+
+
+def _assert_identical(solo, outs, what):
+    bad = [i for i in solo if not np.array_equal(solo[i], outs[i])]
+    assert not bad, f"{what}: output != reference for requests {bad}"
+
+
+def zipf_tier(params, cfg, policy, compress, name, args):
+    prompts, news = build_workload(cfg, args.requests, args.max_prompt,
+                                   args.max_new, args.seed)
+    st, _ = run_static(params, cfg, policy, compress, prompts, news,
+                       args.slots, args.max_seq)
+    ct, ct_outs, _ = run_continuous(params, cfg, policy, compress,
+                                    prompts, news, args.slots,
+                                    args.max_seq, args.max_prompt)
+    solo = solo_reference(params, cfg, policy, compress, prompts, news,
+                          args.slots, args.max_seq, args.max_prompt)
+    _assert_identical(solo, ct_outs, f"zipf/{name} continuous")
+    speedup = ct["tok_per_s"] / st["tok_per_s"]
+    row = {"name": name, "compress": compress,
+           "requests": args.requests, "slots": args.slots,
+           "static": st, "continuous": ct,
+           "speedup": round(speedup, 2),
+           "bit_identical_to_solo": True}
+    assert speedup >= 1.5, \
+        f"zipf/{name}: continuous {ct['tok_per_s']} tok/s is only " \
+        f"{speedup:.2f}x static {st['tok_per_s']} (need >= 1.5x)"
+    return row
+
+
+def shared_tier(params, cfg, policy, compress, name, args):
+    """Legacy slab continuous vs paged (prefix cache + chunked prefill)
+    on the shared-prefix workload, plus a speculative-decoding row."""
+    prompts, news = build_shared_workload(cfg, args.requests,
+                                          args.shared_prefix,
+                                          args.max_tail, args.shared_new,
+                                          args.seed)
+    max_prompt = args.shared_prefix + args.max_tail
+    legacy, _, _ = run_continuous(params, cfg, policy, compress, prompts,
+                                  news, args.slots, args.max_seq,
+                                  max_prompt)
+    paged_kw = dict(prefix_cache=True, prefill_chunk=args.prefill_chunk,
+                    page_size=args.page_size)
+    paged, paged_outs, _ = run_continuous(params, cfg, policy, compress,
+                                          prompts, news, args.slots,
+                                          args.max_seq, max_prompt,
+                                          **paged_kw)
+    solo = solo_reference(params, cfg, policy, compress, prompts, news,
+                          args.slots, args.max_seq, max_prompt,
+                          **paged_kw)
+    _assert_identical(solo, paged_outs, f"shared/{name} paged")
+    # self-draft speculative run (draft == target params): informational
+    # throughput — the point gated here is exact greedy equivalence
+    spec, spec_outs, _ = run_continuous(
+        params, cfg, policy, compress, prompts, news, args.slots,
+        args.max_seq, max_prompt, prefix_cache=True,
+        prefill_chunk=args.prefill_chunk, page_size=args.page_size,
+        draft_params=params, draft_cfg=cfg, draft_policy=policy,
+        spec_k=args.spec_k)
+    _assert_identical(paged_outs, spec_outs, f"shared/{name} speculative")
+    speedup = paged["tok_per_s"] / legacy["tok_per_s"]
+    row = {"name": name, "compress": compress,
+           "requests": args.requests, "slots": args.slots,
+           "legacy": legacy, "paged": paged, "speculative": spec,
+           "paged_speedup": round(speedup, 2),
+           "bit_identical_to_solo": True,
+           "spec_matches_greedy": True}
+    if compress:
+        # the speedup claim is gated on the paper's serving config (wire
+        # codecs on): skipping a prefix-hit page saves its codec work too.
+        # The no-compress ablation prefills with plain matmuls the smoke
+        # model amortizes well, so its (recorded) speedup is smaller —
+        # that row exists for codec-cost accounting (F3), not this claim.
+        row["paged_p99_ttft_lower"] = (paged["p99_ttft_s"]
+                                       < legacy["p99_ttft_s"])
+        assert speedup >= 1.3, \
+            f"shared/{name}: paged {paged['tok_per_s']} tok/s is only " \
+            f"{speedup:.2f}x legacy {legacy['tok_per_s']} (need >= 1.3x)"
+        assert row["paged_p99_ttft_lower"], \
+            f"shared/{name}: paged p99 TTFT {paged['p99_ttft_s']}s not " \
+            f"below legacy {legacy['p99_ttft_s']}s"
+    return row
 
 
 def main(argv=None) -> int:
@@ -137,6 +259,15 @@ def main(argv=None) -> int:
     ap.add_argument("--max-prompt", type=int, default=48)
     ap.add_argument("--max-new", type=int, default=96)
     ap.add_argument("--max-seq", type=int, default=224)
+    ap.add_argument("--shared-prefix", type=int, default=96,
+                    help="shared tier: system-prompt length")
+    ap.add_argument("--max-tail", type=int, default=8,
+                    help="shared tier: max Zipf tail after the prefix")
+    ap.add_argument("--shared-new", type=int, default=12,
+                    help="shared tier: max Zipf new-tokens")
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--spec-k", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--check", action="store_true",
                     help="regression gate: compare against the committed "
@@ -148,47 +279,40 @@ def main(argv=None) -> int:
 
     cfg = get(args.arch, smoke=True)
     params = transformer.init_params(jax.random.PRNGKey(args.seed), cfg)
-    prompts, news = build_workload(cfg, args.requests, args.max_prompt,
-                                   args.max_new, args.seed)
     policy = CompressionPolicy(num_stages=2, boundary=topk_policy(0.10))
-    rows = []
+    zipf_rows, shared_rows = [], []
     for name, compress in (("top10", True), ("no-compress", False)):
-        st, st_outs = run_static(params, cfg, policy, compress, prompts,
-                                 news, args.slots, args.max_seq)
-        ct, ct_outs, _ = run_continuous(params, cfg, policy, compress,
-                                        prompts, news, args.slots,
-                                        args.max_seq, args.max_prompt)
-        solo = solo_reference(params, cfg, policy, compress, prompts, news,
-                              args.slots, args.max_seq, args.max_prompt)
-        mismatches = [i for i in solo
-                      if not np.array_equal(solo[i], ct_outs[i])]
-        assert not mismatches, \
-            f"continuous output != solo for requests {mismatches}"
-        speedup = ct["tok_per_s"] / st["tok_per_s"]
-        row = {"name": name, "compress": compress,
-               "requests": args.requests, "slots": args.slots,
-               "static": st, "continuous": ct,
-               "speedup": round(speedup, 2),
-               "bit_identical_to_solo": True}
-        rows.append(row)
+        row = zipf_tier(params, cfg, policy, compress, name, args)
+        zipf_rows.append(row)
         print(json.dumps(row), flush=True)
-        assert speedup >= 1.5, \
-            f"{name}: continuous {ct['tok_per_s']} tok/s is only " \
-            f"{speedup:.2f}x static {st['tok_per_s']} (need >= 1.5x)"
+        row = shared_tier(params, cfg, policy, compress, name, args)
+        shared_rows.append(row)
+        print(json.dumps(row), flush=True)
     fresh = {"arch": cfg.arch_id,
              "workload": {"requests": args.requests,
                           "slots": args.slots,
                           "zipf_max_prompt": args.max_prompt,
-                          "zipf_max_new": args.max_new},
-             "rows": rows}
+                          "zipf_max_new": args.max_new,
+                          "shared_prefix": args.shared_prefix,
+                          "shared_max_tail": args.max_tail,
+                          "shared_max_new": args.shared_new,
+                          "prefill_chunk": args.prefill_chunk,
+                          "page_size": args.page_size,
+                          "spec_k": args.spec_k},
+             "rows": zipf_rows, "shared_rows": shared_rows}
     if args.check:
         from benchmarks.common import run_check
         # structural claims (token counts, wire bytes/token, compile
-        # counters, bit-identity) gate exactly; wall-clock throughputs are
-        # machine-dependent and gate only against order-of-magnitude drift
+        # counters, bit-identity, prefix-hit counts) gate exactly;
+        # wall-clock throughputs, latency percentiles and the greedy
+        # acceptance rate are machine-dependent and gate only against
+        # order-of-magnitude drift
         return run_check(fresh, "serve_bench",
                          band_keys={"tok_per_s": 0.75, "wall_s": 0.75,
-                                    "mean_ttft_s": 0.9, "speedup": 0.6},
+                                    "mean_ttft_s": 0.9, "speedup": 0.6,
+                                    "p50_ttft_s": 0.9, "p99_ttft_s": 0.9,
+                                    "paged_speedup": 0.6,
+                                    "acceptance_rate": 0.9},
                          ignore_keys=frozenset(("seconds",)))
     os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
     with open(RESULTS, "w") as f:

@@ -113,6 +113,30 @@ def boundary_wire_eval(policy: BoundaryPolicy, x, compress: bool):
     return jax.vmap(one)(x)
 
 
+def boundary_wire_eval_tokens(policy: BoundaryPolicy, x, compress: bool):
+    """Per-(request, token) wire packing for multi-token decode spans.
+
+    ``x``: (B, T, d).  Each token's cut tensor is packed as its OWN payload
+    — exactly the granularity :func:`boundary_wire_eval` gives a T=1
+    decode tick (the codec sees a (1, d) tensor either way, so scales and
+    TopK counts are identical).  This is what keeps a speculative
+    verification span's numerics bit-identical to plain per-token greedy
+    decode, and it is the byte stream a draft/target pair sharing this
+    stage cut would actually exchange.
+    """
+    if not compress or policy.fw.kind == "none":
+        return x
+    from repro.transport.codecs import codec_for
+    codec = codec_for(policy.fw)
+    k_frac = policy.fw.k_frac
+
+    def one(xt):                                          # (d,)
+        payload = codec.pack(xt[None], k_frac)
+        return codec.unpack(payload, (1,) + xt.shape, xt.dtype)[0]
+
+    return jax.vmap(jax.vmap(one))(x)
+
+
 def boundary_wire_bytes_per_token(policy, d_model: int,
                                   num_cuts: Optional[int] = None) -> float:
     """Bytes per decoded token crossing the stage cuts of a

@@ -17,6 +17,15 @@ Examples:
   # finding-F3 ablation: serve an (EF-)trained model uncompressed
   PYTHONPATH=src python -m repro.launch.serve --arch gpt2-small --smoke \
       --engine continuous --policy top10 --no-compress
+  # paged serving: prefix-shared KV pages + chunked prefill on a
+  # shared-system-prompt workload
+  PYTHONPATH=src python -m repro.launch.serve --arch gpt2-small --smoke \
+      --engine continuous --policy top10 --prefix-cache \
+      --prefill-chunk 16 --shared-prefix 48
+  # speculative decoding: a draft model proposes, the target verifies
+  # (output is exactly the target's greedy stream)
+  PYTHONPATH=src python -m repro.launch.serve --arch gpt2-small --smoke \
+      --engine continuous --policy top10 --draft gpt2-small --spec-k 4
 """
 from __future__ import annotations
 
@@ -74,6 +83,30 @@ def main(argv=None) -> int:
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--eos", type=int, default=None,
                     help="stop decoding a request at this token id")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="continuous engine: prefix-sharing paged KV — "
+                         "requests with a common prompt prefix reuse its "
+                         "cached pages instead of re-prefilling")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="continuous engine: ingest prompts in chunks of "
+                         "this many tokens, one chunk per tick, "
+                         "interleaved with decode (kills the prefill "
+                         "stall); implies the paged KV cache")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page in paged mode")
+    ap.add_argument("--draft", default=None, choices=sorted(ARCHS),
+                    help="speculative decoding: draft arch proposing "
+                         "--spec-k tokens per tick for the target to "
+                         "verify in one forward (greedy only; a draft "
+                         "trained with boundary compression must serve "
+                         "compressed — finding F3 applies to the draft "
+                         "too, so it shares --policy/--no-compress)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft proposals per speculative tick")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="workload: prepend a common system-prompt "
+                         "prefix of this many tokens to every request "
+                         "(what --prefix-cache accelerates)")
     ap.add_argument("--ckpt", default=None, help="restore params from npz")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -104,6 +137,10 @@ def main(argv=None) -> int:
             ap.error("--temperature/--top-k/--top-p/--eos need "
                      "--engine continuous (the static engine decodes "
                      "greedily to a fixed length)")
+        if args.prefix_cache or args.prefill_chunk or args.draft \
+                or args.shared_prefix:
+            ap.error("--prefix-cache/--prefill-chunk/--draft/"
+                     "--shared-prefix need --engine continuous")
         engine = ServeEngine(params, cfg, policy, compress=compress,
                              max_batch=args.batch, max_seq=args.max_seq)
         reqs = [Request(rng.randint(0, min(cfg.vocab_size, 1024),
@@ -123,17 +160,36 @@ def main(argv=None) -> int:
 
     sampling = SamplingConfig(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p)
+    draft_params = draft_cfg = None
+    if args.draft:
+        draft_cfg = get(args.draft, smoke=args.smoke)
+        if draft_cfg.vocab_size != cfg.vocab_size:
+            ap.error(f"--draft {args.draft}: draft vocab "
+                     f"{draft_cfg.vocab_size} != target vocab "
+                     f"{cfg.vocab_size} — proposals must share token ids")
+        draft_mod = encdec if draft_cfg.enc_dec else transformer
+        draft_params = draft_mod.init_params(
+            jax.random.PRNGKey(args.seed + 1), draft_cfg)
     engine = ContinuousEngine(params, cfg, policy, compress=compress,
                               num_slots=args.slots, max_seq=args.max_seq,
                               sampling=sampling,
-                              max_prompt=args.prompt_len)
+                              max_prompt=args.prompt_len
+                              + args.shared_prefix,
+                              prefix_cache=args.prefix_cache,
+                              prefill_chunk=args.prefill_chunk,
+                              page_size=args.page_size,
+                              draft_params=draft_params,
+                              draft_cfg=draft_cfg, draft_policy=policy,
+                              spec_k=args.spec_k)
     engine.warmup()
+    vocab = min(cfg.vocab_size, 1024)
+    shared = rng.randint(0, vocab, args.shared_prefix).astype(np.int32)
     plens = zipf_lengths(rng, args.requests, 2, args.prompt_len)
     news = zipf_lengths(rng, args.requests, 1, args.new_tokens)
     t0 = time.time()
     for i in range(args.requests):
-        engine.submit(rng.randint(0, min(cfg.vocab_size, 1024),
-                                  plens[i]).astype(np.int32),
+        tail = rng.randint(0, vocab, plens[i]).astype(np.int32)
+        engine.submit(np.concatenate([shared, tail]),
                       max_new_tokens=int(news[i]), eos_token=args.eos,
                       seed=args.seed + i)
     done = engine.drain()

@@ -182,6 +182,68 @@ def attn_decode(params, x1, cache, pos, *, num_heads, num_kv_heads, head_dim,
     return out @ params["wo"], {"k": ck, "v": cv}
 
 
+def attn_decode_span(params, x, cache, pos, *, num_heads, num_kv_heads,
+                     head_dim, pos_embed="rope", rope_theta=10_000.0,
+                     window=None, attn_softcap=None, pad_len=None,
+                     page_map=None, valid_len=None):
+    """Multi-token decode: ``x`` is (B, T, d) new tokens occupying absolute
+    positions ``pos[b] + arange(T)``.  One program shape covers chunked
+    prefill (B=1, T=chunk) and speculative verification (T=k+1); T=1
+    reproduces :func:`attn_decode` bit-for-bit on the same cache contents.
+
+    Cache forms:
+      * slab  — ``cache["k"]: (B, C, KV, hd)`` (page_map None), the PR-4
+        slot-indexed layout; ``pad_len`` masks left-padding as usual.
+      * paged — ``cache["k"]: (N, P, KV, hd)`` (a page POOL) read/written
+        through ``page_map: (B, n_pages) int32`` per-slot page indices;
+        logical position t lives in physical page ``page_map[b, t // P]``
+        at offset ``t % P``.  Unallocated logical pages map to the trash
+        page 0 — never valid under the position mask.
+
+    ``valid_len``: optional (B,) int32 — only the first valid_len[b] of the
+    T tokens are real (a padded final prefill chunk).  Invalid positions'
+    K/V are routed to the trash page (paged; the slab path requires full
+    validity) and their queries produce garbage logits the caller ignores.
+
+    Ring (sliding-window) caches are not supported: pages need absolute
+    positions.
+    """
+    if window is not None:
+        raise ValueError("attn_decode_span: sliding-window ring caches "
+                         "are unsupported (absolute positions only)")
+    b, t, _ = x.shape
+    pos = jnp.asarray(pos)
+    wpos = pos[:, None] + jnp.arange(t)                 # (B, T) abs positions
+    q, k, v = _project_qkv(params, x, num_heads, num_kv_heads, head_dim)
+    if pos_embed == "rope":
+        q = apply_rope(q, wpos, rope_theta)
+        k = apply_rope(k, wpos, rope_theta)
+    if page_map is not None:
+        p = cache["k"].shape[1]                         # page size
+        phys = jnp.take_along_axis(page_map, wpos // p, axis=1)  # (B, T)
+        if valid_len is not None:
+            phys = jnp.where(jnp.arange(t)[None] < valid_len[:, None],
+                             phys, 0)                   # pad -> trash page
+        off = wpos % p
+        ck = cache["k"].at[phys, off].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[phys, off].set(v.astype(cache["v"].dtype))
+        vk = ck[page_map].reshape(b, -1, num_kv_heads, head_dim)
+        vv = cv[page_map].reshape(b, -1, num_kv_heads, head_dim)
+    else:
+        batch_ix = jnp.arange(b)[:, None]
+        ck = cache["k"].at[batch_ix, wpos].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[batch_ix, wpos].set(v.astype(cache["v"].dtype))
+        vk, vv = ck, cv
+    c = vk.shape[1]
+    idx = jnp.arange(c)
+    mask = idx[None, None, :] <= wpos[:, :, None]       # (B, T, C) causal
+    if pad_len is not None:
+        mask &= idx[None, None, :] >= pad_len[:, None, None]
+    out = _sdpa(q, vk, vv, mask, attn_softcap)
+    out = out.reshape(b, t, num_heads * head_dim)
+    return out @ params["wo"], {"k": ck, "v": cv}
+
+
 def attn_prefill(params, x, *, cache_len, num_heads, num_kv_heads, head_dim,
                  pos_embed="rope", rope_theta=10_000.0, window=None,
                  attn_softcap=None, pad_mask=None):

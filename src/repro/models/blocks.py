@@ -118,6 +118,24 @@ def _attn_block_decode(p, x1, cache, pos, cfg: ModelConfig, kind: str,
     return x1, cache
 
 
+def _attn_block_decode_span(p, x, cache, pos, cfg: ModelConfig, kind: str,
+                            pad_len=None, page_map=None, valid_len=None):
+    """Multi-token decode (chunked prefill / speculative verify): x is
+    (B, T, d) at positions ``pos[b]+arange(T)``.  MoE routes densely
+    (``dropless``), exactly like the T=1 decode path (``s==1`` in
+    moe_apply) — span and per-token decode see the same expert math."""
+    moe = kind == "moe"
+    h, cache = A.attn_decode_span(
+        p["attn"], norm_apply(p["ln1"], x, cfg.norm), cache, pos,
+        pad_len=pad_len, page_map=page_map, valid_len=valid_len,
+        **_attn_kwargs(cfg, kind))
+    x = x + _maybe_post(p, "pn1", h, cfg)
+    h, _ = _ffn(p, norm_apply(p["ln2"], x, cfg.norm), cfg, moe,
+                dropless=True)
+    x = x + _maybe_post(p, "pn2", h, cfg)
+    return x, cache
+
+
 def _attn_block_cache(cfg: ModelConfig, kind: str, batch: int,
                       cache_len: int, dtype):
     kw = _attn_kwargs(cfg, kind)
@@ -436,6 +454,18 @@ def block_decode(p, x1, cache, pos, cfg: ModelConfig, kind: str,
     if kind == "hymba":
         return _hymba_block_decode(p, x1, cache, pos, cfg)
     raise ValueError(kind)
+
+
+def block_decode_span(p, x, cache, pos, cfg: ModelConfig, kind: str,
+                      pad_len=None, page_map=None, valid_len=None):
+    """Multi-token decode over a slab or paged KV cache (see
+    attention.attn_decode_span).  Attention kinds only: recurrent state
+    (rwkv, hymba) cannot jump to per-slot absolute positions."""
+    if kind in ATTN_KINDS:
+        return _attn_block_decode_span(p, x, cache, pos, cfg, kind,
+                                       pad_len, page_map, valid_len)
+    raise ValueError(f"block_decode_span: unsupported kind {kind!r} "
+                     "(attention-family layers only)")
 
 
 def block_cache(cfg: ModelConfig, kind: str, batch: int, cache_len: int,

@@ -25,7 +25,8 @@ import jax.numpy as jnp
 
 from repro.core.boundary import (boundary_apply, boundary_eval,
                                  empty_boundary_state,
-                                 boundary_wire_eval)
+                                 boundary_wire_eval,
+                                 boundary_wire_eval_tokens)
 from repro.core.policy import CompressionPolicy, NO_POLICY
 from repro.models import blocks as B
 from repro.models.common import DTYPE, embed_init, norm_apply, norm_init, softcap
@@ -333,6 +334,60 @@ def decode_step(params, token, caches, pos, cfg: ModelConfig,
     new_caches = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
                               *new_segs)
     return _lm_logits(params, x, cfg)[:, 0], new_caches
+
+
+def decode_span(params, tokens, caches, pos, cfg: ModelConfig,
+                policy: CompressionPolicy = NO_POLICY, compress: bool = True,
+                pad_len=None, page_map=None, valid_len=None,
+                wire: bool = True):
+    """Multi-token decode: ``tokens`` (B, T) occupy absolute positions
+    ``pos[b] + arange(T)``; K/V for all T tokens are written into the cache
+    and logits are returned for EVERY position — (B, T, V).
+
+    One program shape serves both halves of the serving stack:
+      * chunked prefill — B=1, T=chunk, ``valid_len`` masking the padded
+        tail of the final chunk (the last valid logit seeds generation);
+      * speculative verification — B=slots, T=k+1, the target scoring the
+        draft's k proposals plus the bonus position in ONE forward.
+
+    ``caches``: the slab layout (leaves (G, B, C, ...)) or — with
+    ``page_map`` (B, n_pages) — a page pool (leaves (G, N, P, ...)), see
+    attention.attn_decode_span.
+
+    Stage cuts pack per (request, token) when ``wire`` is set
+    (boundary_wire_eval_tokens) — the same payload granularity as a T=1
+    decode tick, so span logits match per-token decode bit-for-bit.
+    """
+    if compress and not wire:
+        raise NotImplementedError(
+            "decode_span compresses through the wire codecs only "
+            "(wire=True) — the serve engines never use the in-process "
+            "boundary at decode time")
+    kinds = cfg.layer_kinds()
+    x = params["embed"][tokens].astype(DTYPE)             # (B, T, d)
+    x = constrain(x, "batch", None, "model")
+    segs = segment_bounds(cfg.num_groups, policy.num_stages)
+    new_segs = []
+    for si, (g0, g1) in enumerate(segs):
+        def scan_fn(x, gp_cache):
+            gp, cache = gp_cache
+            new_c = {}
+            for i, kind in enumerate(kinds):
+                x, c = B.block_decode_span(
+                    gp[f"b{i}"], x, cache[f"b{i}"], pos, cfg, kind,
+                    pad_len=pad_len, page_map=page_map, valid_len=valid_len)
+                new_c[f"b{i}"] = c
+            return constrain(x, "batch", "model", None), new_c
+        x, nseg = jax.lax.scan(
+            scan_fn, x, (_slice_groups(params["layers"], g0, g1),
+                         _slice_groups(caches, g0, g1)),
+            unroll=scan_unroll())
+        new_segs.append(nseg)
+        if si < len(segs) - 1:
+            x = boundary_wire_eval_tokens(policy.at(si), x, compress)
+    new_caches = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                              *new_segs)
+    return _lm_logits(params, x, cfg), new_caches
 
 
 # ---------------------------------------------------------------------------

@@ -1,14 +1,21 @@
 """Serving subsystem: continuous batching over compressed stage boundaries.
 
-  engine.py    — ServeEngine (static batch) + ContinuousEngine
-                 (streaming submit()/step()/drain(), slot eviction/refill)
-  scheduler.py — admission queue + per-slot request lifecycle (host-side)
-  cache.py     — slot-indexed KV pages, bucketed prompt lengths
-  sampling.py  — greedy / temperature / top-k / top-p, per-slot PRNG keys
+  engine.py      — ServeEngine (static batch) + ContinuousEngine
+                   (streaming submit()/step()/drain(), slot eviction/
+                   refill; paged mode: prefix sharing, chunked prefill,
+                   speculative decoding)
+  scheduler.py   — admission queue + per-slot request lifecycle (host-side)
+  cache.py       — slot-indexed KV slabs, bucketed prompt lengths
+  pages.py       — refcounted page pool, prefix-hash sharing, CoW
+  speculative.py — draft proposer + greedy acceptance
+  sampling.py    — greedy / temperature / top-k / top-p, per-slot PRNG keys
 """
 from repro.serve.engine import ContinuousEngine, Request, ServeEngine
+from repro.serve.pages import PagePoolFull, PageTable
 from repro.serve.sampling import GREEDY, SamplingConfig
 from repro.serve.scheduler import Scheduler, ServeRequest
+from repro.serve.speculative import DraftWorker
 
 __all__ = ["ContinuousEngine", "Request", "ServeEngine", "GREEDY",
-           "SamplingConfig", "Scheduler", "ServeRequest"]
+           "SamplingConfig", "Scheduler", "ServeRequest", "PageTable",
+           "PagePoolFull", "DraftWorker"]

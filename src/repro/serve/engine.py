@@ -36,9 +36,11 @@ from repro.core.policy import CompressionPolicy, NO_POLICY
 from repro.models import encdec, transformer
 from repro.models.config import ModelConfig
 from repro.serve import cache as C
+from repro.serve import pages as PG
 from repro.serve.sampling import GREEDY, SamplingConfig, request_key, \
     sample_tokens
 from repro.serve.scheduler import Scheduler, ServeRequest
+from repro.serve.speculative import DraftWorker, accept_greedy
 
 
 @dataclasses.dataclass
@@ -211,13 +213,45 @@ class ContinuousEngine:
     ``lax.scan`` call and syncs the host once — per-dispatch overhead is
     the decode bottleneck for small models, and the scheduler only needs
     token values back at completion/refill boundaries.
+
+    PAGED MODE (``prefix_cache`` / ``prefill_chunk`` / ``draft_params``):
+    the per-slot KV slabs are replaced by a shared refcounted page pool
+    (serve/pages.py) addressed through per-slot page maps.  Three coupled
+    features ride on it:
+
+      * prefix sharing — a new request whose leading full token pages are
+        already cached skips their prefill entirely (refcount++), and its
+        own full prompt pages are indexed for future requests on prefill
+        completion;
+      * chunked prefill — prompt ingestion runs as ``prefill_chunk``-sized
+        ``decode_span`` chunks, ONE chunk per prefilling slot per tick,
+        interleaved with the decode tick, so a long prompt never stalls
+        the slots that are already decoding (the batch-1 prefill stall of
+        the slab path);
+      * speculative decoding — a draft model proposes ``spec_k`` greedy
+        tokens per tick and the target verifies all of them in one
+        ``decode_span`` forward (serve/speculative.py); stage cuts pack
+        per (request, token), so emitted tokens are bit-identical to
+        plain greedy decode.
+
+    Prompts occupy positions ``[0, L)`` (no left-padding — page sharing
+    needs position-stable content), decode continues at ``L``, and masked
+    or inactive writes land in the reserved trash page, so the whole tick
+    is position-masked scatter/gather with zero recompilation across
+    admission, eviction, prefix hits, and CoW.
     """
 
     def __init__(self, params, cfg: ModelConfig,
                  policy: CompressionPolicy = NO_POLICY,
                  compress: bool = True, num_slots: int = 4,
                  max_seq: int = 256, sampling: SamplingConfig = GREEDY,
-                 max_prompt: Optional[int] = None, tick_chunk: int = 8):
+                 max_prompt: Optional[int] = None, tick_chunk: int = 8,
+                 prefix_cache: bool = False,
+                 prefill_chunk: Optional[int] = None, page_size: int = 16,
+                 num_pages: Optional[int] = None, draft_params=None,
+                 draft_cfg: Optional[ModelConfig] = None,
+                 draft_policy: CompressionPolicy = NO_POLICY,
+                 spec_k: int = 4):
         bad = left_pad_unsupported(cfg)
         if bad:
             raise ValueError(
@@ -232,15 +266,89 @@ class ContinuousEngine:
         self.buckets = C.prompt_buckets(min(max_prompt or max_seq // 2,
                                             max_seq))
         self.sched = Scheduler(num_slots)
-        self._caches = C.init_slot_caches(transformer, cfg, num_slots,
-                                          max_seq)
         self.pos = np.zeros(num_slots, np.int32)     # next decode position
         self.pad = np.zeros(num_slots, np.int32)     # left-pad inside bucket
         self.last_tok = np.zeros(num_slots, np.int32)
         self._keys = jnp.zeros((num_slots, 2), jnp.uint32)
         self.ticks = 0
         self.active_slot_ticks = 0
+        self.prefill_chunks = 0
+        self.paged = bool(prefix_cache or prefill_chunk
+                          or draft_params is not None)
+        self.prefix_cache, self.prefill_chunk = prefix_cache, prefill_chunk
         cfg_, pol_, smp_ = cfg, policy, sampling
+
+        if self.paged:
+            if prefill_chunk is not None and prefill_chunk < 1:
+                raise ValueError(f"prefill_chunk must be >= 1: "
+                                 f"{prefill_chunk}")
+            self.page_size = page_size
+            self.slot_pages = PG.pages_for(max_seq, page_size)
+            self.num_pages = num_pages or 1 + num_slots * self.slot_pages
+            self._pool = PG.init_page_pool(transformer, cfg,
+                                           self.num_pages, page_size)
+            self.pages = PG.PageTable(self.num_pages, page_size)
+            self.page_map = np.zeros((num_slots, self.slot_pages), np.int32)
+            self._owned = [[] for _ in range(num_slots)]
+            self.cursor = np.full(num_slots, -1, np.int32)  # -1: not prefill
+            self.plen = np.zeros(num_slots, np.int32)
+            self.spec = None
+            if draft_params is not None:
+                if not sampling.greedy:
+                    raise ValueError(
+                        "speculative decoding is greedy-only (acceptance "
+                        "compares argmax streams) — use GREEDY sampling")
+                self.spec = DraftWorker(
+                    draft_params, draft_cfg, draft_policy,
+                    compress=compress, num_slots=num_slots,
+                    max_seq=max_seq, buckets=list(self.buckets),
+                    spec_k=spec_k)
+
+            def _span_chunk(params, tokens, pool, pos, page_map, valid_len):
+                """One prefill chunk for one slot: tokens (1, c) at
+                absolute positions pos..pos+c-1 (valid_len masks the
+                padded tail); returns the logits of the LAST VALID
+                position — the first generated token on the final
+                chunk."""
+                logits, pool = transformer.decode_span(
+                    params, tokens, pool, pos, cfg_, pol_,
+                    compress=compress, page_map=page_map,
+                    valid_len=valid_len, wire=True)
+                last = jnp.take_along_axis(
+                    logits, (valid_len - 1)[:, None, None], axis=1)[:, 0]
+                return last, pool
+
+            def _decode_paged(params, tokens, pool, pos, page_map, keys):
+                """T=1 decode tick for every slot through the page maps.
+                Non-decoding slots ride along with pos 0 and an all-trash
+                map row — their garbage lands in the trash page."""
+                logits, pool = transformer.decode_span(
+                    params, tokens[:, None], pool, pos, cfg_, pol_,
+                    compress=compress, page_map=page_map, wire=True)
+                toks, keys = sample_tokens(logits[:, 0], keys, smp_)
+                return toks, pool, keys
+
+            def _verify(params, span, pool, pos, page_map):
+                """Speculative verification: span (B, k+1) = [last token,
+                k draft proposals]; the target's greedy argmax at every
+                position decides acceptance host-side."""
+                logits, pool = transformer.decode_span(
+                    params, span, pool, pos, cfg_, pol_,
+                    compress=compress, page_map=page_map, wire=True)
+                return jnp.argmax(logits, -1).astype(jnp.int32), pool
+
+            def _sample1(logits, key):
+                tok, key1 = sample_tokens(logits, key[None], smp_)
+                return tok[0], key1[0]
+
+            self._span_chunk = jax.jit(_span_chunk, donate_argnums=(2,))
+            self._decode_paged = jax.jit(_decode_paged, donate_argnums=(2,))
+            self._verify = jax.jit(_verify, donate_argnums=(2,))
+            self._sample1 = jax.jit(_sample1)
+            return
+
+        self._caches = C.init_slot_caches(transformer, cfg, num_slots,
+                                          max_seq)
 
         def _insert(params, tokens, pad, caches, slot, key):
             """Prefill one request at its bucket length and splice its KV
@@ -294,11 +402,30 @@ class ContinuousEngine:
                eos_token: Optional[int] = None, seed: int = 0) -> int:
         """Queue a request; returns its request id."""
         prompt = np.asarray(prompt, np.int32)
-        bucket = C.bucket_for(len(prompt), self.buckets)
-        if bucket + max_new_tokens - 1 > self.max_seq:
-            raise ValueError(
-                f"prompt bucket {bucket} + {max_new_tokens} new tokens "
-                f"exceeds max_seq={self.max_seq}")
+        if self.paged:
+            k = self.spec.spec_k if self.spec else 0
+            need = len(prompt) + max_new_tokens + k
+            if need > self.max_seq:
+                raise ValueError(
+                    f"prompt {len(prompt)} + {max_new_tokens} new tokens"
+                    + (f" + spec_k {k}" if k else "")
+                    + f" exceeds max_seq={self.max_seq}")
+            if PG.pages_for(need, self.page_size) > self.num_pages - 1:
+                raise ValueError(
+                    f"request needs {PG.pages_for(need, self.page_size)} "
+                    f"pages; pool has {self.num_pages - 1}")
+            if self.spec:
+                bucket = C.bucket_for(len(prompt), self.buckets)
+                if bucket + max_new_tokens + k > self.max_seq:
+                    raise ValueError(
+                        f"draft bucket {bucket} + {max_new_tokens} new + "
+                        f"spec_k {k} exceeds draft max_seq={self.max_seq}")
+        else:
+            bucket = C.bucket_for(len(prompt), self.buckets)
+            if bucket + max_new_tokens - 1 > self.max_seq:
+                raise ValueError(
+                    f"prompt bucket {bucket} + {max_new_tokens} new tokens "
+                    f"exceeds max_seq={self.max_seq}")
         return self.sched.submit(prompt, max_new_tokens, eos_token,
                                  seed).req_id
 
@@ -306,6 +433,8 @@ class ContinuousEngine:
         """One engine tick: refill free slots from the queue (bucketed
         prefill per new request), then one decode step for every slot.
         Returns the requests that completed this tick."""
+        if self.paged:
+            return self._step_paged()
         finished = []
         for slot, req in self.sched.fills():
             bucket = C.bucket_for(len(req.prompt), self.buckets)
@@ -365,6 +494,181 @@ class ContinuousEngine:
                     finished.append(done)
         return finished
 
+    # -- paged mode: admission / chunked prefill / decode / speculation -----
+
+    def _can_place(self, req: ServeRequest) -> bool:
+        """Admission gate: enough pages (free + LRU-evictable) to cover the
+        request's whole span.  Conservative — a prefix hit only reduces
+        the fresh-page need."""
+        k = self.spec.spec_k if self.spec else 0
+        need = PG.pages_for(len(req.prompt) + req.max_new_tokens + k,
+                            self.page_size)
+        return self.pages.available() >= need
+
+    def _place(self, slot: int, req: ServeRequest) -> None:
+        """Claim pages for the whole span [0, L + max_new (+ spec_k)),
+        splice any cached prefix in front, and start the prefill cursor
+        after the matched tokens."""
+        L = len(req.prompt)
+        k = self.spec.spec_k if self.spec else 0
+        matched = (self.pages.match_prefix(req.prompt)
+                   if self.prefix_cache else [])
+        n_need = PG.pages_for(L + req.max_new_tokens + k, self.page_size)
+        row = np.zeros(self.slot_pages, np.int32)
+        row[:len(matched)] = matched
+        owned = list(matched)
+        for j in range(len(matched), n_need):
+            pid = self.pages.alloc()
+            row[j] = pid
+            owned.append(pid)
+        self.page_map[slot] = row
+        self._owned[slot] = owned
+        self.cursor[slot] = len(matched) * self.page_size
+        self.plen[slot] = L
+
+    def _release(self, slot: int) -> None:
+        self.pages.release(self._owned[slot])
+        self._owned[slot] = []
+        self.page_map[slot] = 0
+        self.cursor[slot] = -1
+        self.pos[slot] = 0
+
+    def _prefill_tick(self, slot: int) -> Optional[ServeRequest]:
+        """Advance one prefill chunk for ``slot``.  On the final chunk,
+        sample the first token (TTFT), index the prompt's full pages for
+        sharing, and prefill the draft; a 1-token request can complete
+        right here."""
+        req = self.sched.slots[slot]
+        L, cur = int(self.plen[slot]), int(self.cursor[slot])
+        c = self.prefill_chunk or C.bucket_for(L - cur, self.buckets)
+        cl = min(c, L - cur)
+        toks = np.zeros((1, c), np.int32)
+        toks[0, :cl] = req.prompt[cur:cur + cl]
+        last, self._pool = self._span_chunk(
+            self.params, jnp.asarray(toks), self._pool,
+            jnp.asarray([cur], jnp.int32),
+            jnp.asarray(self.page_map[slot:slot + 1]),
+            jnp.asarray([cl], jnp.int32))
+        self.prefill_chunks += 1
+        cur += cl
+        if cur < L:
+            self.cursor[slot] = cur
+            return None
+        tok, key = self._sample1(last, request_key(req.seed))
+        self._keys = self._keys.at[slot].set(key)
+        self.cursor[slot] = -1
+        self.pos[slot] = L
+        self.last_tok[slot] = int(tok)
+        if self.prefix_cache:
+            full = (L - 1) // self.page_size
+            self.pages.register_prefix(
+                req.prompt, [int(p) for p in self.page_map[slot, :full]])
+        if self.spec:
+            self.spec.insert(slot, req.prompt)
+        done = self.sched.started(slot, int(tok))
+        if done is not None:
+            self._release(slot)
+        return done
+
+    def _cow_guard(self, slots: List[int], span: int) -> None:
+        """Before a decode tick writes positions [pos, pos + span), route
+        every logical page FIRST touched this tick through
+        ``PageTable.writable`` — a shared or prefix-indexed page is
+        copy-on-write swapped for a private one.  The engine's own
+        invariants (prefix match capped at full prompt pages, decode
+        pages allocated fresh) make a copy rare, but the gate is what
+        guarantees a shared page is never written in place."""
+        p = self.page_size
+        for s in slots:
+            t = int(self.pos[s])
+            for j in range(-(-t // p), (t + span - 1) // p + 1):
+                pid = int(self.page_map[s, j])
+                if pid == PG.TRASH_PAGE:
+                    continue            # beyond the allocated span
+                new, copy = self.pages.writable(pid)
+                if new != pid:
+                    if copy:
+                        self._pool = PG.copy_pages(
+                            self._pool, jnp.int32(pid), jnp.int32(new))
+                    self.page_map[s, j] = new
+                    own = self._owned[s]
+                    own[own.index(pid)] = new
+
+    def _step_paged(self) -> List[ServeRequest]:
+        """One paged tick: admit while pages last, advance ONE chunk per
+        prefilling slot, then one decode (or speculative) tick for every
+        decoding slot — prefill chunks interleave with decode instead of
+        stalling it."""
+        finished = []
+        for slot, req in self.sched.fills(self._can_place):
+            self._place(slot, req)
+        for slot in [s for s in self.sched.active_slots
+                     if self.cursor[s] >= 0]:
+            done = self._prefill_tick(slot)
+            if done is not None:
+                finished.append(done)
+        dec = [s for s in self.sched.active_slots if self.cursor[s] < 0]
+        if not dec:
+            return finished
+        span = 1 + (self.spec.spec_k if self.spec else 0)
+        self._cow_guard(dec, span)
+        toks = self.last_tok.copy()
+        posv = np.zeros(self.num_slots, np.int32)
+        pmap = np.zeros_like(self.page_map)
+        posv[dec] = self.pos[dec]
+        pmap[dec] = self.page_map[dec]
+        self.ticks += 1
+        self.active_slot_ticks += len(dec)
+        if self.spec:
+            finished.extend(self._spec_tick(dec, toks, posv, pmap))
+            return finished
+        t, self._pool, self._keys = self._decode_paged(
+            self.params, jnp.asarray(toks), self._pool, jnp.asarray(posv),
+            jnp.asarray(pmap), self._keys)
+        t_np = np.asarray(t)
+        for s in dec:
+            self.pos[s] += 1
+            self.last_tok[s] = t_np[s]
+            done = self.sched.token(s, t_np[s])
+            if done is not None:
+                finished.append(done)
+                self._release(s)
+        return finished
+
+    def _spec_tick(self, dec, toks, posv, pmap) -> List[ServeRequest]:
+        """Draft proposes k tokens per slot; target verifies all k+1
+        positions in one span; the longest matching prefix (bonus capped
+        at k, see speculative.accept_greedy) is emitted.  Every emitted
+        token is the target's own argmax — output is exactly plain
+        greedy."""
+        finished = []
+        k = self.spec.spec_k
+        props = self.spec.propose(toks)                     # (B, k)
+        span = np.concatenate([toks[:, None], props], 1)    # (B, k+1)
+        g, self._pool = self._verify(
+            self.params, jnp.asarray(span), self._pool, jnp.asarray(posv),
+            jnp.asarray(pmap))
+        g_np = np.asarray(g)
+        for s in dec:
+            a = accept_greedy(props[s], g_np[s], k)
+            self.spec.record(k, a)
+            req = self.sched.slots[s]
+            e = min(a + 1, k, req.max_new_tokens - len(req.tokens))
+            e = max(e, 1)
+            used, done = 0, None
+            for tok in g_np[s, :e]:
+                used += 1
+                done = self.sched.token(s, int(tok))
+                if done is not None:
+                    break
+            self.pos[s] += used
+            self.last_tok[s] = int(g_np[s, used - 1])
+            self.spec.commit(s, used)
+            if done is not None:
+                finished.append(done)
+                self._release(s)
+        return finished
+
     def drain(self) -> List[ServeRequest]:
         """Run steps until queue and slots are empty; returns everything
         that finished during the drain (in completion order)."""
@@ -378,6 +682,8 @@ class ContinuousEngine:
         by serving dummy requests, then reset the scheduler/metrics.  After
         this, slot eviction/refill at ANY prompt length triggers zero
         recompilations (see compile_stats)."""
+        if self.paged:
+            return self._warmup_paged()
         for b in self.buckets:
             new = min(self.tick_chunk + 2, self.max_seq - b + 1)
             self.submit(np.zeros(b, np.int32), max_new_tokens=new)
@@ -397,12 +703,45 @@ class ContinuousEngine:
         self.ticks = self.active_slot_ticks = 0
         return self.compile_stats()
 
+    def _warmup_paged(self) -> dict:
+        """Compile the full paged program set (every chunk shape + decode
+        + sampling + speculation) by serving dummy requests, then reset
+        the scheduler, the page table and all metrics.  Prefix matching is
+        disabled during the warm drain so every chunk-shape bucket really
+        compiles (a dummy-prefix hit would skip a shape)."""
+        k = self.spec.spec_k if self.spec else 0
+        prefix, self.prefix_cache = self.prefix_cache, False
+        lens = {b for b in self.buckets if b + 2 + k <= self.max_seq}
+        for n in sorted(lens):
+            self.submit(np.zeros(n, np.int32), max_new_tokens=2)
+        self.drain()
+        self.prefix_cache = prefix
+        self.pages = PG.PageTable(self.num_pages, self.page_size)
+        self.page_map[:] = 0
+        self._owned = [[] for _ in range(self.num_slots)]
+        self.cursor[:] = -1
+        self.pos[:] = 0
+        self.last_tok[:] = 0
+        self.sched = Scheduler(self.num_slots)
+        self.ticks = self.active_slot_ticks = self.prefill_chunks = 0
+        if self.spec:
+            self.spec.proposed = self.spec.accepted = 0
+        return self.compile_stats()
+
     # -- metrics ------------------------------------------------------------
 
     def compile_stats(self) -> dict:
         """jit compilation-cache sizes: one decode entry, one multi-tick
         chunk entry, one insert entry per warmed prompt bucket.  Unchanged
         counts across a serving run == zero recompilations."""
+        if self.paged:
+            s = {"decode_compiles": self._decode_paged._cache_size(),
+                 "span_compiles": self._span_chunk._cache_size(),
+                 "sample_compiles": self._sample1._cache_size(),
+                 "verify_compiles": self._verify._cache_size()}
+            if self.spec:
+                s.update(self.spec.compile_stats())
+            return s
         return {"decode_compiles": self._decode._cache_size(),
                 "decode_chunk_compiles": self._decode_chunk._cache_size(),
                 "insert_compiles": self._insert._cache_size()}
@@ -414,7 +753,9 @@ class ContinuousEngine:
             "slot_utilization": (round(
                 self.active_slot_ticks / (self.ticks * self.num_slots), 3)
                 if self.ticks else 0.0),
-            "slot_cache_bytes": C.slot_bytes(self._caches, self.num_slots),
+            "slot_cache_bytes": (
+                PG.pool_bytes(self._pool) // self.num_slots if self.paged
+                else C.slot_bytes(self._caches, self.num_slots)),
             "boundary_bytes_per_tok": (
                 round(boundary_wire_bytes_per_token(
                     self.policy, self.cfg.d_model,
@@ -424,5 +765,11 @@ class ContinuousEngine:
                 if self.compress else 0.0),
             "sampling": self.sampling.name,
         })
+        if self.paged:
+            s["prefill_chunks"] = self.prefill_chunks
+            s["prefill_chunk"] = self.prefill_chunk or 0
+            s.update(self.pages.stats())
+            if self.spec:
+                s.update(self.spec.stats())
         s.update(self.compile_stats())
         return s

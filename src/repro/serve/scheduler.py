@@ -87,13 +87,20 @@ class Scheduler:
         self.queue.append(req)
         return req
 
-    def fills(self) -> List[Tuple[int, ServeRequest]]:
-        """Pop queued requests into free slots (FIFO, lowest slot first)."""
+    def fills(self, can_place=None) -> List[Tuple[int, ServeRequest]]:
+        """Pop queued requests into free slots (FIFO, lowest slot first).
+
+        ``can_place(req) -> bool``: optional admission gate (e.g. "enough
+        KV pages free").  Admission stops at the first non-placeable
+        request — later queue entries never jump the FIFO order.
+        """
         placements = []
         for slot in range(self.num_slots):
             if not self.queue:
                 break
             if self.slots[slot] is None:
+                if can_place is not None and not can_place(self.queue[0]):
+                    break
                 req = self.queue.popleft()
                 req.slot = slot
                 self.slots[slot] = req

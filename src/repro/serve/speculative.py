@@ -1,0 +1,180 @@
+"""Speculative decoding: draft proposer + greedy acceptance.
+
+A small DRAFT model proposes ``k`` greedy tokens per tick; the TARGET
+model scores all ``k + 1`` positions in ONE batched ``decode_span``
+forward and accepts the longest matching prefix.  Every emitted token is
+the target's own greedy argmax, so the output is EXACTLY what plain
+per-token greedy decode would produce — for any draft, good or bad; the
+draft only sets how many target positions each forward amortises.
+
+Compression semantics (paper finding F3): a draft trained with boundary
+compression must also SERVE compressed, so the draft carries its own
+CompressionPolicy and packs its stage cuts through the same wire-codec
+registry as the target.  The target's verification span packs PER
+(request, token) (``boundary_wire_eval_tokens``) — payload-identical to a
+T=1 decode tick — which is what keeps accepted-token numerics bit-equal
+to non-speculative decode.
+
+The draft keeps the PR-4 slab cache (per-slot contiguous rows, bucketed
+left-padded prefill) even when the target is paged: draft state is tiny
+and never prefix-shared.  After each round the draft "rolls back" by pos
+arithmetic only — rejected positions hold garbage K/V that the next
+propose overwrites before it ever becomes valid under the position mask.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import CompressionPolicy, NO_POLICY
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.serve import cache as C
+
+
+def accept_greedy(proposals: np.ndarray, target_greedy: np.ndarray,
+                  k: int) -> int:
+    """Accepted-token count for one slot.
+
+    ``proposals``: (k,) draft tokens d_1..d_k; ``target_greedy``: (k+1,)
+    the target's argmax at every span position — g_j is the target's
+    next token after seeing ...x0, d_1..d_j.  Returns ``a`` = longest
+    prefix with d_{j+1} == g_j; the emitted tokens are g_0..g_{e-1} with
+    ``e = min(a + 1, k)``.
+
+    The bonus token (e = a + 1) is DROPPED when every proposal is
+    accepted: capping e at k keeps the draft cache gap-free — position
+    ``pd + e - 1`` was always written during propose, so the next round
+    needs no backfill forward.
+    """
+    a = 0
+    while a < k and int(proposals[a]) == int(target_greedy[a]):
+        a += 1
+    return a
+
+
+class DraftWorker:
+    """Per-slot draft state + the two draft programs (insert, propose).
+
+    Mirrors the legacy ContinuousEngine slab path: bucketed left-padded
+    prefill into a per-slot row, then greedy multi-step decode via one
+    jit'd ``lax.scan``.  All bookkeeping (pos / pad) is host-side numpy;
+    rollback after a verification round is pure position arithmetic.
+    """
+
+    def __init__(self, params, cfg: ModelConfig,
+                 policy: CompressionPolicy = NO_POLICY,
+                 compress: bool = True, num_slots: int = 4,
+                 max_seq: int = 256, buckets: Optional[List[int]] = None,
+                 spec_k: int = 4):
+        from repro.serve.engine import left_pad_unsupported, _make_batch
+        bad = left_pad_unsupported(cfg)
+        if bad:
+            raise ValueError(
+                f"draft arch {cfg.arch_id}: speculative proposing needs "
+                f"maskable left-padding; {sorted(bad)} supports none")
+        if spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1: {spec_k}")
+        self.params, self.cfg, self.policy = params, cfg, policy
+        self.compress, self.spec_k = compress, spec_k
+        self.num_slots, self.max_seq = num_slots, max_seq
+        self.buckets = buckets or C.prompt_buckets(max_seq // 2)
+        self._caches = C.init_slot_caches(transformer, cfg, num_slots,
+                                          max_seq)
+        self.pos = np.zeros(num_slots, np.int32)
+        self.pad = np.zeros(num_slots, np.int32)
+        self.proposed = 0
+        self.accepted = 0
+        cfg_, pol_, k_ = cfg, policy, spec_k
+
+        def _insert(params, tokens, pad, caches, slot):
+            """Bucketed draft prefill spliced into ``slot``; the prefill
+            logits are discarded — the first propose round re-feeds the
+            target's first emitted token."""
+            _, one = transformer.prefill(
+                params, _make_batch(cfg_, tokens), cfg_, pol_,
+                cache_len=max_seq, compress=compress, pad_len=pad,
+                wire=True)
+            return C.write_slot(caches, one, slot)
+
+        def _propose(params, last, caches, pos, pad):
+            """``spec_k`` greedy draft steps for every slot in one scan;
+            returns (B, k) proposals d_1..d_k.  Inactive slots decode
+            garbage into their own rows only (invalid under the position
+            mask, overwritten on refill)."""
+            def body(carry, _):
+                tok, caches, pos = carry
+                logits, caches = transformer.decode_step(
+                    params, tok, caches, pos, cfg_, pol_,
+                    compress=compress, pad_len=pad, wire=True)
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return (tok, caches, pos + 1), tok
+            (_, caches, _), hist = jax.lax.scan(
+                body, (last, caches, pos), None, length=k_)
+            return jnp.transpose(hist), caches          # (B, k)
+
+        self._insert = jax.jit(_insert, donate_argnums=(3,))
+        self._propose = jax.jit(_propose, donate_argnums=(2,))
+
+    def insert(self, slot: int, prompt: np.ndarray) -> None:
+        """Prefill ``prompt`` into the draft row for ``slot``."""
+        bucket = C.bucket_for(len(prompt), self.buckets)
+        if bucket + self.spec_k >= self.max_seq:
+            raise ValueError(
+                f"draft bucket {bucket} + spec_k {self.spec_k} exceeds "
+                f"draft max_seq={self.max_seq}")
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, bucket - len(prompt):] = prompt
+        pad = bucket - len(prompt)
+        self._caches = self._insert(
+            self.params, jnp.asarray(toks), jnp.asarray([pad], jnp.int32),
+            self._caches, jnp.int32(slot))
+        self.pos[slot] = bucket
+        self.pad[slot] = pad
+
+    def propose(self, last_tok: np.ndarray) -> np.ndarray:
+        """(B, k) greedy proposals continuing each slot from ``last_tok``.
+        Does NOT advance ``self.pos`` — the engine commits the accepted
+        count per slot via :meth:`commit`."""
+        props, self._caches = self._propose(
+            self.params, jnp.asarray(last_tok, jnp.int32), self._caches,
+            jnp.asarray(self.pos), jnp.asarray(self.pad))
+        return np.asarray(props)
+
+    def commit(self, slot: int, emitted: int) -> None:
+        """Advance ``slot`` past its ``emitted`` accepted tokens.  With
+        ``e <= k`` (bonus capped, see :func:`accept_greedy`) position
+        ``pos + e - 1`` was written during propose with the right token,
+        so the draft cache is gap-free; positions beyond hold garbage the
+        next propose overwrites (write-before-attend)."""
+        self.pos[slot] += emitted
+
+    def record(self, proposed: int, accepted: int) -> None:
+        self.proposed += proposed
+        self.accepted += accepted
+
+    def warm(self) -> None:
+        """Compile every draft program (insert per bucket + propose)."""
+        for b in self.buckets:
+            if b + self.spec_k < self.max_seq:
+                self.insert(0, np.zeros(b, np.int32))
+        self.propose(np.zeros(self.num_slots, np.int32))
+        self.pos[:] = 0
+        self.pad[:] = 0
+
+    def stats(self) -> dict:
+        return {"spec_k": self.spec_k,
+                "draft_arch": self.cfg.arch_id,
+                "proposed": self.proposed,
+                "accepted": self.accepted,
+                "acceptance_rate": (round(self.accepted / self.proposed, 3)
+                                    if self.proposed else 0.0),
+                "draft_cache_bytes": C.slot_bytes(self._caches,
+                                                  self.num_slots)}
+
+    def compile_stats(self) -> dict:
+        return {"draft_insert_compiles": self._insert._cache_size(),
+                "propose_compiles": self._propose._cache_size()}

@@ -377,3 +377,232 @@ class TestEngineGuards:
                     "warm_s"):
             assert key in probe and probe[key] >= 0
         assert probe["decode_tok_per_s"] > 0
+
+
+class TestPagedEngine:
+    """Prefix-sharing paged KV + chunked prefill (serve/pages.py wired
+    through ContinuousEngine paged mode)."""
+
+    def _outs(self, eng, prompts, news, eos=None):
+        for p, n in zip(prompts, news):
+            eng.submit(p, max_new_tokens=n, eos_token=eos)
+        return {r.req_id: r.out.copy() for r in eng.drain()}
+
+    def test_paged_solo_identity_prefix_on_and_off(self):
+        """Batched paged serving == solo paged serving, with the prefix
+        cache both enabled and disabled."""
+        cfg = get("gpt2-small", smoke=True)
+        params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.RandomState(7)
+        lens, news = [5, 19, 7, 30, 12, 3], [6, 3, 9, 4, 1, 7]
+        prompts = [rng.randint(1, cfg.vocab_size, l).astype(np.int32)
+                   for l in lens]
+        for prefix in (True, False):
+            kw = dict(prefix_cache=prefix, prefill_chunk=8, page_size=8)
+            batched = self._outs(_engine(cfg, params, **kw), prompts, news)
+            solo_eng = _engine(cfg, params, **kw)
+            for i, (p, n) in enumerate(zip(prompts, news)):
+                solo_eng.submit(p, max_new_tokens=n)
+                (solo,) = solo_eng.drain()
+                np.testing.assert_array_equal(
+                    solo.out, batched[i],
+                    err_msg=f"req {i} differs batched vs alone "
+                            f"(prefix_cache={prefix})")
+
+    def test_chunk_size_never_changes_output(self):
+        """Per-(request, token) wire packing makes the output independent
+        of prefill chunking — chunked, whole-prompt and prefix-cached
+        ingestion all produce the same tokens."""
+        cfg = get("gpt2-small", smoke=True)
+        params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.RandomState(1)
+        prompts = [rng.randint(1, cfg.vocab_size, l).astype(np.int32)
+                   for l in (5, 23, 17, 30)]
+        ref = None
+        for chunk, prefix in ((None, True), (4, False), (8, True),
+                              (16, False)):
+            eng = _engine(cfg, params, num_slots=2, prefix_cache=prefix,
+                          prefill_chunk=chunk)
+            out = self._outs(eng, prompts, [6] * 4)
+            if ref is None:
+                ref = out
+            for i in ref:
+                np.testing.assert_array_equal(
+                    ref[i], out[i],
+                    err_msg=f"chunk={chunk} prefix={prefix} changed req "
+                            f"{i}'s output")
+
+    def test_prefix_hits_reuse_pages_and_keep_output(self):
+        """Requests sharing a prompt prefix skip its prefill (counted in
+        prefix_hits/prefix_hit_tokens) and still produce exactly the
+        cold output."""
+        cfg = get("gpt2-small", smoke=True)
+        params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.RandomState(2)
+        shared = rng.randint(1, cfg.vocab_size, 24).astype(np.int32)
+        prompts = [np.concatenate([shared, rng.randint(
+            1, cfg.vocab_size, n).astype(np.int32)]) for n in (5, 9, 3)]
+        cold = {}
+        for i, p in enumerate(prompts):
+            eng = _engine(cfg, params, prefix_cache=True, prefill_chunk=8,
+                          page_size=8)
+            eng.submit(p, max_new_tokens=6)
+            cold[i] = eng.drain()[0].out.copy()
+        eng = _engine(cfg, params, num_slots=2, prefix_cache=True,
+                      prefill_chunk=8, page_size=8)
+        warm = self._outs(eng, prompts, [6] * 3)
+        warm2 = self._outs(eng, prompts, [6] * 3)
+        for i in cold:
+            np.testing.assert_array_equal(cold[i], warm[i])
+            np.testing.assert_array_equal(cold[i], warm2[i + 3])
+        s = eng.stats()
+        assert s["prefix_hits"] >= 3              # every resubmit hits
+        assert s["prefix_hit_tokens"] >= 3 * 16   # >= 2 shared pages each
+        eng.pages.check_invariants()
+
+    def test_tight_pool_backpressure_same_output(self):
+        """A pool far smaller than slots x max_seq forces admission
+        waits and LRU eviction — outputs must not change."""
+        cfg = get("gpt2-small", smoke=True)
+        params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.RandomState(3)
+        prompts = [rng.randint(1, cfg.vocab_size,
+                               rng.randint(3, 30)).astype(np.int32)
+                   for _ in range(8)]
+        kw = dict(num_slots=2, max_seq=64, prefix_cache=True,
+                  prefill_chunk=8, page_size=8)
+        big = self._outs(_engine(cfg, params, **kw), prompts, [6] * 8)
+        tight_eng = _engine(cfg, params, num_pages=12, **kw)
+        tight = self._outs(tight_eng, prompts, [6] * 8)
+        for i in big:
+            np.testing.assert_array_equal(big[i], tight[i])
+        tight_eng.pages.check_invariants()
+        assert tight_eng.stats()["active_pages"] == 0
+
+    def test_paged_zero_recompiles(self):
+        """Warmup compiles the full paged program set; a mixed workload
+        with evictions, refills and prefix hits adds ZERO jit entries."""
+        cfg = get("gpt2-small", smoke=True)
+        params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        eng = _engine(cfg, params, prefix_cache=True, prefill_chunk=8,
+                      page_size=8)
+        warm = eng.warmup()
+        assert warm["decode_compiles"] == 1
+        assert warm["span_compiles"] == 1         # one fixed chunk shape
+        rng = np.random.RandomState(0)
+        prompts = [rng.randint(1, cfg.vocab_size, l).astype(np.int32)
+                   for l in (3, 40, 8, 22, 15, 5, 33, 11, 7, 19)]
+        # duplicates of prompts with >= 1 full page (len > page_size=8)
+        # guarantee prefix hits inside the measured window
+        prompts += [prompts[1], prompts[3], prompts[6]]
+        self._outs(eng, prompts, [4, 2, 9, 1, 6, 3, 8, 5, 2, 7, 3, 4, 5])
+        assert eng.compile_stats() == warm, \
+            "paged eviction/refill/prefix-hit recompiled a program"
+        assert eng.stats()["prefix_hits"] >= 3
+
+    def test_window_arch_rejected(self):
+        cfg = get("mixtral-8x7b", smoke=True)
+        params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        with pytest.raises(ValueError, match="sliding-window"):
+            _engine(cfg, params, prefix_cache=True)
+
+
+class TestSpeculativeDecoding:
+    """Draft-proposed, target-verified greedy decoding: output must be
+    EXACTLY the non-speculative greedy stream — for any draft."""
+
+    def _pair(self, arch, spec_k=3, draft_seed=9, **kw):
+        cfg = get(arch, smoke=True)
+        params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        draft = transformer.init_params(jax.random.PRNGKey(draft_seed),
+                                        cfg)
+        spec = _engine(cfg, params, draft_params=draft, draft_cfg=cfg,
+                       draft_policy=TOP10, spec_k=spec_k, **kw)
+        # the non-speculative reference must also be PAGED: ingestion mode
+        # sets the wire-packing granularity (chunk size itself does not —
+        # see test_chunk_size_never_changes_output)
+        plain = _engine(cfg, params, prefix_cache=True,
+                        prefill_chunk=kw.get("prefill_chunk"))
+        return cfg, spec, plain
+
+    def _assert_equal(self, cfg, spec, plain, lens, news, eos=None):
+        rng = np.random.RandomState(5)
+        prompts = [rng.randint(1, cfg.vocab_size, l).astype(np.int32)
+                   for l in lens]
+        for p, n in zip(prompts, news):
+            spec.submit(p, max_new_tokens=n, eos_token=eos)
+            plain.submit(p, max_new_tokens=n, eos_token=eos)
+        a = {r.req_id: r.out for r in spec.drain()}
+        b = {r.req_id: r.out for r in plain.drain()}
+        for i in b:
+            np.testing.assert_array_equal(
+                a[i], b[i], err_msg=f"speculative output differs from "
+                                    f"plain greedy for req {i}")
+
+    def test_spec_equals_greedy_gpt2(self):
+        cfg, spec, plain = self._pair("gpt2-small", prefix_cache=True,
+                                      prefill_chunk=8)
+        self._assert_equal(cfg, spec, plain, [5, 19, 7, 30, 12],
+                           [6, 3, 9, 1, 8])
+        st = spec.stats()
+        assert st["proposed"] > 0 and 0 <= st["acceptance_rate"] <= 1
+
+    def test_spec_equals_greedy_granite(self):
+        cfg, spec, plain = self._pair("granite-8b", spec_k=2)
+        self._assert_equal(cfg, spec, plain, [4, 17, 11], [5, 2, 7])
+
+    def test_perfect_draft_still_exact(self):
+        """Draft == target params: high acceptance, same output."""
+        cfg = get("gpt2-small", smoke=True)
+        params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        spec = _engine(cfg, params, draft_params=params, draft_cfg=cfg,
+                       draft_policy=TOP10, spec_k=3)
+        plain = _engine(cfg, params, prefix_cache=True)
+        self._assert_equal(cfg, spec, plain, [5, 12, 25], [8, 8, 8])
+        assert spec.stats()["acceptance_rate"] > 0.2
+
+    def test_spec_with_eos_truncates_identically(self):
+        cfg, spec, plain = self._pair("gpt2-small")
+        # find an eos mid-stream from a plain run, then replay both
+        probe = _engine(cfg, transformer.init_params(
+            jax.random.PRNGKey(0), cfg), prefix_cache=True)
+        rng = np.random.RandomState(5)
+        p0 = rng.randint(1, cfg.vocab_size, 5).astype(np.int32)
+        probe.submit(p0, max_new_tokens=6)
+        eos = int(probe.drain()[0].out[3])
+        self._assert_equal(cfg, spec, plain, [5, 19, 7], [6, 9, 8],
+                           eos=eos)
+
+    def test_spec_zero_recompiles(self):
+        cfg = get("gpt2-small", smoke=True)
+        params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        draft = transformer.init_params(jax.random.PRNGKey(9), cfg)
+        eng = _engine(cfg, params, prefix_cache=True, prefill_chunk=8,
+                      draft_params=draft, draft_cfg=cfg,
+                      draft_policy=TOP10, spec_k=3)
+        warm = eng.warmup()
+        assert warm["verify_compiles"] == 1
+        assert warm["propose_compiles"] == 1
+        rng = np.random.RandomState(0)
+        for l, n in zip((3, 25, 8, 14, 30), (4, 7, 2, 9, 5)):
+            eng.submit(rng.randint(1, cfg.vocab_size, l).astype(np.int32),
+                       max_new_tokens=n)
+        eng.drain()
+        assert eng.compile_stats() == warm
+
+    def test_spec_requires_greedy(self):
+        cfg = get("gpt2-small", smoke=True)
+        params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        with pytest.raises(ValueError, match="greedy"):
+            _engine(cfg, params, draft_params=params, draft_cfg=cfg,
+                    sampling=SamplingConfig(temperature=1.0))
+
+    def test_accept_greedy_semantics(self):
+        from repro.serve.speculative import accept_greedy
+        props = np.asarray([7, 8, 9])
+        # target agrees on 7, 8 then diverges
+        assert accept_greedy(props, np.asarray([7, 8, 5, 1]), 3) == 2
+        # full agreement: a == k (emission then caps at k)
+        assert accept_greedy(props, np.asarray([7, 8, 9, 4]), 3) == 3
+        # immediate divergence
+        assert accept_greedy(props, np.asarray([1, 2, 3, 4]), 3) == 0

@@ -1,0 +1,255 @@
+"""Page-table invariants (serve/pages.py): property tests over random
+alloc / share / CoW / release sequences, plus the device-pool scatter
+semantics the paged engine builds on.
+
+The load-bearing invariants:
+  * no page leaks — every page is always in exactly ONE of
+    {free, LRU-cached, active (rc > 0)};
+  * a refcount hits zero exactly at its release (free or park, never
+    early, never negative);
+  * a shared or prefix-indexed page is never handed out for in-place
+    writing (``writable`` copy-on-writes it);
+  * a prefix-hash collision falls back to full token-id comparison —
+    correctness never rests on the hash.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from conftest import hypothesis_or_stubs
+given, settings, st = hypothesis_or_stubs()
+
+from repro.serve.pages import (PagePoolFull, PageTable, TRASH_PAGE,
+                               copy_pages, init_page_pool, pages_for)
+
+
+def _prompt(rng, n):
+    return rng.randint(0, 1000, n).astype(np.int32)
+
+
+class TestPageTableBasics:
+    def test_alloc_release_roundtrip(self):
+        pt = PageTable(8, 4)
+        pids = [pt.alloc() for _ in range(7)]
+        assert TRASH_PAGE not in pids
+        assert len(set(pids)) == 7
+        with pytest.raises(PagePoolFull):
+            pt.alloc()
+        pt.release(pids)
+        pt.check_invariants()
+        assert pt.available() == 7
+
+    def test_release_below_zero_raises(self):
+        pt = PageTable(4, 4)
+        pid = pt.alloc()
+        pt.release([pid])
+        with pytest.raises(ValueError):
+            pt.release([pid])
+
+    def test_trash_release_is_noop(self):
+        pt = PageTable(4, 4)
+        pt.release([TRASH_PAGE])
+        pt.check_invariants()
+
+    def test_match_increfs_and_caps_at_full_pages(self):
+        """A prompt's LAST token is never shareable: only full pages of
+        tokens[:-1] are matched, so the chunk that produces the first
+        generated token always recomputes."""
+        rng = np.random.RandomState(0)
+        pt = PageTable(16, 4)
+        prompt = _prompt(rng, 13)                 # 3 full pages of [:-1]
+        pids = [pt.alloc() for _ in range(4)]
+        pt.register_prefix(prompt, pids)
+        m = pt.match_prefix(prompt)
+        assert m == pids[:3]
+        assert all(pt.ref[p] == 2 for p in m)
+        # exact multiple: len-1 divisible by page -> still capped
+        p2 = _prompt(rng, 9)                      # (9-1)//4 == 2 pages
+        pidsb = [pt.alloc() for _ in range(3)]
+        pt.register_prefix(p2, pidsb)
+        assert len(pt.match_prefix(p2)) == 2
+        pt.check_invariants()
+
+    def test_released_indexed_pages_park_in_lru_then_evict(self):
+        rng = np.random.RandomState(1)
+        pt = PageTable(6, 4)                      # 5 usable pages
+        prompt = _prompt(rng, 9)
+        pids = [pt.alloc() for _ in range(3)]
+        pt.register_prefix(prompt, pids)
+        pt.release(pids)
+        assert pt.cached_pages() == 2             # the 2 full pages park
+        assert pt.available() == 5
+        # exhaust the free list; the next allocs evict from the LRU
+        got = [pt.alloc() for _ in range(5)]
+        assert len(set(got)) == 5
+        pt.check_invariants()
+        assert pt.match_prefix(prompt) == []      # index gone with eviction
+
+    def test_writable_cow_on_shared_and_indexed(self):
+        rng = np.random.RandomState(2)
+        pt = PageTable(8, 4)
+        prompt = _prompt(rng, 9)
+        pids = [pt.alloc() for _ in range(3)]
+        pt.register_prefix(prompt, pids)
+        # private unindexed page: in place
+        assert pt.writable(pids[2]) == (pids[2], False)
+        # indexed page (rc 1): CoW even with a single user
+        new, copy = pt.writable(pids[0])
+        assert copy and new != pids[0]
+        # shared page (rc 2): CoW
+        m = pt.match_prefix(prompt)               # re-incref pids[1]
+        assert pids[1] in m
+        new2, copy2 = pt.writable(pids[1])
+        assert copy2 and new2 != pids[1]
+        assert pt.cow_copies == 2
+        pt.check_invariants()
+
+    def test_collision_falls_back_to_token_compare(self):
+        """With a deliberately constant hash every chain digest collides;
+        matching must still stop at the first token-id mismatch."""
+        rng = np.random.RandomState(3)
+        pt = PageTable(16, 4, hash_fn=lambda parent, chunk: b"same")
+        a, b = _prompt(rng, 9), _prompt(rng, 9)
+        assert not np.array_equal(a[:4], b[:4])
+        pids = [pt.alloc() for _ in range(3)]
+        pt.register_prefix(a, pids)
+        assert pt.match_prefix(b) == []           # digest hit, tokens differ
+        # only page 0 could be indexed (page 1's digest collides with it),
+        # and matching it requires the token-id compare to pass
+        assert pt.match_prefix(a) == pids[:1]
+        pt.check_invariants()
+
+
+class TestPageTableProperties:
+    """Random operation sequences — the ISSUE's property checklist."""
+
+    @given(st.integers(0, 500), st.integers(2, 6), st.integers(1, 8))
+    @settings(max_examples=40, deadline=None)
+    def test_no_leaks_under_random_ops(self, seed, log_pages, page_size):
+        rng = np.random.RandomState(seed)
+        num_pages = 2 ** log_pages
+        pt = PageTable(num_pages, page_size)
+        held = []                                 # lists of owned page ids
+        prompts = [_prompt(rng, rng.randint(1, 4 * page_size))
+                   for _ in range(4)]
+        for _ in range(60):
+            op = rng.randint(4)
+            if op == 0:                           # alloc a span
+                try:
+                    held.append([pt.alloc()
+                                 for _ in range(rng.randint(1, 4))])
+                except PagePoolFull:
+                    pass
+            elif op == 1 and held:                # release a span
+                pt.release(held.pop(rng.randint(len(held))))
+            elif op == 2:                         # match + register
+                p = prompts[rng.randint(len(prompts))]
+                m = pt.match_prefix(p)
+                need = pages_for(len(p), page_size) - len(m)
+                try:
+                    fresh = [pt.alloc() for _ in range(need)]
+                except PagePoolFull:
+                    pt.release(m)
+                    continue
+                pt.register_prefix(p, m + fresh)
+                held.append(m + fresh)
+            elif op == 3 and held:                # CoW a random held page
+                span = held[rng.randint(len(held))]
+                i = rng.randint(len(span))
+                new, _copy = pt.writable(span[i])
+                span[i] = new
+            pt.check_invariants()
+        for span in held:
+            pt.release(span)
+        pt.check_invariants()
+        # every non-indexed page must be back on the free list
+        assert pt.active_pages() == 0
+        assert pt.available() == num_pages - 1
+
+    @given(st.integers(0, 500))
+    @settings(max_examples=25, deadline=None)
+    def test_refcount_zero_exactly_at_last_release(self, seed):
+        rng = np.random.RandomState(seed)
+        pt = PageTable(32, 4)
+        prompt = _prompt(rng, 4 * rng.randint(2, 5) + 1)
+        n = pages_for(len(prompt), 4)
+        base = [pt.alloc() for _ in range(n)]
+        pt.register_prefix(prompt, base)
+        users = [base]
+        for _ in range(rng.randint(1, 4)):
+            m = pt.match_prefix(prompt)
+            users.append(m + [pt.alloc() for _ in range(n - len(m))])
+        full = (len(prompt) - 1) // 4
+        shared = base[:full]
+        expect = len(users)
+        for i, span in enumerate(users):
+            for pid in shared:
+                assert pt.ref[pid] == expect - i
+            pt.release(span)
+            pt.check_invariants()
+        for pid in shared:                        # parked, not freed
+            assert pt.ref[pid] == 0
+            assert pid in pt._lru
+
+    @given(st.integers(0, 500))
+    @settings(max_examples=25, deadline=None)
+    def test_shared_page_never_handed_out_writable(self, seed):
+        rng = np.random.RandomState(seed)
+        pt = PageTable(64, 8)
+        prompt = _prompt(rng, rng.randint(9, 40))
+        n = pages_for(len(prompt), 8)
+        base = [pt.alloc() for _ in range(n)]
+        pt.register_prefix(prompt, base)
+        m = pt.match_prefix(prompt)
+        spans = [base, m + [pt.alloc() for _ in range(n - len(m))]]
+        for span in spans:
+            for i, pid in enumerate(span):
+                was_shared = pt.shared(pid)
+                new, copy = pt.writable(pid)
+                # a shared/indexed page is never returned in place, and
+                # the returned page has no other users and no index entry
+                assert copy == (new != pid) == was_shared
+                assert pt.ref[new] == 1 and new not in pt._meta
+                span[i] = new
+                pt.check_invariants()
+        for span in spans:
+            pt.release(span)
+        pt.check_invariants()
+
+
+class TestDevicePool:
+    def test_pool_scatter_respects_page_map(self):
+        """Writes land in the mapped physical page; a trash-mapped row
+        touches page 0 only."""
+        pool = {"k": jnp.zeros((1, 5, 4, 2, 3)),
+                "v": jnp.zeros((1, 5, 4, 2, 3))}
+        k = pool["k"][0]
+        page_map = jnp.asarray([[2, 3]])
+        wpos = jnp.asarray([[4]])                 # logical page 1, offset 0
+        phys = jnp.take_along_axis(page_map, wpos // 4, axis=1)
+        knew = k.at[phys, wpos % 4].set(1.0)
+        assert float(knew[3, 0].sum()) > 0
+        assert float(knew[2].sum()) == 0 and float(knew[0].sum()) == 0
+
+    def test_copy_pages_copies_every_leaf(self):
+        pool = {"b0": {"k": jnp.arange(2 * 4 * 3 * 2, dtype=jnp.float32)
+                       .reshape(2, 4, 3, 2)}}
+        out = copy_pages(pool, jnp.int32(1), jnp.int32(3))
+        np.testing.assert_array_equal(np.asarray(out["b0"]["k"][:, 3]),
+                                      np.asarray(pool["b0"]["k"][:, 1]))
+        np.testing.assert_array_equal(np.asarray(out["b0"]["k"][:, :3]),
+                                      np.asarray(pool["b0"]["k"][:, :3]))
+
+    def test_init_page_pool_rejects_window_archs(self):
+        from repro.configs.registry import get
+        from repro.models import transformer
+        cfg = get("mixtral-8x7b", smoke=True)
+        assert cfg.window is not None
+        with pytest.raises(ValueError, match="sliding-window"):
+            init_page_pool(transformer, cfg, 8, 4)
+
+    def test_pages_for(self):
+        assert pages_for(1, 8) == 1
+        assert pages_for(8, 8) == 1
+        assert pages_for(9, 8) == 2
