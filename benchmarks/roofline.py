@@ -134,7 +134,20 @@ def fmt_codecs(bench: dict) -> str:
              "|" + "---|" * 9]
     rows = (bench.get("codecs", []) + bench.get("framing", [])
             + bench.get("dp_decode_sum", []))
+    if not rows:
+        raise SystemExit(
+            "codec_bench.json has no rows under any of the sections the "
+            "codec table reads ('codecs', 'framing', 'dp_decode_sum'); "
+            f"sections present: {sorted(bench) or '(none)'} — regenerate "
+            "with: PYTHONPATH=src python benchmarks/codec_bench.py")
     for r in rows:
+        absent = ({"name", "jnp_gbps", "pallas_gbps", "pallas_over_jnp"}
+                  - set(r))
+        if absent:
+            raise SystemExit(
+                f"codec_bench row {r.get('name', '?')!r} lacks keys "
+                f"{sorted(absent)} — a stale results file; regenerate "
+                "with: PYTHONPATH=src python benchmarks/codec_bench.py")
         dense = r.get("dense_bytes") or r.get("buffer_bytes") or 0
         wire = (r.get("wire_bytes_pallas") or r.get("buffer_bytes")
                 or (r.get("hop_buffer_bytes", 0) * r.get("dp", 0)) or dense)
@@ -166,8 +179,17 @@ def main(argv=None):
         import os
         path = args.jsons[0] if args.jsons else os.path.join(
             os.path.dirname(__file__), "results", "codec_bench.json")
-        with open(path) as f:
-            table = fmt_codecs(json.load(f))
+        try:
+            with open(path) as f:
+                bench = json.load(f)
+        except FileNotFoundError:
+            ap.error(f"{path}: no codec-bench results file — generate it "
+                     "with: PYTHONPATH=src python benchmarks/codec_bench.py"
+                     " (or pass a results JSON as the positional arg)")
+        except json.JSONDecodeError as e:
+            ap.error(f"{path}: not valid JSON ({e}) — regenerate with: "
+                     "PYTHONPATH=src python benchmarks/codec_bench.py")
+        table = fmt_codecs(bench)
         print(table)
         if args.md:
             with open(args.md, "w") as f:

@@ -133,6 +133,16 @@ class CompressionPolicy:
     def num_boundaries(self) -> int:
         return max(0, self.num_stages - 1)
 
+    @property
+    def name(self) -> str:
+        """Stable identity of the resolved plan — what the closed loop
+        compares across epochs to detect a codec flip (train/loop.py)."""
+        if not self.overrides:
+            return f"{self.num_stages}x({self.boundary.name})"
+        cuts = ",".join(f"{i}:({self.at(i).name})"
+                        for i in range(self.num_boundaries))
+        return f"{self.num_stages}x[{cuts}]"
+
     def at(self, i: int) -> BoundaryPolicy:
         for j, p in self.overrides:
             if j == i:
@@ -176,10 +186,16 @@ class PolicyRule:
       size      : per-example element count of the boundary tensor
                   (``prod(feat_shape)`` — what the wire cost scales with);
       depth     : the boundary index (0 = the cut after the first stage);
-      direction : "fw" (activations) or "bw" (activation-gradients).
+      direction : "fw" (activations) or "bw" (activation-gradients);
+      bandwidth : (optional) MEASURED link bytes/s from a probe
+                  (obs/probes.py).  A rule with a bandwidth term only
+                  fires when a measurement is supplied — without one
+                  (the no-probe config) it is skipped, so static runs
+                  resolve exactly as before.
 
-    ``matches`` is pure Python over static shapes, so rule resolution
-    happens at trace time and the result stays jit-hashable.
+    ``matches`` is pure Python over static shapes and a host-side float,
+    so rule resolution happens at trace time and the result stays
+    jit-hashable.
     """
     codec: str
     k_frac: float = 0.1
@@ -188,6 +204,8 @@ class PolicyRule:
     min_depth: int = 0
     max_depth: Optional[int] = None
     direction: str = "both"
+    min_bandwidth: float = 0.0
+    max_bandwidth: Optional[float] = None
 
     def __post_init__(self):
         if self.codec not in RULE_CODECS:
@@ -199,7 +217,12 @@ class PolicyRule:
         if not 0.0 < self.k_frac <= 1.0:
             raise ValueError(f"k_frac must be in (0, 1], got {self.k_frac}")
 
-    def matches(self, size: int, depth: int, direction: str) -> bool:
+    @property
+    def needs_bandwidth(self) -> bool:
+        return self.min_bandwidth > 0 or self.max_bandwidth is not None
+
+    def matches(self, size: int, depth: int, direction: str,
+                bandwidth: Optional[float] = None) -> bool:
         if self.direction != "both" and direction != self.direction:
             return False
         if size < self.min_size:
@@ -210,6 +233,16 @@ class PolicyRule:
             return False
         if self.max_depth is not None and depth >= self.max_depth:
             return False
+        if self.needs_bandwidth:
+            # no measurement => a bandwidth-conditioned rule never fires
+            # (degenerate no-probe configs resolve exactly as before)
+            if bandwidth is None:
+                return False
+            if bandwidth < self.min_bandwidth:
+                return False
+            if self.max_bandwidth is not None \
+                    and bandwidth >= self.max_bandwidth:
+                return False
         return True
 
     @property
@@ -225,6 +258,10 @@ class PolicyRule:
             conds.append(f"depth>={self.min_depth}")
         if self.max_depth is not None:
             conds.append(f"depth<{self.max_depth}")
+        if self.min_bandwidth:
+            conds.append(f"bandwidth>={self.min_bandwidth:g}")
+        if self.max_bandwidth is not None:
+            conds.append(f"bandwidth<{self.max_bandwidth:g}")
         codec = (f"{self.codec}:{self.k_frac}" if self.codec == "topk"
                  else self.codec)
         return codec + (("@" + ",".join(conds)) if conds else "")
@@ -253,23 +290,31 @@ class PolicyRules:
     def num_boundaries(self) -> int:
         return max(0, self.num_stages - 1)
 
-    def pick(self, size: int, depth: int, direction: str) -> PolicyRule:
+    def pick(self, size: int, depth: int, direction: str,
+             bandwidth: Optional[float] = None) -> PolicyRule:
         for r in self.rules:
-            if r.matches(size, depth, direction):
+            if r.matches(size, depth, direction, bandwidth):
                 return r
         raise ValueError(
             f"no policy rule matches boundary {depth} "
-            f"(size={size}, direction={direction!r}) — rule list: "
+            f"(size={size}, direction={direction!r}, "
+            f"bandwidth={bandwidth!r}) — rule list: "
             f"[{'; '.join(r.name for r in self.rules)}]. Append a "
             "catch-all rule (e.g. 'none') so every boundary resolves.")
 
-    def resolve(self, boundary_sizes: Union[int, Sequence[int]]
-                ) -> CompressionPolicy:
+    def resolve(self, boundary_sizes: Union[int, Sequence[int]],
+                bandwidth: Optional[float] = None) -> CompressionPolicy:
         """Rules x per-boundary tensor sizes -> a static policy.
 
         ``boundary_sizes``: per-example element count at each cut (an int
         broadcasts to every cut — the transformer's uniform ``seq *
         d_model``; heterogeneous stacks like the CNN pass one per cut).
+
+        ``bandwidth``: measured link bytes/s (obs/probes.py) evaluated by
+        ``bandwidth>=X`` / ``bandwidth<X`` rule terms.  Without a
+        measurement (None — the degenerate no-probe config), bandwidth-
+        conditioned rules never fire and resolution is IDENTICAL to the
+        static engine's, bit for bit.
         """
         if isinstance(boundary_sizes, int):
             sizes = (boundary_sizes,) * self.num_boundaries
@@ -282,8 +327,8 @@ class PolicyRules:
                 f"{self.num_stages})")
         bps = []
         for i, n in enumerate(sizes):
-            fw_rule = self.pick(n, i, "fw")
-            bw_rule = self.pick(n, i, "bw")
+            fw_rule = self.pick(n, i, "fw", bandwidth)
+            bw_rule = self.pick(n, i, "bw", bandwidth)
             bps.append(BoundaryPolicy(
                 fw=_rule_compressor(fw_rule.codec, fw_rule.k_frac),
                 bw=_rule_compressor(bw_rule.codec, bw_rule.k_frac)))
@@ -301,15 +346,20 @@ class PolicyRules:
         return ";".join(r.name for r in self.rules)
 
 
-_COND_RE = re.compile(r"^(size|depth)(>=|<)(\d+)$|^dir=(fw|bw)$")
+_COND_RE = re.compile(
+    r"^(size|depth|bandwidth)(>=|<)(\d+(?:\.\d+)?(?:[eE]\+?\d+)?)$"
+    r"|^dir=(fw|bw)$")
 
 
 def parse_rule(spec: str) -> PolicyRule:
     """``codec[:k_frac][@cond,...]`` -> :class:`PolicyRule`.
 
     Conditions: ``size>=N`` / ``size<N`` (per-example element count),
-    ``depth>=N`` / ``depth<N`` (boundary index), ``dir=fw`` / ``dir=bw``.
-    Examples: ``q8``, ``topk:0.1``, ``topk:0.05@size>=65536,dir=fw``.
+    ``depth>=N`` / ``depth<N`` (boundary index), ``dir=fw`` / ``dir=bw``,
+    ``bandwidth>=X`` / ``bandwidth<X`` (measured link bytes/s, scientific
+    notation welcome — fires only when a probe measurement is supplied at
+    resolve time).  Examples: ``q8``, ``topk:0.1``,
+    ``topk:0.05@size>=65536,dir=fw``, ``none@bandwidth>=50e9``.
     """
     spec = spec.strip()
     head, _, conds = spec.partition("@")
@@ -326,11 +376,21 @@ def parse_rule(spec: str) -> PolicyRule:
         if not m:
             raise ValueError(
                 f"bad rule condition {cond!r} in {spec!r} — expected "
-                "size>=N, size<N, depth>=N, depth<N, dir=fw or dir=bw")
+                "size>=N, size<N, depth>=N, depth<N, bandwidth>=X, "
+                "bandwidth<X, dir=fw or dir=bw")
         if m.group(4):
             kw["direction"] = m.group(4)
         else:
-            key, op, val = m.group(1), m.group(2), int(m.group(3))
+            key, op, raw = m.group(1), m.group(2), m.group(3)
+            if key == "bandwidth":
+                val = float(raw)
+            else:
+                try:
+                    val = int(raw)
+                except ValueError:
+                    raise ValueError(
+                        f"bad rule condition {cond!r} in {spec!r} — "
+                        f"{key} thresholds must be integers") from None
             kw[("min_" if op == ">=" else "max_") + key] = val
     return PolicyRule(codec=codec, **kw)
 
@@ -348,11 +408,13 @@ def parse_policy_rules(spec: str, num_stages: int = 4) -> PolicyRules:
     return PolicyRules(rules=rules, num_stages=num_stages)
 
 
-def resolve_policy(policy, boundary_sizes) -> CompressionPolicy:
+def resolve_policy(policy, boundary_sizes,
+                   bandwidth: Optional[float] = None) -> CompressionPolicy:
     """Accept either a static :class:`CompressionPolicy` (returned as-is)
     or unresolved :class:`PolicyRules` (resolved against the boundary
-    sizes) — the single entry point train/steps.py and the launchers
-    thread an adaptive policy through."""
+    sizes, and — when a probe measurement is supplied — the measured link
+    ``bandwidth`` in bytes/s) — the single entry point train/steps.py and
+    the launchers thread an adaptive policy through."""
     if isinstance(policy, PolicyRules):
-        return policy.resolve(boundary_sizes)
+        return policy.resolve(boundary_sizes, bandwidth)
     return policy

@@ -51,6 +51,23 @@ def zipf_lengths(rng, n, lo, hi, a=1.6):
     return np.clip(lo + (rng.zipf(a, n) - 1), lo, hi).astype(int)
 
 
+def _export_trace(args) -> None:
+    """Drain the tracer into the requested --trace / --perfetto files."""
+    from repro.obs import trace as obs_trace
+    tr = obs_trace.get_tracer()
+    if tr is None:
+        return
+    events = tr.drain()
+    if args.trace:
+        from repro.obs.export import to_jsonl
+        print(f"# trace: {to_jsonl(events, args.trace)} events "
+              f"-> {args.trace} (dropped {tr.dropped})", flush=True)
+    if args.perfetto:
+        from repro.obs.export import to_chrome_trace
+        print(f"# perfetto: {to_chrome_trace(events, args.perfetto)} "
+              f"events -> {args.perfetto}", flush=True)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gpt2-small", choices=sorted(ARCHS))
@@ -109,7 +126,23 @@ def main(argv=None) -> int:
                          "(what --prefix-cache accelerates)")
     ap.add_argument("--ckpt", default=None, help="restore params from npz")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable telemetry and write the JSONL event log "
+                         "here (obs/export.py schema; default: tracing "
+                         "off, zero overhead)")
+    ap.add_argument("--perfetto", default=None, metavar="PATH",
+                    help="also write a Chrome-trace JSON loadable at "
+                         "ui.perfetto.dev / chrome://tracing")
+    ap.add_argument("--metrics", type=int, default=1, metavar="N",
+                    help="continuous engine: emit scheduler/page-pool "
+                         "counters every N ticks when tracing is on "
+                         "(default 1)")
     args = ap.parse_args(argv)
+
+    tracing = bool(args.trace or args.perfetto)
+    if tracing:
+        from repro.obs import trace as obs_trace
+        obs_trace.enable()
 
     cfg = get(args.arch, smoke=args.smoke)
     unsupported = left_pad_unsupported(cfg)
@@ -156,6 +189,7 @@ def main(argv=None) -> int:
         for i, r in enumerate(done[: min(4, len(done))]):
             print(f"# req{i}: prompt[-4:]={r.prompt[-4:].tolist()} "
                   f"-> out[:8]={r.out[:8].tolist()}", flush=True)
+        _export_trace(args)
         return 0
 
     sampling = SamplingConfig(temperature=args.temperature,
@@ -180,7 +214,8 @@ def main(argv=None) -> int:
                               page_size=args.page_size,
                               draft_params=draft_params,
                               draft_cfg=draft_cfg, draft_policy=policy,
-                              spec_k=args.spec_k)
+                              spec_k=args.spec_k,
+                              metrics_every=max(1, args.metrics))
     engine.warmup()
     vocab = min(cfg.vocab_size, 1024)
     shared = rng.randint(0, vocab, args.shared_prefix).astype(np.int32)
@@ -204,6 +239,7 @@ def main(argv=None) -> int:
     for r in sorted(done, key=lambda r: r.req_id)[:4]:
         print(f"# req{r.req_id}: {json.dumps(r.metrics())} "
               f"out[:8]={r.out[:8].tolist()}", flush=True)
+    _export_trace(args)
     return 0
 
 

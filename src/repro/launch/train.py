@@ -35,6 +35,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import io as ckpt_io
 from repro.configs.registry import ARCHS, get
+from repro.obs import trace as obs_trace
 from repro.core.boundary import init_boundary_state
 from repro.core.policy import (CompressionPolicy, NO_POLICY, PolicyRules,
                                aqsgd_policy, ef_policy, parse_policy_rules,
@@ -119,6 +120,8 @@ def main(argv=None) -> int:
                     help="a named policy (%s) OR an adaptive rule spec: "
                          "';'-separated 'codec[:k_frac][@cond,...]' rules, "
                          "conds size>=N | size<N | depth>=N | depth<N | "
+                         "bandwidth>=X | bandwidth<X (bytes/s; fires only "
+                         "under a probe — see obs/probes.py) | "
                          "dir=fw|bw — first match wins per boundary, e.g. "
                          "'q4@size>=65536;q8@size>=16384;none' (resolved "
                          "against seq*d_model at trace time)"
@@ -198,7 +201,22 @@ def main(argv=None) -> int:
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None, help="write metrics here")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable telemetry and write the JSONL event log "
+                         "here (obs/export.py schema; default: tracing "
+                         "off, zero overhead)")
+    ap.add_argument("--perfetto", default=None, metavar="PATH",
+                    help="also write a Chrome-trace JSON loadable at "
+                         "ui.perfetto.dev / chrome://tracing")
+    ap.add_argument("--metrics", type=int, default=0, metavar="N",
+                    help="sample per-boundary compression error + "
+                         "feedback-buffer norms every N steps (obs/"
+                         "quality.py; 0 = off; implies tracing)")
     args = ap.parse_args(argv)
+
+    tracing = bool(args.trace or args.perfetto or args.metrics)
+    if tracing:
+        obs_trace.enable()
 
     cfg = get(args.arch, smoke=args.smoke)
     seq = min(args.seq, cfg.max_seq)
@@ -337,18 +355,29 @@ def main(argv=None) -> int:
     stream = synthetic_stream(cfg, args.batch, seq, args.seed,
                               num_samples=args.num_samples,
                               start_step=start_step, dp=args.dp)
+    tap = None
+    if args.metrics:
+        from repro.obs.quality import QualityTap
+        tap = QualityTap((args.batch, seq, cfg.d_model),
+                         every=args.metrics, dtype=jnp.bfloat16,
+                         seed=args.seed)
     metrics, t0 = [], time.time()
     tokens_per_step = args.batch * seq
     for step in range(start_step + 1, args.steps + 1):
         toks, ids = next(stream)
-        if args.dp > 1:
-            params, opt_state, bstates, dp_state, m = step_fn(
-                params, opt_state, bstates, make_batch(cfg, toks),
-                jnp.asarray(ids), dp_state)
-        else:
-            params, opt_state, bstates, m = step_fn(
-                params, opt_state, bstates, make_batch(cfg, toks),
-                jnp.asarray(ids))
+        with obs_trace.span("train.step", cat="train", step=step) as sa:
+            if args.dp > 1:
+                params, opt_state, bstates, dp_state, m = step_fn(
+                    params, opt_state, bstates, make_batch(cfg, toks),
+                    jnp.asarray(ids), dp_state)
+            else:
+                params, opt_state, bstates, m = step_fn(
+                    params, opt_state, bstates, make_batch(cfg, toks),
+                    jnp.asarray(ids))
+            if tracing:
+                sa["loss"] = round(float(m["loss"]), 6)  # sync in span
+        if tap is not None:
+            tap.maybe_sample(step, policy, bstates or None)
         if step % args.log_every == 0 or step == args.steps:
             dt = time.time() - t0
             loss = float(m["loss"])
@@ -370,6 +399,17 @@ def main(argv=None) -> int:
     if args.json:
         with open(args.json, "w") as f:
             json.dump(metrics, f, indent=1)
+    if tracing:
+        tr = obs_trace.get_tracer()
+        events = tr.drain()
+        if args.trace:
+            from repro.obs.export import to_jsonl
+            print(f"# trace: {to_jsonl(events, args.trace)} events "
+                  f"-> {args.trace} (dropped {tr.dropped})", flush=True)
+        if args.perfetto:
+            from repro.obs.export import to_chrome_trace
+            print(f"# perfetto: {to_chrome_trace(events, args.perfetto)} "
+                  f"events -> {args.perfetto}", flush=True)
     print("# done: final loss "
           f"{metrics[-1]['loss'] if metrics else 'n/a (already at --steps)'}",
           flush=True)

@@ -1,0 +1,131 @@
+"""Bandwidth probes: measured bytes/s per link pair, closing the loop.
+
+Agarwal et al. (2103.00543): whether compression pays off is a function
+of the MEASURED link bandwidth, not the nominal one.  This module times a
+real ``ppermute`` ring hop per mesh axis and reports achieved bytes/s per
+link-pair set, keyed exactly like ``launch.dryrun.collective_counts
+(by_pairs=True)`` keys the HLO audit — ``"{{src,dst},...}"`` — so a probe
+measurement, the compiled-HLO launch audit, and a ``bandwidth>=X``
+:class:`~repro.core.policy.PolicyRule` predicate all speak about the same
+ring.
+
+The loop closes in ``train/loop.py``: a ``bandwidth_probe`` callable is
+invoked between epochs, its measurement re-resolves the ``PolicyRules``
+(a trace-time static re-resolution — an UNCHANGED resolved policy keeps
+the jit cache, a changed one re-traces, exactly like the PR-7 rule
+engine), and the chosen codec follows the wire.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Set, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.obs import trace
+from repro.transport.base import shard_map_compat as _shard_map
+
+
+def ring_pairs(mesh: Mesh, axis: str) -> Set[Tuple[int, int]]:
+    """Source->target device-id pairs of the ``axis`` ring on ``mesh``:
+    within every slice along the other axes, position r sends to r+1
+    (mod n).  Generalizes the benchmark's DP-ring helper to any axis of
+    any mesh — the same pairs XLA records as ``source_target_pairs``."""
+    dev = mesh.devices
+    ax = mesh.axis_names.index(axis)
+    n = dev.shape[ax]
+    cols = np.moveaxis(dev, ax, 0).reshape(n, -1)
+    pairs = set()
+    for c in range(cols.shape[1]):
+        for r in range(n):
+            pairs.add((int(cols[r, c].id), int(cols[(r + 1) % n, c].id)))
+    return pairs
+
+
+def pairs_key(pairs: Set[Tuple[int, int]]) -> str:
+    """``{{src,dst},...}`` formatting (sorted) — the suffix
+    ``collective_counts(by_pairs=True)`` keys launches by."""
+    return ("{" + ",".join("{%d,%d}" % p for p in sorted(pairs)) + "}")
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkMeasurement:
+    """Achieved bandwidth of one ring's links (the slowest link bounds a
+    synchronous ring hop, so one number per ring is the honest grain)."""
+    axis: str
+    pairs: str                   # pairs_key(...) of the measured ring
+    payload_bytes: int           # bytes each device put on the wire
+    seconds: float               # best-of-repeats wall time of one hop
+    hops: int = 1
+
+    @property
+    def bytes_per_s(self) -> float:
+        return (self.payload_bytes * self.hops / self.seconds
+                if self.seconds > 0 else float("inf"))
+
+    def to_dict(self) -> dict:
+        return {"axis": self.axis, "pairs": self.pairs,
+                "payload_bytes": self.payload_bytes,
+                "seconds": round(self.seconds, 6),
+                "bytes_per_s": round(self.bytes_per_s, 1)}
+
+
+def probe_ring(mesh: Mesh, axis: str, *, payload_bytes: int = 1 << 22,
+               repeats: int = 3) -> LinkMeasurement:
+    """Time one fused uint8 ring hop over ``axis`` (the exact shape of
+    the transports' wire traffic: one packed buffer per hop) and report
+    achieved bytes/s.  Best-of-``repeats`` after a warmup dispatch."""
+    n = int(mesh.shape[axis])
+    per = max(1, payload_bytes)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def hop(b):
+        return jax.lax.ppermute(b, axis, perm)
+
+    shapes = tuple(mesh.shape[a] for a in mesh.axis_names)
+    buf = jnp.zeros((*shapes, per), jnp.uint8)   # (…mesh dims…, per)/device
+    spec = P(*mesh.axis_names)
+    fn = jax.jit(_shard_map(hop, mesh, (spec,), spec))
+    jax.block_until_ready(fn(buf))                        # compile + warm
+    best = float("inf")
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(buf))
+        best = min(best, time.perf_counter() - t0)
+    m = LinkMeasurement(axis=axis, pairs=pairs_key(ring_pairs(mesh, axis)),
+                        payload_bytes=per, seconds=best)
+    trace.instant("probe.ring", cat="probe", **m.to_dict())
+    return m
+
+
+def probe_mesh(mesh: Mesh, *, payload_bytes: int = 1 << 22,
+               repeats: int = 3) -> Dict[str, LinkMeasurement]:
+    """One ring measurement per mesh axis (stage hops vs DP ring on the
+    2D ``(data, stage)`` mesh), keyed by axis name."""
+    return {a: probe_ring(mesh, a, payload_bytes=payload_bytes,
+                          repeats=repeats)
+            for a in mesh.axis_names}
+
+
+def boundary_bandwidth(measurements,
+                       stage_axis: str = "stage") -> Optional[float]:
+    """The single bytes/s number a ``bandwidth>=X`` policy predicate
+    consumes: the stage-hop ring's achieved bandwidth (boundary payloads
+    ride that ring), falling back to the slowest measured ring when no
+    axis matches.  Accepts a measurement dict from :func:`probe_mesh`,
+    one :class:`LinkMeasurement`, a plain float, or None."""
+    if measurements is None:
+        return None
+    if isinstance(measurements, (int, float)):
+        return float(measurements)
+    if isinstance(measurements, LinkMeasurement):
+        return measurements.bytes_per_s
+    if stage_axis in measurements:
+        return measurements[stage_axis].bytes_per_s
+    if not measurements:
+        return None
+    return min(m.bytes_per_s for m in measurements.values())

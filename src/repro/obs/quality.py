@@ -1,0 +1,108 @@
+"""Compression-quality metrics: the paper's asymmetry as a live signal.
+
+The paper's central findings are distortion findings — activations
+tolerate less compression than gradients (Tables 1-3), AQ-SGD's
+per-example buffers shrink the effective error over training (Sec. 2.5).
+This tap samples them LIVE every N steps instead of only at end-of-run
+loss curves:
+
+  * per-boundary RELATIVE compression error — the codec roundtrip
+    ``||x - C(x)|| / ||x||`` of each boundary's fw/bw compressor, run on
+    the plain jnp reference path (``Compressor.__call__``), never the
+    Pallas wire kernels: a debug tap, not the hot path;
+  * feedback-buffer norms — L2 norms of every EF/EF21/AQ-SGD residual
+    leaf in the training state, keyed by its pytree path (Wang et al.:
+    the AQ-SGD buffer norm decaying over time IS the compensation
+    working).
+
+Everything here costs device compute, so it only runs when explicitly
+sampled (``QualityTap`` gates on the step counter AND on tracing being
+enabled); a disabled tracer short-circuits before any jnp call.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import CompressionPolicy
+from repro.obs import trace
+
+
+def relative_error(x, compressor) -> float:
+    """``||x - C(x)||_2 / ||x||_2`` on the jnp reference codec path."""
+    xf = x.astype(jnp.float32)
+    err = jnp.linalg.norm((xf - compressor(x).astype(jnp.float32)).ravel())
+    return float(err / jnp.maximum(jnp.linalg.norm(xf.ravel()), 1e-12))
+
+
+def boundary_quality(policy: CompressionPolicy, x) -> List[dict]:
+    """Per-boundary fw/bw relative compression error on sample tensor
+    ``x`` ((batch, *feat); the transformer's uniform boundary shape —
+    heterogeneous stacks call per boundary with each cut's shape)."""
+    rows = []
+    for i in range(policy.num_boundaries):
+        bp = policy.at(i)
+        rows.append({
+            "boundary": i, "fw_codec": bp.fw.name, "bw_codec": bp.bw.name,
+            "fw_rel_err": relative_error(x, bp.fw),
+            "bw_rel_err": relative_error(x, bp.bw),
+        })
+    return rows
+
+
+def feedback_norms(state) -> dict:
+    """L2 norm of every float leaf in a feedback-state pytree, keyed by
+    pytree path (empty leaves and integer leaves are skipped)."""
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+        if not hasattr(leaf, "dtype") or leaf.size == 0 \
+                or not jnp.issubdtype(leaf.dtype, jnp.floating):
+            continue
+        key = jax.tree_util.keystr(path).strip(".") or "leaf"
+        out[key] = float(jnp.linalg.norm(
+            leaf.astype(jnp.float32).ravel()))
+    return out
+
+
+class QualityTap:
+    """Every-N-steps sampler wiring the metrics into the tracer.
+
+    ``sample_shape``: the boundary tensor shape ((batch, *feat)) the
+    roundtrip error is measured on; the sample is a fixed seeded normal
+    (the codec's distortion on a reference distribution), so the series
+    isolates POLICY changes — a codec flip between epochs moves the
+    line, batch noise does not.
+    """
+
+    def __init__(self, sample_shape, *, every: int = 50,
+                 dtype=jnp.bfloat16, seed: int = 0):
+        if every < 1:
+            raise ValueError(f"every must be >= 1, got {every}")
+        self.every = every
+        self._x = jax.random.normal(jax.random.PRNGKey(seed),
+                                    sample_shape).astype(dtype)
+
+    def maybe_sample(self, step: int, policy: CompressionPolicy,
+                     bstates=None) -> Optional[List[dict]]:
+        """Emit quality counters when tracing is on and ``step`` is on
+        the sampling grid; returns the rows it emitted (None when
+        skipped — the disabled path does no device work)."""
+        tr = trace.get_tracer()
+        if tr is None or step % self.every != 0:
+            return None
+        rows = boundary_quality(policy, self._x)
+        for r in rows:
+            tr.counter(f"quality.boundary{r['boundary']}", cat="quality",
+                       fw_rel_err=round(r["fw_rel_err"], 6),
+                       bw_rel_err=round(r["bw_rel_err"], 6))
+            tr.instant(f"quality.codec.boundary{r['boundary']}",
+                       cat="quality", step=step, fw_codec=r["fw_codec"],
+                       bw_codec=r["bw_codec"])
+        if bstates is not None:
+            norms = feedback_norms(bstates)
+            if norms:
+                tr.counter("quality.feedback_norms", cat="quality",
+                           **{k: round(v, 6) for k, v in norms.items()})
+        return rows

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.core.boundary import boundary_wire_bytes_per_token
 from repro.core.policy import CompressionPolicy, NO_POLICY
+from repro.obs import trace
 from repro.models import encdec, transformer
 from repro.models.config import ModelConfig
 from repro.serve import cache as C
@@ -251,7 +252,7 @@ class ContinuousEngine:
                  num_pages: Optional[int] = None, draft_params=None,
                  draft_cfg: Optional[ModelConfig] = None,
                  draft_policy: CompressionPolicy = NO_POLICY,
-                 spec_k: int = 4):
+                 spec_k: int = 4, metrics_every: int = 1):
         bad = left_pad_unsupported(cfg)
         if bad:
             raise ValueError(
@@ -273,6 +274,7 @@ class ContinuousEngine:
         self.ticks = 0
         self.active_slot_ticks = 0
         self.prefill_chunks = 0
+        self.metrics_every = max(1, metrics_every)
         self.paged = bool(prefix_cache or prefill_chunk
                           or draft_params is not None)
         self.prefix_cache, self.prefill_chunk = prefix_cache, prefill_chunk
@@ -433,25 +435,58 @@ class ContinuousEngine:
         """One engine tick: refill free slots from the queue (bucketed
         prefill per new request), then one decode step for every slot.
         Returns the requests that completed this tick."""
+        finished = self._step_paged() if self.paged else self._step_slab()
+        self._trace_tick(finished)
+        return finished
+
+    def _trace_tick(self, finished: List[ServeRequest]) -> None:
+        """Per-tick telemetry: scheduler occupancy (+ page-pool occupancy
+        and prefix-hit counters in paged mode) as counter tracks, one
+        instant per completed request carrying its TTFT and decode rate.
+        Pure host-side arithmetic on state the tick already computed —
+        zero device ops, and a disabled tracer returns on the first
+        line."""
+        tr = trace.get_tracer()
+        if tr is None:
+            return
+        for r in finished:
+            tr.instant("serve.request_done", cat="serve",
+                       tokens=len(r.tokens), ttft_s=round(r.ttft_s, 6),
+                       decode_tok_per_s=round(r.decode_tok_per_s, 2))
+        if self.ticks % self.metrics_every:
+            return
+        tr.counter("serve.sched", cat="serve", **self.sched.snapshot())
         if self.paged:
-            return self._step_paged()
+            ps = self.pages.stats()
+            tr.counter("serve.pages", cat="serve",
+                       **{k: ps[k] for k in
+                          ("active_pages", "cached_pages", "free_pages",
+                           "cow_copies", "prefix_hits",
+                           "prefix_hit_tokens")})
+
+    def _step_slab(self) -> List[ServeRequest]:
+        """The non-paged (slab KV cache) tick body of :meth:`step`."""
         finished = []
-        for slot, req in self.sched.fills():
-            bucket = C.bucket_for(len(req.prompt), self.buckets)
-            toks = np.zeros((1, bucket), np.int32)
-            toks[0, bucket - len(req.prompt):] = req.prompt
-            pad = bucket - len(req.prompt)
-            tok, self._caches, key = self._insert(
-                self.params, jnp.asarray(toks),
-                jnp.asarray([pad], jnp.int32), self._caches,
-                jnp.int32(slot), request_key(req.seed))
-            self._keys = self._keys.at[slot].set(key)
-            self.pos[slot] = bucket
-            self.pad[slot] = pad
-            self.last_tok[slot] = int(tok)      # blocks => honest TTFT
-            done = self.sched.started(slot, int(tok))
-            if done is not None:
-                finished.append(done)
+        fills = self.sched.fills()
+        if fills:
+            with trace.span("serve.prefill", cat="serve",
+                            slots=len(fills)):
+                for slot, req in fills:
+                    bucket = C.bucket_for(len(req.prompt), self.buckets)
+                    toks = np.zeros((1, bucket), np.int32)
+                    toks[0, bucket - len(req.prompt):] = req.prompt
+                    pad = bucket - len(req.prompt)
+                    tok, self._caches, key = self._insert(
+                        self.params, jnp.asarray(toks),
+                        jnp.asarray([pad], jnp.int32), self._caches,
+                        jnp.int32(slot), request_key(req.seed))
+                    self._keys = self._keys.at[slot].set(key)
+                    self.pos[slot] = bucket
+                    self.pad[slot] = pad
+                    self.last_tok[slot] = int(tok)  # blocks => honest TTFT
+                    done = self.sched.started(slot, int(tok))
+                    if done is not None:
+                        finished.append(done)
         active = self.sched.active_slots
         if not active:
             return finished
@@ -460,6 +495,13 @@ class ContinuousEngine:
         chunkable = (self.tick_chunk > 1
                      and min_rem >= self.tick_chunk
                      and all(r.eos_token is None for r in reqs))
+        with trace.span("serve.decode", cat="serve", slots=len(active),
+                        ticks=self.tick_chunk if chunkable else 1):
+            finished.extend(self._slab_decode(active, chunkable))
+        return finished
+
+    def _slab_decode(self, active, chunkable) -> List[ServeRequest]:
+        finished = []
         if chunkable:
             # no slot can complete inside the chunk and none watches for
             # EOS => run tick_chunk decode steps in one program, one sync
@@ -602,11 +644,14 @@ class ContinuousEngine:
         finished = []
         for slot, req in self.sched.fills(self._can_place):
             self._place(slot, req)
-        for slot in [s for s in self.sched.active_slots
-                     if self.cursor[s] >= 0]:
-            done = self._prefill_tick(slot)
-            if done is not None:
-                finished.append(done)
+        pref = [s for s in self.sched.active_slots if self.cursor[s] >= 0]
+        if pref:
+            with trace.span("serve.prefill", cat="serve",
+                            slots=len(pref)):
+                for slot in pref:
+                    done = self._prefill_tick(slot)
+                    if done is not None:
+                        finished.append(done)
         dec = [s for s in self.sched.active_slots if self.cursor[s] < 0]
         if not dec:
             return finished
@@ -620,12 +665,16 @@ class ContinuousEngine:
         self.ticks += 1
         self.active_slot_ticks += len(dec)
         if self.spec:
-            finished.extend(self._spec_tick(dec, toks, posv, pmap))
+            with trace.span("serve.spec", cat="serve", slots=len(dec),
+                            spec_k=self.spec.spec_k):
+                finished.extend(self._spec_tick(dec, toks, posv, pmap))
             return finished
-        t, self._pool, self._keys = self._decode_paged(
-            self.params, jnp.asarray(toks), self._pool, jnp.asarray(posv),
-            jnp.asarray(pmap), self._keys)
-        t_np = np.asarray(t)
+        with trace.span("serve.decode", cat="serve", slots=len(dec),
+                        ticks=1):
+            t, self._pool, self._keys = self._decode_paged(
+                self.params, jnp.asarray(toks), self._pool,
+                jnp.asarray(posv), jnp.asarray(pmap), self._keys)
+            t_np = np.asarray(t)
         for s in dec:
             self.pos[s] += 1
             self.last_tok[s] = t_np[s]

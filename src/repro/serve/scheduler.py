@@ -144,6 +144,18 @@ class Scheduler:
     def idle(self) -> bool:
         return not self.queue and not any(self.slots)
 
+    def snapshot(self) -> dict:
+        """Instantaneous occupancy counters — the per-tick telemetry grain
+        (:func:`stats` aggregates the whole run; this is one moment).
+        Cheap enough to call every tick: pure host-side len() arithmetic."""
+        active = len(self.active_slots)
+        return {
+            "queued": len(self.queue),
+            "active_slots": active,
+            "free_slots": len(self.slots) - active,
+            "completed": len(self.done),
+        }
+
     def stats(self) -> dict:
         done = self.done
         return {

@@ -24,6 +24,8 @@ from repro.core.policy import (CompressionPolicy, NO_POLICY, PolicyRules,
 from repro.data.synthetic import ImageClassData, LMData
 from repro.models import cnn, transformer
 from repro.models.config import ModelConfig
+from repro.obs import trace
+from repro.obs.probes import boundary_bandwidth
 from repro.optim.optimizers import OptimizerConfig, init_opt_state
 from repro.train.steps import (make_cnn_eval_step, make_cnn_train_step,
                                make_lm_eval_step, make_lm_train_step)
@@ -38,6 +40,9 @@ class ExperimentResult:
     loss_off: float = 0.0
     train_curve: List[float] = dataclasses.field(default_factory=list)
     seconds: float = 0.0
+    # resolved policy name per epoch — flat unless a bandwidth probe
+    # re-resolved PolicyRules mid-run (the closed loop's audit trail)
+    policy_curve: List[str] = dataclasses.field(default_factory=list)
 
     def row(self) -> str:
         return (f"{self.name:32s}  off={self.acc_off:6.2f}%  "
@@ -119,10 +124,13 @@ def run_cnn_experiment(policy: CompressionPolicy, *, epochs: int = 8,
     for ep in range(epochs):
         accs = []
         for x, y, ids in data.epoch(batch, ep):
-            params, opt_state, bstates, m = step(
-                params, opt_state, bstates, jnp.asarray(x), jnp.asarray(y),
-                jnp.asarray(ids))
-            accs.append(float(m["acc"]))
+            with trace.span("train.step", cat="train", epoch=ep) as sa:
+                params, opt_state, bstates, m = step(
+                    params, opt_state, bstates, jnp.asarray(x),
+                    jnp.asarray(y), jnp.asarray(ids))
+                acc = float(m["acc"])            # sync inside the span
+                sa["acc"] = round(acc, 6)
+            accs.append(acc)
         curve.append(float(np.mean(accs)))
     res = ExperimentResult(name=name or policy.boundary.name,
                            train_curve=curve, seconds=time.time() - t0)
@@ -204,7 +212,8 @@ def run_lm_experiment(cfg: ModelConfig, policy: CompressionPolicy, *,
                       pipeline_microbatches: Optional[int] = None,
                       schedule: str = "gpipe", virtual_stages: int = 1,
                       dp: int = 1, dp_codec: str = "none",
-                      dp_feedback: str = "none", dp_k_frac: float = 0.1
+                      dp_feedback: str = "none", dp_k_frac: float = 0.1,
+                      bandwidth_probe=None
                       ) -> ExperimentResult:
     """Fine-tune a (pre-trained) tiny LM with boundary compression.
 
@@ -217,10 +226,25 @@ def run_lm_experiment(cfg: ModelConfig, policy: CompressionPolicy, *,
     all-reduce over the ``dp_codec`` wire format (transport/collectives.py;
     ``dp_feedback``: per-replica ef | ef21 residuals) on either transport —
     needs ``dp`` (simulated) or ``dp * num_stages`` (pipeline) devices.
+
+    ``bandwidth_probe``: a zero-arg callable returning a link-bandwidth
+    measurement (``obs.probes.probe_mesh`` dict, a ``LinkMeasurement``, a
+    plain bytes/s float, or None) — the telemetry loop closing into the
+    policy engine.  When ``policy`` is a :class:`PolicyRules`, the probe
+    runs before EVERY epoch and the rules re-resolve against the fresh
+    measurement; an unchanged resolved policy keeps the step function (and
+    its jit cache), a changed one rebuilds the step — a static re-trace,
+    exactly the PR-7 rule-engine contract.  Without a probe, rules with
+    ``bandwidth>=X`` terms never fire (``matches`` gets bandwidth=None)
+    and the run is bit-identical to the static resolution.
     """
     data = data or LMData()
-    if isinstance(policy, PolicyRules):
-        policy = resolve_policy(policy, data.seq_len * cfg.d_model)
+    rules = policy if isinstance(policy, PolicyRules) else None
+    bsize = data.seq_len * cfg.d_model
+    if rules is not None:
+        bw = (boundary_bandwidth(bandwidth_probe())
+              if bandwidth_probe is not None else None)
+        policy = resolve_policy(rules, bsize, bandwidth=bw)
     opt = opt or OptimizerConfig(kind="adamw", lr=3e-4, weight_decay=0.01,
                                  schedule="constant", grad_clip=1.0)
     params = pretrained_params or transformer.init_params(
@@ -228,27 +252,33 @@ def run_lm_experiment(cfg: ModelConfig, policy: CompressionPolicy, *,
     params = jax.tree.map(jnp.asarray, params)
     opt_state = init_opt_state(opt, params)
     feat = (data.seq_len, cfg.d_model)
-    bstates = []
-    if transport == "simulated":
-        for i in range(policy.num_boundaries):
+
+    def build_bstates(policy):
+        if transport == "simulated":
             from repro.core.boundary import init_boundary_state
-            bstates.append(init_boundary_state(
-                policy.at(i), feat, batch=batch, num_samples=data.num_train,
-                dtype=jnp.bfloat16))
-    elif transport == "pipeline":
-        bstates = _pipeline_bstates(policy, feat, batch=batch,
-                                    microbatches=pipeline_microbatches,
-                                    num_samples=data.num_train,
-                                    dtype=jnp.bfloat16,
-                                    virtual_stages=virtual_stages, dp=dp)
-    step = make_lm_train_step(cfg, policy, opt, remat=False, donate=False,
-                              transport=transport, mesh=mesh,
-                              stage_axis=stage_axis,
-                              pipeline_microbatches=pipeline_microbatches,
-                              schedule=schedule,
-                              virtual_stages=virtual_stages,
-                              dp=dp, dp_codec=dp_codec,
-                              dp_feedback=dp_feedback, dp_k_frac=dp_k_frac)
+            return [init_boundary_state(
+                policy.at(i), feat, batch=batch,
+                num_samples=data.num_train, dtype=jnp.bfloat16)
+                for i in range(policy.num_boundaries)]
+        elif transport == "pipeline":
+            return _pipeline_bstates(policy, feat, batch=batch,
+                                     microbatches=pipeline_microbatches,
+                                     num_samples=data.num_train,
+                                     dtype=jnp.bfloat16,
+                                     virtual_stages=virtual_stages, dp=dp)
+        return []
+
+    def build_step(policy):
+        return make_lm_train_step(
+            cfg, policy, opt, remat=False, donate=False,
+            transport=transport, mesh=mesh, stage_axis=stage_axis,
+            pipeline_microbatches=pipeline_microbatches,
+            schedule=schedule, virtual_stages=virtual_stages,
+            dp=dp, dp_codec=dp_codec, dp_feedback=dp_feedback,
+            dp_k_frac=dp_k_frac)
+
+    bstates = build_bstates(policy)
+    step = build_step(policy)
     dp_state = (init_lm_dp_state(cfg, params, policy, dp, dp_feedback,
                                  transport=transport,
                                  virtual_stages=virtual_stages)
@@ -256,20 +286,40 @@ def run_lm_experiment(cfg: ModelConfig, policy: CompressionPolicy, *,
 
     t0 = time.time()
     curve = []
+    policy_curve = []
     for ep in range(epochs):
+        if rules is not None and bandwidth_probe is not None and ep > 0:
+            # telemetry -> policy: re-resolve the rules against the fresh
+            # measurement; rebuild the step ONLY on an actual flip (rule
+            # policies are feedback-free, so bstates swap without state
+            # loss; an unchanged policy keeps every jit cache entry)
+            bw = boundary_bandwidth(bandwidth_probe())
+            new_policy = resolve_policy(rules, bsize, bandwidth=bw)
+            if new_policy.name != policy.name:
+                trace.instant("policy.flip", cat="policy", epoch=ep,
+                              bandwidth=bw, old=policy.name,
+                              new=new_policy.name)
+                policy = new_policy
+                bstates = build_bstates(policy)
+                step = build_step(policy)
+        policy_curve.append(policy.name)
         for toks, ids in data.epoch(batch, ep):
-            if dp > 1:
-                params, opt_state, bstates, dp_state, m = step(
-                    params, opt_state, bstates,
-                    {"tokens": jnp.asarray(toks)}, jnp.asarray(ids),
-                    dp_state)
-            else:
-                params, opt_state, bstates, m = step(
-                    params, opt_state, bstates,
-                    {"tokens": jnp.asarray(toks)}, jnp.asarray(ids))
-            curve.append(float(m["loss"]))
+            with trace.span("train.step", cat="train", epoch=ep) as sa:
+                if dp > 1:
+                    params, opt_state, bstates, dp_state, m = step(
+                        params, opt_state, bstates,
+                        {"tokens": jnp.asarray(toks)}, jnp.asarray(ids),
+                        dp_state)
+                else:
+                    params, opt_state, bstates, m = step(
+                        params, opt_state, bstates,
+                        {"tokens": jnp.asarray(toks)}, jnp.asarray(ids))
+                loss = float(m["loss"])          # sync inside the span
+                sa["loss"] = round(loss, 6)
+            curve.append(loss)
     res = ExperimentResult(name=name or policy.boundary.name,
-                           train_curve=curve, seconds=time.time() - t0)
+                           train_curve=curve, seconds=time.time() - t0,
+                           policy_curve=policy_curve)
     res.loss_on = _lm_eval(params, cfg, data, policy, True, batch)
     res.loss_off = _lm_eval(params, cfg, data, policy, False, batch)
     res.params = params

@@ -308,7 +308,25 @@ def make_grad_all_reduce(mesh: Mesh, axis: str, codec: str = "none", *,
                        else jax.tree.map(lambda a: a, agg))
         return reduced_tree, new_resid, new_agg
 
+    def _trace_wire(grads_dp) -> None:
+        """Emit the DP-ring wire facts when tracing is on.  Runs at TRACE
+        time (the ``reduce`` body executes once per jit compilation), so
+        the steady-state step pays nothing and no device ops are added."""
+        from repro.obs import trace
+        tr = trace.get_tracer()
+        if tr is None:
+            return
+        g_like = [jax.ShapeDtypeStruct(a.shape[1:], a.dtype)
+                  for a in jax.tree.leaves(grads_dp)]
+        rep = dp_wire_report(g_like, codec, k_frac=k_frac, dp=dp)
+        tr.instant("dp.wire", cat="wire", axis=axis, feedback=feedback,
+                   fused=fused, shard_axis=shard_axis or "",
+                   launches_per_hop=(1 if fused
+                                     else rep["n_payload_leaves"]),
+                   **rep)
+
     def reduce(grads_dp, dp_state: FeedbackState):
+        _trace_wire(grads_dp)
         dp_spec = lambda a: (P(axis, shard_axis)
                              if _sharded(a.shape, 1) else P(axis))
         out_spec = lambda a: (P(shard_axis)

@@ -461,6 +461,56 @@ class PipelineTransport(Transport):
 # Differentiable pipelined apply over a mesh axis
 # ---------------------------------------------------------------------------
 
+def wire_telemetry(transport: "PipelineTransport", sched: Schedule,
+                   feat_shape, dtype, *, microbatches: int,
+                   dp: int = 1) -> dict:
+    """Host-side wire facts of one pipeline configuration: the chosen
+    codecs, EXACT payload bytes per hop (``eval_shape`` of the packed
+    wire message — the same source benchmarks/pipeline_wire.py audits),
+    and collective launches per tick.  Pure trace-time Python: no device
+    ops, shared by the tracer instrumentation and the benchmark's
+    telemetry-vs-cost-model assertion."""
+    from repro.transport.codecs import wire_bytes
+    x_s = jax.ShapeDtypeStruct(tuple(feat_shape), dtype)
+    fw_pl = transport.fw_payload_struct(x_s)
+    if transport.policy.reuse_indices:
+        # backward hop ppermutes VALUES ONLY (bf16, forward k) — the
+        # reused indices already sit at both ends of the wire
+        n = int(np.prod(feat_shape[1:]))
+        k = max(1, int(round(transport.policy.fw.k_frac * n)))
+        bw_pl = jax.ShapeDtypeStruct((feat_shape[0], k), jnp.bfloat16)
+    else:
+        bw_pl = transport.bw_payload_struct(x_s)
+    s = transport.num_stages
+    return {
+        "axis": transport.axis, "stages": s,
+        "virtual_stages": transport.virtual_stages,
+        "schedule": sched.name, "microbatches": microbatches, "dp": dp,
+        "fw_codec": transport.policy.fw.name,
+        "bw_codec": transport.policy.bw.name,
+        "feedback": transport.policy.feedback,
+        "fw_payload_bytes_per_hop": wire_bytes(fw_pl),
+        "bw_payload_bytes_per_hop": wire_bytes(bw_pl),
+        "launches_per_fw_hop": (1 if transport.fused
+                                else len(jax.tree.leaves(fw_pl))),
+        "launches_per_bw_hop": (1 if transport.fused
+                                else len(jax.tree.leaves(bw_pl))),
+        "wire_cuts": sched.wire_cuts(s),
+    }
+
+
+def _trace_wire(transport, sched, feat_shape, dtype, mb, dp) -> None:
+    """Emit the wire-telemetry event when tracing is on.  Runs at TRACE
+    time (once per compilation), so the steady-state step pays nothing."""
+    from repro.obs import trace
+    tr = trace.get_tracer()
+    if tr is None:
+        return
+    tr.instant("pipeline.wire", cat="wire",
+               **wire_telemetry(transport, sched, feat_shape, dtype,
+                                microbatches=mb, dp=dp))
+
+
 def pipeline_apply(stage_fn: Callable, params_stacked, x, mesh: Mesh,
                    axis: str, *, policy: Optional[BoundaryPolicy] = None,
                    scheme: Optional[str] = None, k_frac: float = 0.1,
@@ -585,6 +635,7 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x, mesh: Mesh,
 
     x_mb = x.reshape(*rep, mb, mbsz, *x.shape[1:])
     feat_shape = x_mb.shape[len(rep) + 1:]
+    _trace_wire(transport, sched, feat_shape, x.dtype, mb, dp)
 
     # the scan carry / shard_map threading works on plain {resid, mirror}
     # dicts (the per-direction slices of the FeedbackState; ``agg`` is
