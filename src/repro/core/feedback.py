@@ -95,7 +95,8 @@ class FeedbackMode:
     microbatch index.
 
     ``scopes``: where the mode is valid — at a stage boundary
-    ("boundary") and/or on the DP gradient reduce ("dp").
+    ("boundary"), on the DP gradient reduce ("dp"), and/or on the
+    tensor-parallel activation all-gather ("tp").
     """
     name: str
     message: Callable
@@ -109,13 +110,14 @@ def _none_message(comp, x, buf, ids=None):
 
 
 FEEDBACK_REGISTRY = {
-    "none": FeedbackMode("none", _none_message, scopes=("boundary", "dp")),
+    "none": FeedbackMode("none", _none_message,
+                         scopes=("boundary", "dp", "tp")),
     "ef": FeedbackMode(
         "ef", lambda comp, x, buf, ids=None: ef_message(comp, x, buf),
-        scopes=("boundary", "dp")),
+        scopes=("boundary", "dp", "tp")),
     "ef21": FeedbackMode(
         "ef21", lambda comp, x, buf, ids=None: ef21_message(comp, x, buf),
-        delta_coded=True, scopes=("boundary", "dp")),
+        delta_coded=True, scopes=("boundary", "dp", "tp")),
     "efmixed": FeedbackMode(
         "efmixed",
         lambda comp, x, buf, ids=None: efmixed_message(comp, x, buf)),

@@ -11,13 +11,17 @@ import jax
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    axes = ("pod", "data", "tensor") if multi_pod else ("data", "tensor")
     return jax.make_mesh(shape, axes)
 
 
 def make_local_mesh():
-    """Single-device mesh with the same axis names (CPU tests/examples)."""
-    return jax.make_mesh((1, 1), ("data", "model"))
+    """Single-device mesh with the same axis names (CPU tests/examples).
+
+    Uses the canonical ``(data, tensor)`` names (core/parallel.py);
+    sharding/specs.py accepts the historical "model" name as an alias.
+    """
+    return jax.make_mesh((1, 1), ("data", "tensor"))
 
 
 def make_data_mesh(dp: int, *, data_axis: str = "data"):
@@ -49,6 +53,43 @@ def make_dp_pipeline_mesh(dp: int, stages: int, *, data_axis: str = "data",
             f"stages={stages}), have {jax.device_count()} — set XLA_FLAGS="
             f"--xla_force_host_platform_device_count={need} before jax init")
     return jax.make_mesh((dp, stages), (data_axis, stage_axis))
+
+
+def make_tensor_mesh(tp: int, *, tensor_axis: str = "tensor"):
+    """1D tensor-parallel mesh: ``tp`` shards whose all-gather /
+    reduce-scatter ring through the compressed wire
+    (transport/tp_collectives.py)."""
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    if jax.device_count() < tp:
+        raise RuntimeError(
+            f"tensor-parallel mesh needs >= {tp} devices, have "
+            f"{jax.device_count()} — set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={tp} before jax init")
+    return jax.make_mesh((tp,), (tensor_axis,))
+
+
+def make_3d_mesh(dp: int, stages: int, tp: int, *, data_axis: str = "data",
+                 stage_axis: str = "stage", tensor_axis: str = "tensor"):
+    """3D ``(data, stage, tensor)`` mesh — all three of the paper's
+    communication axes in one program.  Each (data, stage) cell holds a
+    ``tp``-wide tensor-parallel group; ``ppermute`` over ``stage_axis``
+    moves activations between stages within a (data, tensor) column, the
+    TP all-gather/reduce-scatter rings over ``tensor_axis`` within a
+    stage, and the DP gradient all-reduce rings over ``data_axis``.
+    Axes of size 1 are kept (shard_map binds their names for free), so
+    degenerate specs lower to the 2D/1D meshes' programs.
+    """
+    for k, v in (("dp", dp), ("stages", stages), ("tp", tp)):
+        if v < 1:
+            raise ValueError(f"{k} must be >= 1, got {v}")
+    need = dp * stages * tp
+    if jax.device_count() < need:
+        raise RuntimeError(
+            f"3D mesh needs >= {need} devices (dp={dp} x stages={stages} "
+            f"x tp={tp}), have {jax.device_count()} — set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} before jax init")
+    return jax.make_mesh((dp, stages, tp), (data_axis, stage_axis, tensor_axis))
 
 
 # Hardware constants for §Roofline (TPU v5e)

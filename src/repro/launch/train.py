@@ -18,6 +18,10 @@ Examples:
   PYTHONPATH=src python -m repro.launch.train --arch gpt2-small --smoke \
       --steps 50 --policy q4q8 --transport pipeline --stages 2 \
       --schedule interleaved --virtual-stages 2
+  PYTHONPATH=src python -m repro.launch.train --arch gpt2-small --smoke \
+      --steps 50 --mesh data=2,tensor=2 --wire data=q8,tensor=q8+ef:0.1
+  PYTHONPATH=src python -m repro.launch.train --arch gpt2-small --smoke \
+      --steps 20 --mesh data=2,stage=2,tensor=2 --wire stage=q8,tensor=q4
 """
 from __future__ import annotations
 
@@ -37,13 +41,14 @@ from repro.checkpoint import io as ckpt_io
 from repro.configs.registry import ARCHS, get
 from repro.obs import trace as obs_trace
 from repro.core.boundary import init_boundary_state
+from repro.core.parallel import spec_from_cli
 from repro.core.policy import (CompressionPolicy, NO_POLICY, PolicyRules,
                                aqsgd_policy, ef_policy, parse_policy_rules,
                                quant_policy, resolve_policy, topk_policy)
 from repro.models import encdec, transformer
 from repro.models.config import active_param_count, param_count
 from repro.optim.optimizers import OptimizerConfig, init_opt_state
-from repro.train.steps import make_lm_train_step
+from repro.train.steps import _resolve_parallel, make_lm_train_step
 
 POLICIES = {
     "none": lambda: NO_POLICY,
@@ -146,25 +151,44 @@ def main(argv=None) -> int:
     ap.add_argument("--pipeline-microbatches", type=int, default=None,
                     help="GPipe/1F1B microbatch count for the pipeline "
                          "transport (default: the stage count)")
+    ap.add_argument("--mesh", default=None, metavar="SPEC",
+                    help="3D mesh sizes, 'data=2,stage=2,tensor=2' (axis "
+                         "aliases dp/pp/tp/model accepted; missing axes "
+                         "default to 1).  stage>1 implies --transport "
+                         "pipeline; tensor>1 shards the layer stack over "
+                         "the compressed TP collectives "
+                         "(transport/tp_collectives.py).  Replaces "
+                         "--dp/--stages")
+    ap.add_argument("--wire", default=None, metavar="SPEC",
+                    help="per-axis wire config "
+                         "'axis=codec[+feedback][:k_frac]', e.g. "
+                         "'data=q8+ef:0.1,tensor=q4'.  Codecs "
+                         "none|q8|q4|topk (or a quoted rule spec); "
+                         "feedback ef|ef21.  Replaces --dp-codec/"
+                         "--dp-feedback/--dp-k-frac")
     ap.add_argument("--dp", type=int, default=1,
-                    help="data-parallel replicas: the global batch splits "
-                         "into --dp contiguous shards and per-replica "
-                         "gradients are all-reduced over the real wire "
+                    help="DEPRECATED (use --mesh data=N): data-parallel "
+                         "replicas: the global batch splits into --dp "
+                         "contiguous shards and per-replica gradients are "
+                         "all-reduced over the real wire "
                          "(transport/collectives.py).  With --transport "
                          "pipeline this runs the 2D (data, stages) mesh "
                          "(needs dp*stages host devices)")
     ap.add_argument("--dp-codec", default="none",
                     choices=("none", "q8", "q4", "topk"),
-                    help="wire codec for the DP gradient all-reduce "
-                         "(paper Tables 2-3: gradients tolerate milder "
-                         "rates than activations)")
+                    help="DEPRECATED (use --wire data=CODEC): wire codec "
+                         "for the DP gradient all-reduce (paper Tables "
+                         "2-3: gradients tolerate milder rates than "
+                         "activations)")
     ap.add_argument("--dp-feedback", default="none",
                     choices=("none", "ef", "ef21"),
-                    help="per-replica error feedback on the DP reduce "
+                    help="DEPRECATED (use --wire data=codec+FEEDBACK): "
+                         "per-replica error feedback on the DP reduce "
                          "(residuals ride the train state and the "
                          "checkpoint)")
     ap.add_argument("--dp-k-frac", type=float, default=0.1,
-                    help="TopK kept fraction for --dp-codec topk")
+                    help="DEPRECATED (use --wire data=topk:K): TopK kept "
+                         "fraction for --dp-codec topk")
     ap.add_argument("--feedback", default="none",
                     choices=("none", "ef", "ef21", "efmixed", "aqsgd"),
                     help="error-feedback mode (paper Tables 3-4); replaces "
@@ -272,8 +296,38 @@ def main(argv=None) -> int:
         # static resolution: rules -> concrete per-boundary codecs, keyed
         # by the LM's uniform cut size (hashable before any jit tracing)
         policy = resolve_policy(policy, seq * cfg.d_model)
-    need_devices = (args.dp * policy.num_stages
-                    if args.transport == "pipeline" else args.dp)
+    parallel = None
+    if args.mesh or args.wire:
+        legacy_used = [f for f, used in
+                       (("--dp", args.dp != 1),
+                        ("--dp-codec", args.dp_codec != "none"),
+                        ("--dp-feedback", args.dp_feedback != "none"),
+                        ("--dp-k-frac", args.dp_k_frac != 0.1),
+                        ("--stages", bool(args.stages))) if used]
+        if legacy_used:
+            ap.error(f"--mesh/--wire conflict with the deprecated "
+                     f"{', '.join(legacy_used)} — configure every axis "
+                     "through --mesh/--wire")
+        try:
+            parallel = spec_from_cli(args.mesh, args.wire)
+            # rule-coded axis wires resolve statically here (no probe on
+            # this driver): data carries the gradient tree, stage/tensor
+            # the per-example activation cut
+            parallel = parallel.resolved(
+                {"data": param_count(cfg), "stage": seq * cfg.d_model,
+                 "tensor": seq * cfg.d_model // max(parallel.tp, 1)})
+        except ValueError as e:
+            ap.error(f"--mesh/--wire: {e}")
+    if parallel is not None:
+        spec_eff, policy_eff, transport_eff = _resolve_parallel(
+            "launch.train", parallel, policy, args.transport, {})
+    else:
+        spec_eff, policy_eff, transport_eff = None, policy, args.transport
+    dp_n = spec_eff.dp if spec_eff is not None else args.dp
+    tp_n = spec_eff.tp if spec_eff is not None else 1
+    need_devices = (spec_eff.num_devices if spec_eff is not None else
+                    (args.dp * policy.num_stages
+                     if args.transport == "pipeline" else args.dp))
     if (need_devices > 1
             and "xla_force_host_platform_device_count"
             not in os.environ.get("XLA_FLAGS", "")):
@@ -293,13 +347,13 @@ def main(argv=None) -> int:
     params = (encdec if cfg.enc_dec else transformer).init_params(
         jax.random.PRNGKey(args.seed), cfg)
     opt_state = init_opt_state(opt, params)
-    if args.transport == "pipeline":
+    if transport_eff == "pipeline":
         from repro.train.loop import _pipeline_bstates
         bstates = _pipeline_bstates(
-            policy, (seq, cfg.d_model), batch=args.batch,
+            policy_eff, (seq, cfg.d_model), batch=args.batch,
             microbatches=pipeline_mb,
             num_samples=args.num_samples, dtype=jnp.bfloat16,
-            virtual_stages=virtual_stages, dp=args.dp)
+            virtual_stages=virtual_stages, dp=dp_n)
     else:
         # boundaries that actually exist in the stack: segment_bounds caps
         # the stage count at the group count (a 2-group smoke model under a
@@ -307,42 +361,67 @@ def main(argv=None) -> int:
         # bstates in that effective structure, which --resume restores into
         from repro.models.transformer import segment_bounds
         n_units = cfg.num_layers if cfg.enc_dec else cfg.num_groups
-        eff = max(0, len(segment_bounds(n_units, policy.num_stages)) - 1)
-        bstates = [init_boundary_state(policy.at(i), (seq, cfg.d_model),
+        eff = max(0, len(segment_bounds(n_units, policy_eff.num_stages)) - 1)
+        bstates = [init_boundary_state(policy_eff.at(i), (seq, cfg.d_model),
                                        batch=args.batch,
                                        num_samples=args.num_samples,
                                        dtype=jnp.bfloat16)
                    for i in range(eff)]
-    if args.transport == "pipeline":
+    if transport_eff == "pipeline":
         from repro.transport.schedules import get_schedule
         sched = get_schedule(args.schedule, virtual_stages)
-        mb_eff = pipeline_mb or policy.num_stages
+        mb_eff = pipeline_mb or policy_eff.num_stages
         print(f"# pipeline transport: schedule={args.schedule} "
               f"microbatches={mb_eff} "
-              f"{sched.describe(mb_eff, policy.num_stages)}", flush=True)
+              f"{sched.describe(mb_eff, policy_eff.num_stages)}", flush=True)
+    pkw = {}
+    if parallel is not None:
+        pkw["parallel"] = parallel
+    else:
+        # only forward the legacy kwargs the user actually set, so a
+        # plain run never trips the ParallelDeprecationWarning
+        if args.dp != 1:
+            pkw["dp"] = args.dp
+        if args.dp_codec != "none":
+            pkw["dp_codec"] = args.dp_codec
+        if args.dp_feedback != "none":
+            pkw["dp_feedback"] = args.dp_feedback
+        if args.dp_k_frac != 0.1:
+            pkw["dp_k_frac"] = args.dp_k_frac
     step_fn = make_lm_train_step(cfg, policy, opt, remat=not args.no_remat,
                                  donate=False,
                                  grad_accum=grad_accum,
                                  transport=args.transport,
                                  pipeline_microbatches=pipeline_mb,
                                  schedule=args.schedule,
-                                 virtual_stages=virtual_stages,
-                                 dp=args.dp, dp_codec=args.dp_codec,
-                                 dp_feedback=args.dp_feedback,
-                                 dp_k_frac=args.dp_k_frac)
+                                 virtual_stages=virtual_stages, **pkw)
+    dp_codec_eff = (spec_eff.data.codec if spec_eff is not None
+                    else args.dp_codec)
+    dp_feedback_eff = (spec_eff.data.feedback if spec_eff is not None
+                       else args.dp_feedback)
     dp_state = None
-    if args.dp > 1:
+    if dp_n > 1:
         from repro.train.loop import init_lm_dp_state
-        dp_state = init_lm_dp_state(cfg, params, policy, args.dp,
-                                    args.dp_feedback,
-                                    transport=args.transport,
-                                    virtual_stages=virtual_stages)
-        print(f"# dp={args.dp} gradient all-reduce: codec={args.dp_codec} "
-              f"feedback={args.dp_feedback}", flush=True)
+        dp_state = init_lm_dp_state(cfg, params, policy_eff, dp_n,
+                                    dp_feedback_eff,
+                                    transport=transport_eff,
+                                    virtual_stages=virtual_stages, tp=tp_n)
+        print(f"# dp={dp_n} gradient all-reduce: codec={dp_codec_eff} "
+              f"feedback={dp_feedback_eff}", flush=True)
+    tp_state = None
+    if tp_n > 1:
+        t_ax = spec_eff.tensor
+        print(f"# tp={tp_n} tensor collectives: codec={t_ax.codec} "
+              f"feedback={t_ax.feedback}", flush=True)
+        if transport_eff == "simulated":
+            from repro.models.transformer import tp_sites
+            from repro.transport.tp_collectives import init_tp_state
+            tp_state = init_tp_state((args.batch, seq, cfg.d_model),
+                                     tp_sites(cfg), t_ax.feedback)
 
     start_step = 0
     if args.resume:
-        if args.dp > 1:
+        if dp_n > 1:
             params, opt_state, bstates, dp_state, start_step = \
                 ckpt_io.restore_train_state(args.resume, params, opt_state,
                                             bstates, dp_like=dp_state)
@@ -352,9 +431,12 @@ def main(argv=None) -> int:
                                             bstates)
         print(f"# resumed step-{start_step} train state from {args.resume}",
               flush=True)
+        if tp_state is not None and spec_eff.tensor.feedback != "none":
+            print("# note: tensor-wire feedback residuals are not "
+                  "checkpointed — resuming with zeroed tp_state", flush=True)
     stream = synthetic_stream(cfg, args.batch, seq, args.seed,
                               num_samples=args.num_samples,
-                              start_step=start_step, dp=args.dp)
+                              start_step=start_step, dp=dp_n)
     tap = None
     if args.metrics:
         from repro.obs.quality import QualityTap
@@ -366,14 +448,15 @@ def main(argv=None) -> int:
     for step in range(start_step + 1, args.steps + 1):
         toks, ids = next(stream)
         with obs_trace.span("train.step", cat="train", step=step) as sa:
-            if args.dp > 1:
-                params, opt_state, bstates, dp_state, m = step_fn(
-                    params, opt_state, bstates, make_batch(cfg, toks),
-                    jnp.asarray(ids), dp_state)
-            else:
-                params, opt_state, bstates, m = step_fn(
-                    params, opt_state, bstates, make_batch(cfg, toks),
-                    jnp.asarray(ids))
+            extra = [s for s in (dp_state, tp_state) if s is not None]
+            out = step_fn(params, opt_state, bstates, make_batch(cfg, toks),
+                          jnp.asarray(ids), *extra)
+            params, opt_state, bstates, m = out[0], out[1], out[2], out[-1]
+            rest = list(out[3:-1])
+            if dp_state is not None:
+                dp_state = rest.pop(0)
+            if tp_state is not None:
+                tp_state = rest.pop(0)
             if tracing:
                 sa["loss"] = round(float(m["loss"]), 6)  # sync in span
         if tap is not None:
@@ -393,8 +476,8 @@ def main(argv=None) -> int:
                 args.ckpt.replace("{step}", str(step)), params, opt_state,
                 bstates, step=step,
                 extra={"arch": cfg.arch_id, "policy": args.policy,
-                       "feedback": args.feedback, "dp": args.dp,
-                       "dp_codec": args.dp_codec},
+                       "feedback": args.feedback, "dp": dp_n,
+                       "dp_codec": dp_codec_eff, "tp": tp_n},
                 dp_state=dp_state)
     if args.json:
         with open(args.json, "w") as f:

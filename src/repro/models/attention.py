@@ -107,6 +107,38 @@ def attn_train(params, x, *, num_heads, num_kv_heads, head_dim,
     return out @ params["wo"]
 
 
+def tp_local_heads(num_heads, num_kv_heads, tp):
+    """Per-rank head counts for tp-way head-sharded attention."""
+    if num_heads % tp or num_kv_heads % tp:
+        raise ValueError(
+            f"tensor parallelism shards attention heads: num_heads "
+            f"{num_heads} and num_kv_heads {num_kv_heads} must both be "
+            f"divisible by tp={tp}")
+    return num_heads // tp, num_kv_heads // tp
+
+
+def attn_train_tp(params, x_shard, tpc, *, num_heads, num_kv_heads,
+                  head_dim, pos_embed="rope", rope_theta=10_000.0,
+                  window=None, attn_softcap=None, buf=None):
+    """Column/row-parallel :func:`attn_train` over a compressed tensor
+    ring (transport/tp_collectives.py).
+
+    ``params`` are the LOCAL shards — wq/wk/wv split on the head out-dim,
+    wo on its head in-dim — and ``x_shard`` the sequence-sharded (normed)
+    residual.  The in-gather crosses the compressed wire (``buf`` is this
+    site's feedback buffer), attention runs on local heads over the FULL
+    sequence (RoPE/causality are exact), and the partial ``wo`` output
+    reduce-scatters back to the sequence shard.
+    """
+    lh, lkv = tp_local_heads(num_heads, num_kv_heads, tpc.tp)
+    full, buf = tpc.gather_site(x_shard, buf)
+    partial = attn_train(params, full, num_heads=lh, num_kv_heads=lkv,
+                         head_dim=head_dim, pos_embed=pos_embed,
+                         rope_theta=rope_theta, window=window,
+                         attn_softcap=attn_softcap)
+    return tpc.scatter(partial), buf
+
+
 # ---------------------------------------------------------------------------
 # KV cache
 # ---------------------------------------------------------------------------

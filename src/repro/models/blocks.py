@@ -92,6 +92,38 @@ def _attn_block_train(p, x, cfg: ModelConfig, kind: str):
     return x, aux
 
 
+# Block kinds whose weights shard over the tensor ring (dense family:
+# heads over tp for attention, d_ff over tp for the MLP).  moe/rwkv/hymba
+# route their parallelism differently (expert / head-state sharding) and
+# stay off the compressed TP path.
+TP_BLOCK_KINDS = ("dense", "attn_local", "attn_global")
+
+
+def attn_block_train_tp(p, x, cfg: ModelConfig, kind: str, tpc,
+                        bufs=(None, None)):
+    """The dense-family block on a SEQUENCE-SHARDED residual ``x``
+    (Megatron-SP layout): norms and residual adds run on the shard; the
+    attention and MLP in-gathers cross the compressed tensor wire and
+    the partial outputs reduce-scatter back (transport/tp_collectives.py).
+
+    ``p`` holds the tp-local weight shards (see
+    transformer.tp_param_dims).  ``bufs`` are this block's two per-site
+    feedback buffers (attn gather, mlp gather) or Nones.
+    """
+    if kind not in TP_BLOCK_KINDS:
+        raise ValueError(
+            f"tensor parallelism covers the dense family "
+            f"{TP_BLOCK_KINDS}, got kind={kind!r}")
+    b1, b2 = bufs
+    h, b1 = A.attn_train_tp(p["attn"], norm_apply(p["ln1"], x, cfg.norm),
+                            tpc, buf=b1, **_attn_kwargs(cfg, kind))
+    x = x + _maybe_post(p, "pn1", h, cfg)
+    full, b2 = tpc.gather_site(norm_apply(p["ln2"], x, cfg.norm), b2)
+    h = tpc.scatter(mlp_apply(p["mlp"], full, cfg.mlp))
+    x = x + _maybe_post(p, "pn2", h, cfg)
+    return x, (b1, b2)
+
+
 def _attn_block_prefill(p, x, cfg: ModelConfig, kind: str, cache_len: int,
                         pad_mask=None):
     moe = kind == "moe"

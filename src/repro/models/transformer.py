@@ -209,6 +209,86 @@ def stack_layer_stages(params, num_stages: int):
     return jax.tree.map(reshape, params["layers"])
 
 
+_TP_LAST_DIM = ("wq", "wk", "wv", "wi", "wg")
+
+
+def tp_param_dims(stack):
+    """The tensor-sharded dim per leaf of a layer stack (any number of
+    leading scan/stage dims): wq/wk/wv and the MLP in-projections split
+    on their OUT dim (column parallel), every ``wo`` on its IN dim (row
+    parallel), and -1 (replicated) for the rest — the norm scales, whose
+    tiny gradients all-reduce exactly via the shard_map transpose psum.
+    Feeds ``tp_apply``'s ``param_dims`` / the pipeline's tp specs.
+    """
+    def dim(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name in _TP_LAST_DIM:
+            return leaf.ndim - 1
+        if name == "wo":
+            return leaf.ndim - 2
+        return -1
+    flat, treedef = jax.tree_util.tree_flatten_with_path(stack)
+    return jax.tree_util.tree_unflatten(treedef,
+                                        [dim(p, l) for p, l in flat])
+
+
+def tp_sites(cfg: ModelConfig, groups: Optional[int] = None) -> int:
+    """All-gather cut points per forward pass: 2 per block (attention +
+    MLP in-gathers) — the ``sites`` count for ``init_tp_state``."""
+    g = cfg.num_groups if groups is None else groups
+    return 2 * len(cfg.layer_kinds()) * g
+
+
+def tp_stage_stack_fn(cfg: ModelConfig, tpc):
+    """``stage_fn(gp_stack, x, resid, mirror) -> (x, resid, mirror)`` —
+    the tensor-parallel twin of :func:`stage_stack_fn`, run INSIDE the
+    tensor ``shard_map`` (transport.tp_collectives.tp_apply or the 3D
+    pipeline): ``x`` is the sequence-sharded residual, ``gp_stack`` the
+    tp-local weight shards, and ``resid``/``mirror`` the site-stacked
+    feedback buffers (or size-0 placeholders for feedback "none")."""
+    kinds = cfg.layer_kinds()
+    for kind in kinds:
+        if kind not in B.TP_BLOCK_KINDS:
+            raise ValueError(
+                f"tensor parallelism covers the dense family "
+                f"{B.TP_BLOCK_KINDS}; layer kind {kind!r} shards "
+                f"differently (expert/state parallel) — run it with tp=1")
+    nb = len(kinds)
+
+    def stage_fn(gp_stack, x, resid, mirror):
+        if tpc.feedback == "none":
+            def scan_fn(x, gp):
+                for i, kind in enumerate(kinds):
+                    x, _ = B.attn_block_train_tp(gp[f"b{i}"], x, cfg, kind,
+                                                 tpc)
+                return x, None
+            x, _ = jax.lax.scan(scan_fn, x, gp_stack, unroll=scan_unroll())
+            return x, resid, mirror
+
+        st = resid if tpc.feedback == "ef" else mirror
+        g = jax.tree.leaves(gp_stack)[0].shape[0]
+        st_g = st.reshape(g, 2 * nb, *st.shape[1:])
+
+        def scan_fn(x, inp):
+            gp, stb = inp
+            outs = []
+            for i, kind in enumerate(kinds):
+                x, (b1, b2) = B.attn_block_train_tp(
+                    gp[f"b{i}"], x, cfg, kind, tpc,
+                    bufs=(stb[2 * i], stb[2 * i + 1]))
+                outs += [b1, b2]
+            return x, jnp.stack(outs)
+
+        x, st_out = jax.lax.scan(scan_fn, x, (gp_stack, st_g),
+                                 unroll=scan_unroll())
+        st_out = st_out.reshape(st.shape)
+        if tpc.feedback == "ef":
+            return x, st_out, mirror
+        return x, resid, st_out
+
+    return stage_fn
+
+
 def hidden_lm_loss(params, x, labels, cfg: ModelConfig,
                    mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Chunked cross-entropy straight from hidden states: the (B,S,V)
@@ -394,25 +474,33 @@ def decode_span(params, tokens, caches, pos, cfg: ModelConfig,
 # Loss
 # ---------------------------------------------------------------------------
 
+def _pick_label_logit(logits, labels):
+    """logits[..., labels] via a masked reduction instead of
+    take_along_axis: gathers along a vocab dim the SPMD partitioner has
+    sharded (lm head tied to a tensor-sharded embed) miscompile on some
+    backends, while select+sum partitions as plain elementwise+reduce.
+    Bitwise identical — every non-label slot contributes an exact 0."""
+    v = logits.shape[-1]
+    hit = labels[..., None] == jnp.arange(v, dtype=labels.dtype)
+    return jnp.where(hit, logits, jnp.zeros((), logits.dtype)) \
+        .sum(-1).astype(jnp.float32)
+
+
 @jax.custom_vjp
 def _fused_xent(logits, labels):
     """Per-token -log p[label] without materializing fp32 (B,S,V).
 
-    Forward: logsumexp + gather (reduce-fused upcasts only).
+    Forward: logsumexp + masked label pick (reduce-fused upcasts only).
     Backward: dlogits = (softmax - onehot) * g, recomputed from the saved
     bf16 logits + fp32 lse — ONE (B,S,V) temp in logits dtype.
     """
     lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
-    picked = jnp.take_along_axis(logits, labels[..., None],
-                                 axis=-1)[..., 0].astype(jnp.float32)
-    return lse - picked
+    return lse - _pick_label_logit(logits, labels)
 
 
 def _fx_fwd(logits, labels):
     lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
-    picked = jnp.take_along_axis(logits, labels[..., None],
-                                 axis=-1)[..., 0].astype(jnp.float32)
-    return lse - picked, (logits, labels, lse)
+    return lse - _pick_label_logit(logits, labels), (logits, labels, lse)
 
 
 def _fx_bwd(res, g):

@@ -45,8 +45,12 @@ def default_rules(mesh: Optional[Mesh]) -> dict:
         rules["batch"] = ("pod", "data")
     else:
         rules["batch"] = ("data",)
-    if "model" in names:
-        rules["model"] = ("model",)
+    # canonical tensor axis is "tensor" (core/parallel.py); the legacy
+    # "model" mesh-axis name keeps resolving as an alias
+    for tp_axis in ("tensor", "model"):
+        if tp_axis in names:
+            rules["model"] = (tp_axis,)
+            break
     if "data" in names:
         rules["expert"] = ("data",)
         rules["seq"] = ("data",)

@@ -1,9 +1,15 @@
 """Parameter / batch / cache sharding rules for the production meshes.
 
 Strategy (DESIGN.md §5): DP over ("pod","data") for the batch, TP over
-"model" for heads / d_ff / vocab, FSDP weight sharding over "data",
-expert-parallel over "data" for MoE experts.  Rules are name+shape based and
-degrade per-dim to replication when a dim is not divisible by the axis.
+the tensor axis for heads / d_ff / vocab, FSDP weight sharding over
+"data", expert-parallel over "data" for MoE experts.  Rules are
+name+shape based and degrade per-dim to replication when a dim is not
+divisible by the axis.
+
+Axis names route through core/parallel.py: the canonical tensor axis is
+"tensor" (ParallelSpec / make_3d_mesh), with the historical "model" name
+accepted as an alias — a rule naming either resolves to whichever the
+mesh actually has, and to replication when the mesh has neither.
 """
 from __future__ import annotations
 
@@ -11,6 +17,29 @@ from typing import Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.parallel import AXIS_ALIASES
+
+
+def tensor_axis(mesh: Mesh) -> Optional[str]:
+    """The mesh's tensor-parallel axis name ("tensor", or the legacy
+    "model" alias), or None when the mesh has no tensor axis."""
+    for name in ("tensor", "model"):
+        if name in mesh.axis_names:
+            return name
+    return None
+
+
+def _resolve_names(mesh: Mesh, names) -> tuple:
+    """Map logical axis names (+ aliases) onto the mesh's axes; names the
+    mesh does not carry drop out (that dim replicates over them)."""
+    out = []
+    for n in (names if isinstance(names, tuple) else (names,)):
+        if AXIS_ALIASES.get(n, n) == "tensor":
+            n = tensor_axis(mesh)
+        if n is not None and n in mesh.axis_names and n not in out:
+            out.append(n)
+    return tuple(out)
 
 
 def _axis_size(mesh: Mesh, names) -> int:
@@ -28,7 +57,9 @@ def batch_axes(mesh: Mesh):
 def _fit(dim: int, mesh: Mesh, names) -> Optional[tuple]:
     if names is None:
         return None
-    names = names if isinstance(names, tuple) else (names,)
+    names = _resolve_names(mesh, names)
+    if not names:
+        return None
     return names if dim % _axis_size(mesh, names) == 0 else None
 
 

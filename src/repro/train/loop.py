@@ -19,6 +19,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.parallel import ParallelSpec, from_legacy, warn_legacy
 from repro.core.policy import (CompressionPolicy, NO_POLICY, PolicyRules,
                                resolve_policy)
 from repro.data.synthetic import ImageClassData, LMData
@@ -27,7 +28,8 @@ from repro.models.config import ModelConfig
 from repro.obs import trace
 from repro.obs.probes import boundary_bandwidth
 from repro.optim.optimizers import OptimizerConfig, init_opt_state
-from repro.train.steps import (make_cnn_eval_step, make_cnn_train_step,
+from repro.train.steps import (_LEGACY_DEFAULTS, _UNSET, _resolve_parallel,
+                               make_cnn_eval_step, make_cnn_train_step,
                                make_lm_eval_step, make_lm_train_step)
 
 
@@ -162,17 +164,21 @@ def _pipeline_bstates(policy: CompressionPolicy, feat_shape, *, batch: int,
 
 def init_lm_dp_state(cfg, params, policy: CompressionPolicy, dp: int,
                      dp_feedback: str = "none", *,
-                     transport: str = "simulated", virtual_stages: int = 1):
+                     transport: str = "simulated", virtual_stages: int = 1,
+                     tp: int = 1):
     """DP-reduce state for an LM train step: the residual/aggregate trees
     mirror what actually crosses the data axis — the FULL param tree on
     the simulated transport (vmap lanes differentiate everything per
-    replica), the pipelined layer stack on the pipeline transport
-    (embed/head gradients stay exact and replicated)."""
+    replica), the pipelined layer stack on the pipeline transport, and the
+    raw layer stack on the simulated DP x TP mesh (embed/head gradients
+    stay exact and replicated in both sharded regimes)."""
     from repro.models import transformer
     from repro.transport.collectives import init_dp_state
     if transport == "pipeline":
         like = jax.eval_shape(lambda p: transformer.stack_layer_stages(
             p, policy.num_stages * virtual_stages), params)
+    elif tp > 1:
+        like = jax.eval_shape(lambda p: p["layers"], params)
     else:
         like = jax.eval_shape(lambda p: p, params)
     return init_dp_state(like, dp, dp_feedback)
@@ -211,8 +217,9 @@ def run_lm_experiment(cfg: ModelConfig, policy: CompressionPolicy, *,
                       mesh=None, stage_axis: str = "stage",
                       pipeline_microbatches: Optional[int] = None,
                       schedule: str = "gpipe", virtual_stages: int = 1,
-                      dp: int = 1, dp_codec: str = "none",
-                      dp_feedback: str = "none", dp_k_frac: float = 0.1,
+                      dp=_UNSET, dp_codec=_UNSET,
+                      dp_feedback=_UNSET, dp_k_frac=_UNSET,
+                      parallel: Optional[ParallelSpec] = None,
                       bandwidth_probe=None
                       ) -> ExperimentResult:
     """Fine-tune a (pre-trained) tiny LM with boundary compression.
@@ -222,29 +229,62 @@ def run_lm_experiment(cfg: ModelConfig, policy: CompressionPolicy, *,
     transformer's layer groups are homogeneous, so the pre-trained weights
     carry over unchanged) under ``schedule`` (gpipe | 1f1b | interleaved).
 
-    ``dp > 1`` adds the data-parallel axis with a compressed gradient
-    all-reduce over the ``dp_codec`` wire format (transport/collectives.py;
-    ``dp_feedback``: per-replica ef | ef21 residuals) on either transport —
-    needs ``dp`` (simulated) or ``dp * num_stages`` (pipeline) devices.
+    ``parallel=`` (a :class:`~repro.core.parallel.ParallelSpec`) sizes and
+    wires all three mesh axes in one place: ``data`` (compressed gradient
+    all-reduce), ``stage`` (``stages > 1`` implies the pipeline transport)
+    and ``tensor`` (compressed TP collectives; the step threads a
+    ``tp_state`` buffer for ef/ef21 tensor wires).  Axis codecs may be
+    rule specs (``"size>=1e6:q8@0.1; default:none"``) — they resolve
+    against this run's wire sizes and the bandwidth probe exactly like
+    :class:`PolicyRules`, re-resolving before every epoch.  The
+    ``dp``/``dp_codec``/``dp_feedback``/``dp_k_frac`` kwargs are a
+    DEPRECATED alias family for the data axis (warns
+    ``ParallelDeprecationWarning``; passing both families is an error) —
+    they need ``dp`` (simulated) or ``dp * num_stages`` (pipeline)
+    devices.
 
     ``bandwidth_probe``: a zero-arg callable returning a link-bandwidth
     measurement (``obs.probes.probe_mesh`` dict, a ``LinkMeasurement``, a
     plain bytes/s float, or None) — the telemetry loop closing into the
-    policy engine.  When ``policy`` is a :class:`PolicyRules`, the probe
-    runs before EVERY epoch and the rules re-resolve against the fresh
-    measurement; an unchanged resolved policy keeps the step function (and
-    its jit cache), a changed one rebuilds the step — a static re-trace,
-    exactly the PR-7 rule-engine contract.  Without a probe, rules with
-    ``bandwidth>=X`` terms never fire (``matches`` gets bandwidth=None)
-    and the run is bit-identical to the static resolution.
+    policy engine.  When ``policy`` is a :class:`PolicyRules` (or the
+    spec has rule-coded axes), the probe runs before EVERY epoch and the
+    rules re-resolve against the fresh measurement; an unchanged resolved
+    policy keeps the step function (and its jit cache), a changed one
+    rebuilds the step — a static re-trace, exactly the PR-7 rule-engine
+    contract.  Without a probe, rules with ``bandwidth>=X`` terms never
+    fire (``matches`` gets bandwidth=None) and the run is bit-identical
+    to the static resolution.
     """
     data = data or LMData()
     rules = policy if isinstance(policy, PolicyRules) else None
     bsize = data.seq_len * cfg.d_model
+    legacy = {"dp": dp, "dp_codec": dp_codec, "dp_feedback": dp_feedback,
+              "dp_k_frac": dp_k_frac}
+    explicit = tuple(sorted(k for k, v in legacy.items() if v is not _UNSET))
+    spec0 = parallel
+    spec_has_rules = (spec0 is not None
+                      and any(spec0.axis(n).is_rules
+                              for n in ("data", "stage", "tensor")))
+    probe_bw = (bandwidth_probe is not None
+                and (rules is not None or spec_has_rules))
+    bw = boundary_bandwidth(bandwidth_probe()) if probe_bw else None
     if rules is not None:
-        bw = (boundary_bandwidth(bandwidth_probe())
-              if bandwidth_probe is not None else None)
         policy = resolve_policy(rules, bsize, bandwidth=bw)
+    if spec0 is None:
+        # fold the deprecated dp_* family into the equivalent spec HERE so
+        # the warning names this call site and the step builder (which
+        # receives parallel=) never re-warns
+        if explicit:
+            warn_legacy("run_lm_experiment", explicit)
+        vals = {k: (legacy[k] if legacy[k] is not _UNSET else d)
+                for k, d in _LEGACY_DEFAULTS.items()}
+        spec0 = from_legacy(
+            num_stages=(policy.num_stages if transport == "pipeline" else 1),
+            **vals)
+    elif explicit:
+        raise ValueError(
+            f"run_lm_experiment: both parallel= and the legacy kwarg(s) "
+            f"{list(explicit)} were passed — drop the legacy kwargs")
     opt = opt or OptimizerConfig(kind="adamw", lr=3e-4, weight_decay=0.01,
                                  schedule="constant", grad_clip=1.0)
     params = pretrained_params or transformer.init_params(
@@ -253,75 +293,121 @@ def run_lm_experiment(cfg: ModelConfig, policy: CompressionPolicy, *,
     opt_state = init_opt_state(opt, params)
     feat = (data.seq_len, cfg.d_model)
 
-    def build_bstates(policy):
-        if transport == "simulated":
+    # per-axis wire sizes for rule-spec resolution: the data wire carries
+    # the gradient tree, stage/tensor wires carry per-example activations
+    # (the tensor payload is the 1/tp sequence shard)
+    n_grad = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(
+        jax.eval_shape(lambda p: p, params)))
+    wire_sizes = {"data": n_grad, "stage": bsize,
+                  "tensor": bsize // max(spec0.tp, 1)}
+
+    def resolve_spec(bw):
+        return spec0.resolved(wire_sizes, bandwidth=bw)
+
+    spec = resolve_spec(bw) if spec_has_rules else spec0
+    # effective (spec, policy, transport) triple — the same pure folding
+    # make_lm_train_step applies — for sizing feedback/DP/TP state here
+    spec_eff, policy_eff, transport_eff = _resolve_parallel(
+        "run_lm_experiment", spec, policy, transport, {})
+    dp_n, tp_n = spec_eff.dp, spec_eff.tp
+
+    def build_bstates(policy_eff):
+        if transport_eff == "simulated":
             from repro.core.boundary import init_boundary_state
             return [init_boundary_state(
-                policy.at(i), feat, batch=batch,
+                policy_eff.at(i), feat, batch=batch,
                 num_samples=data.num_train, dtype=jnp.bfloat16)
-                for i in range(policy.num_boundaries)]
-        elif transport == "pipeline":
-            return _pipeline_bstates(policy, feat, batch=batch,
+                for i in range(policy_eff.num_boundaries)]
+        elif transport_eff == "pipeline":
+            return _pipeline_bstates(policy_eff, feat, batch=batch,
                                      microbatches=pipeline_microbatches,
                                      num_samples=data.num_train,
                                      dtype=jnp.bfloat16,
-                                     virtual_stages=virtual_stages, dp=dp)
+                                     virtual_stages=virtual_stages, dp=dp_n)
         return []
 
-    def build_step(policy):
+    def build_step(policy, spec):
         return make_lm_train_step(
             cfg, policy, opt, remat=False, donate=False,
             transport=transport, mesh=mesh, stage_axis=stage_axis,
             pipeline_microbatches=pipeline_microbatches,
             schedule=schedule, virtual_stages=virtual_stages,
-            dp=dp, dp_codec=dp_codec, dp_feedback=dp_feedback,
-            dp_k_frac=dp_k_frac)
+            parallel=spec)
 
-    bstates = build_bstates(policy)
-    step = build_step(policy)
-    dp_state = (init_lm_dp_state(cfg, params, policy, dp, dp_feedback,
-                                 transport=transport,
-                                 virtual_stages=virtual_stages)
-                if dp > 1 else None)
+    bstates = build_bstates(policy_eff)
+    step = build_step(policy, spec)
+    dp_state = (init_lm_dp_state(cfg, params, policy_eff, dp_n,
+                                 spec_eff.data.feedback,
+                                 transport=transport_eff,
+                                 virtual_stages=virtual_stages, tp=tp_n)
+                if dp_n > 1 else None)
+    tp_state = None
+    if tp_n > 1 and transport_eff == "simulated":
+        from repro.transport.tp_collectives import init_tp_state
+        tp_state = init_tp_state((batch, data.seq_len, cfg.d_model),
+                                 transformer.tp_sites(cfg),
+                                 spec_eff.tensor.feedback)
 
     t0 = time.time()
     curve = []
     policy_curve = []
     for ep in range(epochs):
-        if rules is not None and bandwidth_probe is not None and ep > 0:
+        if probe_bw and ep > 0:
             # telemetry -> policy: re-resolve the rules against the fresh
             # measurement; rebuild the step ONLY on an actual flip (rule
-            # policies are feedback-free, so bstates swap without state
-            # loss; an unchanged policy keeps every jit cache entry)
+            # policies and rule axis codecs are shape-stable, so
+            # dp/tp/boundary state survives; an unchanged policy keeps
+            # every jit cache entry)
             bw = boundary_bandwidth(bandwidth_probe())
-            new_policy = resolve_policy(rules, bsize, bandwidth=bw)
-            if new_policy.name != policy.name:
-                trace.instant("policy.flip", cat="policy", epoch=ep,
-                              bandwidth=bw, old=policy.name,
-                              new=new_policy.name)
-                policy = new_policy
-                bstates = build_bstates(policy)
-                step = build_step(policy)
-        policy_curve.append(policy.name)
+            flipped = False
+            if rules is not None:
+                new_policy = resolve_policy(rules, bsize, bandwidth=bw)
+                if new_policy.name != policy.name:
+                    trace.instant("policy.flip", cat="policy", epoch=ep,
+                                  bandwidth=bw, old=policy.name,
+                                  new=new_policy.name)
+                    policy = new_policy
+                    flipped = True
+            if spec_has_rules:
+                new_spec = resolve_spec(bw)
+                if new_spec.name != spec.name:
+                    trace.instant("policy.flip", cat="policy", epoch=ep,
+                                  bandwidth=bw, old=spec.name,
+                                  new=new_spec.name)
+                    spec = new_spec
+                    flipped = True
+            if flipped:
+                spec_eff, policy_eff, transport_eff = _resolve_parallel(
+                    "run_lm_experiment", spec, policy, transport, {})
+                bstates = build_bstates(policy_eff)
+                step = build_step(policy, spec)
+        policy_curve.append(policy_eff.name if tp_n == 1
+                            else f"{policy_eff.name}/{spec_eff.name}")
         for toks, ids in data.epoch(batch, ep):
             with trace.span("train.step", cat="train", epoch=ep) as sa:
-                if dp > 1:
-                    params, opt_state, bstates, dp_state, m = step(
-                        params, opt_state, bstates,
-                        {"tokens": jnp.asarray(toks)}, jnp.asarray(ids),
-                        dp_state)
-                else:
-                    params, opt_state, bstates, m = step(
-                        params, opt_state, bstates,
-                        {"tokens": jnp.asarray(toks)}, jnp.asarray(ids))
+                batch_in = {"tokens": jnp.asarray(toks)}
+                args = [params, opt_state, bstates, batch_in,
+                        jnp.asarray(ids)]
+                if dp_state is not None:
+                    args.append(dp_state)
+                if tp_state is not None:
+                    args.append(tp_state)
+                out = step(*args)
+                params, opt_state, bstates = out[0], out[1], out[2]
+                rest = list(out[3:-1])
+                if dp_state is not None:
+                    dp_state = rest.pop(0)
+                if tp_state is not None:
+                    tp_state = rest.pop(0)
+                m = out[-1]
                 loss = float(m["loss"])          # sync inside the span
                 sa["loss"] = round(loss, 6)
             curve.append(loss)
-    res = ExperimentResult(name=name or policy.boundary.name,
+    res = ExperimentResult(name=name or policy_eff.boundary.name,
                            train_curve=curve, seconds=time.time() - t0,
                            policy_curve=policy_curve)
-    res.loss_on = _lm_eval(params, cfg, data, policy, True, batch)
-    res.loss_off = _lm_eval(params, cfg, data, policy, False, batch)
+    res.loss_on = _lm_eval(params, cfg, data, policy_eff, True, batch)
+    res.loss_off = _lm_eval(params, cfg, data, policy_eff, False, batch)
     res.params = params
     return res
 

@@ -27,10 +27,76 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.parallel import ParallelSpec, from_legacy, warn_legacy
 from repro.core.policy import CompressionPolicy, PolicyRules, resolve_policy
 from repro.models import encdec, transformer
 from repro.models.transformer import lm_loss
 from repro.optim.optimizers import OptimizerConfig, apply_updates
+
+# Sentinel distinguishing "caller passed the legacy kwarg" (deprecation
+# shim -> ParallelSpec) from "default" on make_lm_train_step & friends.
+_UNSET = object()
+
+_LEGACY_DEFAULTS = {"dp": 1, "dp_codec": "none", "dp_feedback": "none",
+                    "dp_k_frac": 0.1}
+
+
+def _resolve_parallel(api: str, parallel, policy, transport: str, legacy):
+    """Fold ``parallel=`` and the deprecated ``dp_*`` kwarg family into
+    one ``(ParallelSpec, policy, transport)`` triple.
+
+    Legacy kwargs (values ``_UNSET`` when not passed) construct the
+    equivalent spec via :func:`repro.core.parallel.from_legacy` and warn
+    once per call site; passing both families is an error.  A spec with
+    ``stages > 1`` implies the pipeline transport; its stage wire
+    (``spec.stage_policy()``) becomes the boundary policy unless the
+    caller already supplied a compressing ``policy`` (conflict)."""
+    explicit = tuple(sorted(k for k, v in legacy.items() if v is not _UNSET))
+    if parallel is not None:
+        if explicit:
+            raise ValueError(
+                f"{api}: both parallel= and the legacy kwarg(s) "
+                f"{list(explicit)} were passed — drop the legacy kwargs")
+        if not isinstance(parallel, ParallelSpec):
+            raise TypeError(f"{api}: parallel= must be a ParallelSpec, "
+                            f"got {type(parallel).__name__}")
+        spec = parallel
+    else:
+        if explicit:
+            warn_legacy(api, explicit)
+        vals = {k: (legacy[k] if legacy[k] is not _UNSET else d)
+                for k, d in _LEGACY_DEFAULTS.items()}
+        spec = from_legacy(
+            num_stages=(policy.num_stages if transport == "pipeline" else 1),
+            **vals)
+    for name in ("data", "stage", "tensor"):
+        if spec.axis(name).is_rules:
+            raise ValueError(
+                f"{api}: the {name!r} axis codec is an unresolved rule "
+                "spec — call ParallelSpec.resolved(wire_sizes, bandwidth) "
+                "first (run_lm_experiment does this per epoch)")
+    if parallel is not None and spec.stages > 1:
+        if transport == "simulated":
+            transport = "pipeline"
+        sp = spec.stage_policy()
+        if sp is not None:
+            from repro.core.policy import NO_COMPRESSION
+            if (policy.num_stages > 1 or policy.overrides
+                    or policy.boundary != NO_COMPRESSION):
+                raise ValueError(
+                    f"{api}: both the stage axis wire "
+                    f"({spec.stage.codec}+{spec.stage.feedback}) and a "
+                    f"compressing policy= ({policy.name}) were given — "
+                    "configure the stage boundary in ONE place")
+            policy = sp
+        elif policy.num_stages == 1:
+            import dataclasses as _dc
+            policy = _dc.replace(policy, num_stages=spec.stages)
+        elif policy.num_stages != spec.stages:
+            raise ValueError(
+                f"{api}: policy.num_stages={policy.num_stages} != "
+                f"parallel stage size {spec.stages}")
+    return spec, policy, transport
 
 
 def _resolve_rules(policy, boundary_feat):
@@ -74,6 +140,32 @@ def _pipeline_mesh(policy: CompressionPolicy, mesh, stage_axis: str):
             f"{jax.device_count()} — set XLA_FLAGS="
             f"--xla_force_host_platform_device_count={s} before jax init")
     return jax.make_mesh((s,), (stage_axis,))
+
+
+def _tp_stage_fn(cfg, mesh, tp, tp_codec, tp_k_frac, tensor_axis):
+    """Stage function + extra ``pipeline_apply`` kwargs for an optional
+    tensor axis.  ``tp == 1`` returns the plain dense stage fn and no
+    extra kwargs; ``tp > 1`` returns a TP-sharded stage fn (compressed
+    all-gather / reduce-scatter per block, feedback-free) plus the
+    ``tp_axis``/``tp_param_dims``/``seq_dim`` kwargs pipeline_apply needs
+    to extend its shard_map specs over ``tensor_axis``."""
+    if tp == 1:
+        return transformer.stage_stack_fn(cfg), lambda stack: {}
+    from repro.transport.tp_collectives import TPCollectives
+    tpc = TPCollectives(mesh, tensor_axis, codec=tp_codec,
+                        k_frac=tp_k_frac, feedback="none")
+    tp_fn = transformer.tp_stage_stack_fn(cfg, tpc)
+
+    def stage_fn(gp_stack, x):
+        z = jnp.zeros((0,), x.dtype)
+        return tp_fn(gp_stack, x, z, z)[0]
+
+    def tp_kwargs(stack):
+        return {"tp_axis": tensor_axis,
+                "tp_param_dims": transformer.tp_param_dims(stack),
+                "seq_dim": 1}
+
+    return stage_fn, tp_kwargs
 
 
 def _split_leading(tree, k: int):
@@ -130,9 +222,11 @@ def make_lm_train_step(cfg, policy: CompressionPolicy,
                        stage_axis: str = "stage",
                        pipeline_microbatches: Optional[int] = None,
                        schedule: str = "gpipe", virtual_stages: int = 1,
-                       dp: int = 1, dp_codec: str = "none",
-                       dp_feedback: str = "none", dp_k_frac: float = 0.1,
-                       data_axis: str = "data", boundary_feat=None):
+                       dp=_UNSET, dp_codec=_UNSET,
+                       dp_feedback=_UNSET, dp_k_frac=_UNSET,
+                       data_axis: str = "data", boundary_feat=None,
+                       parallel: Optional[ParallelSpec] = None,
+                       tensor_axis: str = "tensor"):
     """Returns jit'd ``step(params, opt_state, bstates, batch, ids)
     -> (params, opt_state, bstates, metrics)``.
 
@@ -163,10 +257,35 @@ def make_lm_train_step(cfg, policy: CompressionPolicy,
     reduce once); on the pipeline transport the mesh is the 2D
     ``(data, stages)`` grid and the reduced tree is the pipelined layer
     stack (embed/head/norm grads stay exact: they run replicated).
+
+    ``parallel=`` (a :class:`~repro.core.parallel.ParallelSpec`) is the
+    ONE argument that now configures all three axes — sizes and wires for
+    ``data`` (the compressed gradient all-reduce), ``stage`` (the
+    pipeline boundary; ``stages > 1`` implies the pipeline transport) and
+    ``tensor`` (the compressed TP collectives,
+    transport/tp_collectives.py).  The ``dp``/``dp_codec``/
+    ``dp_feedback``/``dp_k_frac`` kwargs are a DEPRECATED alias family
+    (they construct the equivalent spec and warn with
+    ``ParallelDeprecationWarning``); passing both families is an error.
+
+    ``tp > 1`` shards the dense-family layer stack over the tensor axis
+    (Megatron-SP: sequence-sharded residual, head/d_ff-sharded weights)
+    with the all-gather/reduce-scatter packed by the tensor wire codec.
+    The step gains a trailing ``tp_state`` argument (from
+    :func:`repro.transport.tp_collectives.init_tp_state`) and returns it
+    updated: ``step(params, opt_state, bstates, batch, ids[, dp_state],
+    tp_state)``.
     """
     mod = encdec if cfg.enc_dec else transformer
     policy = _resolve_rules(policy, boundary_feat)
     grad_accum = _resolve_grad_accum(grad_accum, microbatches)
+    spec, policy, transport = _resolve_parallel(
+        "make_lm_train_step", parallel, policy, transport,
+        {"dp": dp, "dp_codec": dp_codec, "dp_feedback": dp_feedback,
+         "dp_k_frac": dp_k_frac})
+    dp, tp = spec.dp, spec.tp
+    d_ax, t_ax = spec.data, spec.tensor
+    dp_codec, dp_feedback, dp_k_frac = d_ax.codec, d_ax.feedback, d_ax.k_frac
     if transport == "pipeline":
         if grad_accum > 1:
             raise NotImplementedError(
@@ -178,9 +297,20 @@ def make_lm_train_step(cfg, policy: CompressionPolicy,
             microbatches=pipeline_microbatches, jit=jit,
             schedule=schedule, virtual_stages=virtual_stages,
             dp=dp, dp_codec=dp_codec, dp_feedback=dp_feedback,
-            dp_k_frac=dp_k_frac, data_axis=data_axis)
+            dp_k_frac=dp_k_frac, data_axis=data_axis, tp=tp,
+            tp_codec=t_ax.codec, tp_k_frac=t_ax.k_frac,
+            tp_feedback=t_ax.feedback, tensor_axis=tensor_axis)
     if transport != "simulated":
         raise ValueError(f"unknown transport {transport!r}")
+    if tp > 1:
+        if grad_accum > 1:
+            raise NotImplementedError("grad_accum > 1 + tensor parallelism")
+        return _make_tp_lm_train_step(
+            cfg, policy, opt, mesh=mesh, jit=jit, dp=dp, tp=tp,
+            dp_codec=dp_codec, dp_feedback=dp_feedback,
+            dp_k_frac=dp_k_frac, data_axis=data_axis,
+            tp_codec=t_ax.codec, tp_feedback=t_ax.feedback,
+            tp_k_frac=t_ax.k_frac, tensor_axis=tensor_axis)
 
     def loss_fn(params, bw_bufs, fw_bufs, batch, ids):
         bstates = _merge_states(fw_bufs, bw_bufs)
@@ -303,6 +433,94 @@ def _make_dp_simulated_step(policy, opt, compute_grads, dp, dp_codec,
     return step_dp
 
 
+def _make_tp_lm_train_step(cfg, policy: CompressionPolicy,
+                           opt: OptimizerConfig, *, mesh=None,
+                           jit: bool = True, dp: int = 1, tp: int = 2,
+                           dp_codec: str = "none",
+                           dp_feedback: str = "none",
+                           dp_k_frac: float = 0.1,
+                           data_axis: str = "data",
+                           tp_codec: str = "none",
+                           tp_feedback: str = "none",
+                           tp_k_frac: float = 0.1,
+                           tensor_axis: str = "tensor"):
+    """LM training with the dense layer stack sharded over the tensor
+    ring (transport/tp_collectives.py), optionally composed with the
+    compressed DP gradient all-reduce on a ``(data, 1, tensor)`` mesh.
+
+    Embed + chunked loss run OUTSIDE the shard_map on the global batch
+    (exact gradients, like the dp-pipeline path); the stack rides in as a
+    separately-differentiated argument (dp-stacked broadcast when
+    ``dp > 1``), so its gradient comes back per replica for the
+    compressed reduce with no hidden cross-replica psum.  Step signature
+    gains a trailing ``tp_state``:
+    ``step(params, opt_state, bstates, batch, ids[, dp_state], tp_state)``.
+    """
+    if cfg.enc_dec:
+        raise NotImplementedError("tensor parallelism: decoder-only archs")
+    if policy.num_boundaries:
+        raise NotImplementedError(
+            "simulated boundary cuts + tensor parallelism: run the stage "
+            "wire through the pipeline transport (3D mesh) instead")
+    from repro.launch.mesh import make_3d_mesh, make_tensor_mesh
+    from repro.transport.collectives import make_grad_all_reduce
+    from repro.transport.tp_collectives import TPCollectives, tp_apply
+    if mesh is None:
+        mesh = (make_tensor_mesh(tp, tensor_axis=tensor_axis) if dp == 1
+                else make_3d_mesh(dp, 1, tp, data_axis=data_axis,
+                                  tensor_axis=tensor_axis))
+    tpc = TPCollectives(mesh, tensor_axis, codec=tp_codec, k_frac=tp_k_frac,
+                        feedback=tp_feedback)
+    stage_fn = transformer.tp_stage_stack_fn(cfg, tpc)
+    sites = transformer.tp_sites(cfg)
+
+    def forward(params, stack_in, batch, tp_state):
+        labels = jnp.roll(batch["tokens"], -1, axis=1)
+        mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+        x = transformer._embed_input(params, batch, cfg)
+        # param_dims from the UNSTACKED stack: tp_apply itself accounts
+        # for the leading dp replica dim via batch_axis
+        y, new_tp = tp_apply(
+            stage_fn, stack_in, x, tpc,
+            param_dims=transformer.tp_param_dims(params["layers"]),
+            state=tp_state,
+            batch_axis=(data_axis if dp > 1 else None), sites=sites)
+        loss = transformer.hidden_lm_loss(params, y, labels, cfg, mask)
+        return loss, new_tp
+
+    def step_tp(params, opt_state, bstates, batch, ids, tp_state):
+        (loss, new_tp), (g_params, g_stack) = jax.value_and_grad(
+            lambda p, s: forward(p, s, batch, tp_state),
+            argnums=(0, 1), has_aux=True)(params, params["layers"])
+        grads = dict(g_params)
+        grads["layers"] = g_stack
+        params, opt_state = apply_updates(opt, params, grads, opt_state)
+        metrics = {"loss": loss, "aux": jnp.float32(0.0), "total": loss}
+        return params, opt_state, bstates, new_tp, metrics
+
+    def step_dp_tp(params, opt_state, bstates, batch, ids, dp_state,
+                   tp_state):
+        stack_dp = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (dp, *a.shape)),
+            params["layers"])
+        (loss, new_tp), (g_params, g_stack_dp) = jax.value_and_grad(
+            lambda p, s: forward(p, s, batch, tp_state),
+            argnums=(0, 1), has_aux=True)(params, stack_dp)
+        reduce_fn = make_grad_all_reduce(
+            mesh, data_axis, dp_codec, k_frac=dp_k_frac,
+            feedback=dp_feedback, average=False, tp_axis=tensor_axis,
+            tp_dims=transformer.tp_param_dims(g_stack_dp))
+        g_stack, new_dp_state = reduce_fn(g_stack_dp, dp_state)
+        grads = dict(g_params)
+        grads["layers"] = g_stack
+        params, opt_state = apply_updates(opt, params, grads, opt_state)
+        metrics = {"loss": loss, "aux": jnp.float32(0.0), "total": loss}
+        return (params, opt_state, bstates, new_dp_state, new_tp, metrics)
+
+    step = step_dp_tp if dp > 1 else step_tp
+    return jax.jit(step) if jit else step
+
+
 def _make_pipeline_lm_train_step(cfg, policy: CompressionPolicy,
                                  opt: OptimizerConfig, *, mesh=None,
                                  stage_axis: str = "stage",
@@ -312,7 +530,11 @@ def _make_pipeline_lm_train_step(cfg, policy: CompressionPolicy,
                                  dp_codec: str = "none",
                                  dp_feedback: str = "none",
                                  dp_k_frac: float = 0.1,
-                                 data_axis: str = "data"):
+                                 data_axis: str = "data", tp: int = 1,
+                                 tp_codec: str = "none",
+                                 tp_feedback: str = "none",
+                                 tp_k_frac: float = 0.1,
+                                 tensor_axis: str = "tensor"):
     """LM training through the real compressed ``ppermute`` pipeline.
 
     Same ``step(params, opt_state, bstates, batch, ids)`` signature as the
@@ -332,18 +554,35 @@ def _make_pipeline_lm_train_step(cfg, policy: CompressionPolicy,
     bp = _uniform_boundary(policy)
     s_stages = policy.num_stages
     needs_state = bp.needs_fw_buffer or bp.needs_bw_buffer
+    if tp > 1 and tp_feedback != "none":
+        raise NotImplementedError(
+            "pipeline + tensor parallelism: feedback-free tensor wires only "
+            "(EF/EF21 state does not thread through pipeline_apply yet)")
     if dp > 1:
-        from repro.launch.mesh import make_dp_pipeline_mesh
+        from repro.launch.mesh import make_3d_mesh, make_dp_pipeline_mesh
         if mesh is None:
-            mesh = make_dp_pipeline_mesh(dp, s_stages, data_axis=data_axis,
-                                         stage_axis=stage_axis)
+            mesh = (make_dp_pipeline_mesh(dp, s_stages, data_axis=data_axis,
+                                          stage_axis=stage_axis) if tp == 1
+                    else make_3d_mesh(dp, s_stages, tp, data_axis=data_axis,
+                                      stage_axis=stage_axis,
+                                      tensor_axis=tensor_axis))
         return _make_dp_pipeline_lm_train_step(
             cfg, bp, opt, mesh=mesh, stage_axis=stage_axis,
             data_axis=data_axis, microbatches=microbatches, jit=jit,
             schedule=schedule, virtual_stages=virtual_stages, dp=dp,
             dp_codec=dp_codec, dp_feedback=dp_feedback,
-            dp_k_frac=dp_k_frac, s_stages=s_stages)
-    mesh = _pipeline_mesh(policy, mesh, stage_axis)
+            dp_k_frac=dp_k_frac, s_stages=s_stages, tp=tp,
+            tp_codec=tp_codec, tp_k_frac=tp_k_frac, tensor_axis=tensor_axis)
+    if tp > 1:
+        from repro.launch.mesh import make_3d_mesh
+        if mesh is None:
+            mesh = make_3d_mesh(1, s_stages, tp, data_axis=data_axis,
+                                stage_axis=stage_axis,
+                                tensor_axis=tensor_axis)
+    else:
+        mesh = _pipeline_mesh(policy, mesh, stage_axis)
+    stage_fn, tp_kwargs = _tp_stage_fn(cfg, mesh, tp, tp_codec, tp_k_frac,
+                                       tensor_axis)
 
     def forward(params, batch, fw_state, bw_state, ids):
         labels = jnp.roll(batch["tokens"], -1, axis=1)
@@ -354,15 +593,17 @@ def _make_pipeline_lm_train_step(cfg, policy: CompressionPolicy,
         new_fw = None
         if needs_state:
             x, new_fw = pipeline_apply(
-                transformer.stage_stack_fn(cfg), stack, x, mesh, stage_axis,
+                stage_fn, stack, x, mesh, stage_axis,
                 policy=bp, microbatches=microbatches, schedule=schedule,
                 virtual_stages=virtual_stages,
-                fw_state=fw_state, bw_state=bw_state, ids=ids)
+                fw_state=fw_state, bw_state=bw_state, ids=ids,
+                **tp_kwargs(stack))
         else:
-            x = pipeline_apply(transformer.stage_stack_fn(cfg), stack, x,
-                               mesh, stage_axis, policy=bp,
+            x = pipeline_apply(stage_fn, stack, x, mesh, stage_axis,
+                               policy=bp,
                                microbatches=microbatches, schedule=schedule,
-                               virtual_stages=virtual_stages)
+                               virtual_stages=virtual_stages,
+                               **tp_kwargs(stack))
         loss = transformer.hidden_lm_loss(params, x, labels, cfg, mask)
         return loss, new_fw
 
@@ -392,7 +633,10 @@ def _make_dp_pipeline_lm_train_step(cfg, bp, opt: OptimizerConfig, *, mesh,
                                     jit: bool, schedule: str,
                                     virtual_stages: int, dp: int,
                                     dp_codec: str, dp_feedback: str,
-                                    dp_k_frac: float, s_stages: int):
+                                    dp_k_frac: float, s_stages: int,
+                                    tp: int = 1, tp_codec: str = "none",
+                                    tp_k_frac: float = 0.1,
+                                    tensor_axis: str = "tensor"):
     """LM training on the 2D ``(data, stages)`` mesh: every replica row
     pipelines its contiguous batch shard through the compressed
     ``ppermute`` wire, and the per-replica LAYER-STACK gradients cross the
@@ -414,10 +658,16 @@ def _make_dp_pipeline_lm_train_step(cfg, bp, opt: OptimizerConfig, *, mesh,
     from repro.transport.collectives import make_grad_all_reduce
     # shard the reduce over the stage axis too: each stage column rings
     # only its own slice of the stack gradient (which pipeline_apply
-    # already leaves P(stage)-sharded — no reshard gather)
-    reduce_fn = make_grad_all_reduce(mesh, data_axis, dp_codec,
-                                     k_frac=dp_k_frac, feedback=dp_feedback,
-                                     average=False, shard_axis=stage_axis)
+    # already leaves P(stage)-sharded — no reshard gather).  With tp > 1
+    # the reduce is additionally tensor-sharded per leaf, so it is built
+    # at trace time in _finish (the tp_dims tree needs the grad pytree).
+    reduce_fn = None
+    if tp == 1:
+        reduce_fn = make_grad_all_reduce(
+            mesh, data_axis, dp_codec, k_frac=dp_k_frac,
+            feedback=dp_feedback, average=False, shard_axis=stage_axis)
+    stage_fn, tp_kwargs = _tp_stage_fn(cfg, mesh, tp, tp_codec, tp_k_frac,
+                                       tensor_axis)
     n_slices = s_stages * virtual_stages
     needs_state = bp.needs_fw_buffer or bp.needs_bw_buffer
 
@@ -428,17 +678,17 @@ def _make_dp_pipeline_lm_train_step(cfg, bp, opt: OptimizerConfig, *, mesh,
         new_fw = None
         if needs_state:
             x, new_fw = pipeline_apply(
-                transformer.stage_stack_fn(cfg), stack_dp, x, mesh,
+                stage_fn, stack_dp, x, mesh,
                 stage_axis, policy=bp, microbatches=microbatches,
                 schedule=schedule, virtual_stages=virtual_stages,
                 dp_axis=data_axis, fw_state=fw_state, bw_state=bw_state,
-                ids=ids)
+                ids=ids, **tp_kwargs(stack_dp))
         else:
             x = pipeline_apply(
-                transformer.stage_stack_fn(cfg), stack_dp, x, mesh,
+                stage_fn, stack_dp, x, mesh,
                 stage_axis, policy=bp, microbatches=microbatches,
                 schedule=schedule, virtual_stages=virtual_stages,
-                dp_axis=data_axis)
+                dp_axis=data_axis, **tp_kwargs(stack_dp))
         loss = transformer.hidden_lm_loss(params, x, labels, cfg, mask)
         return loss, new_fw
 
@@ -448,7 +698,14 @@ def _make_dp_pipeline_lm_train_step(cfg, bp, opt: OptimizerConfig, *, mesh,
             lambda a: jnp.broadcast_to(a[None], (dp, *a.shape)), stack)
 
     def _finish(params, opt_state, g_params, g_stack_dp, dp_state, loss):
-        g_stack, new_dp_state = reduce_fn(g_stack_dp, dp_state)
+        rf = reduce_fn
+        if rf is None:
+            rf = make_grad_all_reduce(
+                mesh, data_axis, dp_codec, k_frac=dp_k_frac,
+                feedback=dp_feedback, average=False, shard_axis=stage_axis,
+                tp_axis=tensor_axis,
+                tp_dims=transformer.tp_param_dims(g_stack_dp))
+        g_stack, new_dp_state = rf(g_stack_dp, dp_state)
         grads = dict(g_params)
         grads["layers"] = jax.tree.map(
             lambda a: a.reshape(a.shape[0] * a.shape[1], *a.shape[2:]),

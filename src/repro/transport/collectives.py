@@ -172,7 +172,8 @@ def _ring_gather(payload_tree, axis: str, dp: int):
 def make_grad_all_reduce(mesh: Mesh, axis: str, codec: str = "none", *,
                          k_frac: float = 0.1, feedback: str = "none",
                          average: bool = False, fused: bool = True,
-                         shard_axis: str = None):
+                         shard_axis: str = None, tp_axis: str = None,
+                         tp_dims=None):
     """Build ``reduce(grads_dp, dp_state) -> (reduced, new_dp_state)``.
 
     ``grads_dp``: a gradient pytree whose leaves carry a leading replica
@@ -197,7 +198,18 @@ def make_grad_all_reduce(mesh: Mesh, axis: str, codec: str = "none", *,
     would force on the (stage-sharded) pipeline gradient.  Non-divisible
     leaves degrade to stage-replicated.  Per-tensor scales then cover the
     per-stage slice (strictly finer, never coarser).
+
+    ``tp_axis``/``tp_dims``: on a mesh with a tensor axis, a leaf whose
+    ``tp_dims`` entry is >= 1 is tensor-SHARDED at that absolute dim
+    (index into the ``(dp, *leaf)`` array; -1 = replicated over tensor —
+    models/transformer.tp_param_dims shifted by the replica dim).  Each
+    tensor coordinate then rings only its own weight shard over ``data``
+    — the three rings never mix, and per-device DP wire bytes drop by
+    ``tp`` for the sharded leaves.
     """
+    if (tp_axis is None) != (tp_dims is None):
+        raise ValueError("tp_axis and tp_dims come together (see "
+                         "models/transformer.tp_param_dims)")
     if feedback not in DP_FEEDBACK_MODES:
         raise ValueError(f"unknown dp feedback {feedback!r}; "
                          f"known: {DP_FEEDBACK_MODES}")
@@ -327,18 +339,49 @@ def make_grad_all_reduce(mesh: Mesh, axis: str, codec: str = "none", *,
 
     def reduce(grads_dp, dp_state: FeedbackState):
         _trace_wire(grads_dp)
-        dp_spec = lambda a: (P(axis, shard_axis)
-                             if _sharded(a.shape, 1) else P(axis))
-        out_spec = lambda a: (P(shard_axis)
-                              if _sharded(a.shape, 1) else P())
-        gspec = jax.tree.map(dp_spec, grads_dp)
-        rspec = jax.tree.map(dp_spec, dp_state.resid)
-        aspec = jax.tree.map(
-            lambda a: P(shard_axis) if _sharded(a.shape, 0) else P(),
-            dp_state.agg)
+
+        def dp_spec(a, d=-1):
+            e = [axis] + [None] * (a.ndim - 1)
+            if _sharded(a.shape, 1):
+                e[1] = shard_axis
+            if tp_axis is not None and d >= 1:
+                e[d] = tp_axis
+            return P(*e)
+
+        def out_spec(a, d=-1):
+            e = [None] * max(a.ndim - 1, 0)
+            if _sharded(a.shape, 1):
+                e[0] = shard_axis
+            if tp_axis is not None and d >= 1:
+                e[d - 1] = tp_axis
+            return P(*e)
+
+        if tp_axis is None:
+            gspec = jax.tree.map(dp_spec, grads_dp)
+            ospec = jax.tree.map(out_spec, grads_dp)
+        else:
+            gspec = jax.tree.map(dp_spec, grads_dp, tp_dims)
+            ospec = jax.tree.map(out_spec, grads_dp, tp_dims)
+        if tp_axis is None or feedback == "none":
+            rspec = jax.tree.map(dp_spec, dp_state.resid)
+        else:
+            # resid mirrors the grad tree leaf-for-leaf
+            rspec = jax.tree.map(dp_spec, dp_state.resid, tp_dims)
+        if tp_axis is None or feedback != "ef21":
+            aspec = jax.tree.map(
+                lambda a: P(shard_axis) if _sharded(a.shape, 0) else P(),
+                dp_state.agg)
+        else:
+            aspec = jax.tree.map(
+                lambda a, d: P(*[(shard_axis if (i == 0 and
+                                                 _sharded(a.shape, 0))
+                                  else (tp_axis if d >= 1 and i == d - 1
+                                        else None))
+                                 for i in range(a.ndim)]),
+                dp_state.agg, tp_dims)
         reduced, new_resid, new_agg = shard_map_compat(
             body, mesh, (gspec, rspec, aspec),
-            (jax.tree.map(out_spec, grads_dp), rspec, aspec),
+            (ospec, rspec, aspec),
         )(grads_dp, dp_state.resid, dp_state.agg)
         return reduced, dp_state.replace(resid=new_resid, agg=new_agg)
 

@@ -518,7 +518,9 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x, mesh: Mesh,
                    schedule: Union[str, Schedule] = "gpipe",
                    virtual_stages: Optional[int] = None,
                    fw_state=None, bw_state=None, ids=None,
-                   dp_axis: Optional[str] = None):
+                   dp_axis: Optional[str] = None,
+                   tp_axis: Optional[str] = None, tp_param_dims=None,
+                   seq_dim: int = 1):
     """Run ``stage_fn(stage_params, x) -> x`` as a pipelined stage stack
     over mesh axis ``axis``, ppermute-ing PACKED payloads between stages —
     differentiable end to end (compressed gradient payloads hop backward).
@@ -547,6 +549,21 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x, mesh: Mesh,
     ``x[r*B/dp:(r+1)*B/dp]``), each pipelined with ``microbatches``
     microbatches exactly as a solo run on that shard would be.
 
+    ``tp_axis``: run every stage tensor-parallel over a third mesh axis
+    (the 3D ``(data, stage, tensor)`` mesh).  ``stage_fn`` must then be
+    TP-aware (models/transformer.tp_stage_stack_fn closed over a
+    :class:`~repro.transport.tp_collectives.TPCollectives` on the same
+    axis): it receives the SEQUENCE-SHARDED microbatch (dim ``seq_dim``
+    of the per-microbatch activation split over ``tp_axis``) plus the
+    tp-local weight shards (``tp_param_dims``: pytree matching
+    ``params_stacked`` of per-leaf sharded-dim indices, -1 = replicated
+    — models/transformer.tp_param_dims).  The stage-boundary payload is
+    then the shard, so the three rings stay separable: stage hops move
+    ``1/tp`` of each cut, TP gathers ring within a stage, and the DP
+    reduce rings over ``data``.  Boundary feedback buffers are not
+    supported on this path (their addressing assumes full-sequence
+    slots); pass a buffer-free policy.
+
     Feedback state: when the policy carries EF/EF21/EF-mixed/AQ-SGD
     buffers, pass ``fw_state``/``bw_state`` from
     :func:`init_feedback_state` (built with the same ``virtual_stages``,
@@ -561,6 +578,19 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x, mesh: Mesh,
         policy = _policy_for_scheme(scheme or "none", k_frac)
     s_stages = mesh.shape[axis]
     dp = mesh.shape[dp_axis] if dp_axis is not None else 1
+    tp = mesh.shape[tp_axis] if tp_axis is not None else 1
+    if tp_axis is not None:
+        if policy.needs_fw_buffer or policy.needs_bw_buffer:
+            raise ValueError(
+                f"policy {policy.name!r} carries boundary feedback "
+                "buffers; the tensor-parallel pipeline path supports "
+                "buffer-free boundary policies only")
+        if tp_param_dims is None:
+            raise ValueError("tp_axis needs tp_param_dims (see "
+                             "models/transformer.tp_param_dims)")
+        if x.shape[seq_dim] % tp:
+            raise ValueError(f"sequence dim {seq_dim} ({x.shape[seq_dim]})"
+                             f" not divisible by tp={tp}")
     sched = as_schedule(schedule, virtual_stages)
     v = sched.virtual_stages
     transport = PipelineTransport(policy, axis, s_stages,
@@ -635,6 +665,12 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x, mesh: Mesh,
 
     x_mb = x.reshape(*rep, mb, mbsz, *x.shape[1:])
     feat_shape = x_mb.shape[len(rep) + 1:]
+    if tp_axis is not None:
+        # the stage boundary carries the sequence SHARD: every ring's
+        # payload (and the scan buffer) is 1/tp of the full cut
+        local = list(feat_shape)
+        local[seq_dim] //= tp
+        feat_shape = tuple(local)
     _trace_wire(transport, sched, feat_shape, x.dtype, mb, dp)
 
     # the scan carry / shard_map threading works on plain {resid, mirror}
@@ -718,17 +754,37 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x, mesh: Mesh,
                   else (lambda a: a[None, None]))
         return outs, jax.tree.map(expand, fw_st)
 
-    if dp_axis is None:
-        pspec = jax.tree.map(lambda _: P(axis), params_dev)
-        x_spec, out_spec, st_axes = P(), P(axis), P(axis)
+    lead_axes = (axis,) if dp_axis is None else (dp_axis, axis)
+    ids_spec = P() if dp_axis is None else P(dp_axis)
+    st_axes = P(*lead_axes)
+    if tp_axis is None:
+        pspec = jax.tree.map(lambda _: st_axes, params_dev)
+        x_spec = ids_spec
+        out_spec = P(axis) if dp_axis is None else P(axis, dp_axis)
     else:
-        pspec = jax.tree.map(lambda _: P(dp_axis, axis), params_dev)
-        x_spec, out_spec = P(dp_axis), P(axis, dp_axis)
-        st_axes = P(dp_axis, axis)
+        def leaf_spec(a, d):
+            entries = [None] * a.ndim
+            for i, nm in enumerate(lead_axes):
+                entries[i] = nm
+            if d >= 0:
+                entries[d] = tp_axis
+            return P(*entries)
+        pspec = jax.tree.map(leaf_spec, params_dev, tp_param_dims)
+        xe = [None] * x_mb.ndim
+        if dp_axis is not None:
+            xe[0] = dp_axis
+        xe[len(rep) + 1 + seq_dim] = tp_axis
+        x_spec = P(*xe)
+        oe = [None] * (x_mb.ndim + 1)
+        oe[0] = axis
+        if dp_axis is not None:
+            oe[1] = dp_axis
+        oe[2 + len(rep) + seq_dim] = tp_axis
+        out_spec = P(*oe)
     st_spec = lambda st: jax.tree.map(lambda _: st_axes, st)
     out, new_fw = _shard_map(
         body, mesh,
-        (pspec, x_spec, st_spec(fw_c), st_spec(bw_c), x_spec),
+        (pspec, x_spec, st_spec(fw_c), st_spec(bw_c), ids_spec),
         (out_spec, st_spec(fw_c)),
     )(params_dev, x_mb, fw_c, bw_c, ids_mb)
     out = out[-1].reshape(b, *x.shape[1:])

@@ -1,0 +1,389 @@
+"""The unified ParallelSpec API (core/parallel.py) + the legacy-kwarg shim.
+
+In-process: spec/axis validation, CLI ``--mesh``/``--wire`` parsing
+(accept + reject), rule-codec resolution, the deprecation shim on
+``make_lm_train_step``/``run_lm_experiment`` — legacy kwargs produce
+BIT-IDENTICAL steps (same lowered HLO, same losses) and warn with
+``ParallelDeprecationWarning``.  The dp=2 shim equivalence and the CLI
+conflict/deprecation-notice checks run in subprocesses (forced host
+devices / real argv).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.parallel import (AxisSpec, ParallelDeprecationWarning,
+                                 ParallelSpec, canonical_axis, from_legacy,
+                                 parse_mesh_spec, parse_wire_item,
+                                 parse_wire_spec, spec_from_cli)
+from repro.core.policy import NO_POLICY, CompressionPolicy, quant_policy
+
+
+class TestAxisSpec:
+    def test_defaults_uncompressed(self):
+        a = AxisSpec()
+        assert (a.size, a.codec, a.feedback, a.k_frac) == (1, "none",
+                                                           "none", 0.1)
+        assert not a.is_rules
+
+    @pytest.mark.parametrize("size", (0, -1, 1.5, "2"))
+    def test_bad_size_rejected(self, size):
+        with pytest.raises(ValueError, match="size"):
+            AxisSpec(size=size)
+
+    @pytest.mark.parametrize("k", (0.0, -0.1, 1.5))
+    def test_bad_k_frac_rejected(self, k):
+        with pytest.raises(ValueError, match="k_frac"):
+            AxisSpec(k_frac=k)
+
+    def test_unknown_codec_rejected(self):
+        with pytest.raises(ValueError, match="codec"):
+            AxisSpec(codec="zstd")
+
+    def test_unknown_feedback_rejected(self):
+        with pytest.raises(ValueError, match="feedback"):
+            AxisSpec(feedback="momentum")
+
+    def test_rule_codec_accepted_and_resolves(self):
+        a = AxisSpec(size=2, codec="none@bandwidth>=100e9; q4")
+        assert a.is_rules
+        fast = a.resolve(4096, bandwidth=200e9)
+        slow = a.resolve(4096, bandwidth=1e6)
+        assert fast.codec == "none" and slow.codec == "q4"
+        assert not fast.is_rules
+
+    def test_malformed_rule_rejected_at_construction(self):
+        with pytest.raises(ValueError):
+            AxisSpec(codec="q8@color=red")
+
+    def test_resolve_plain_codec_is_identity(self):
+        a = AxisSpec(size=2, codec="q8")
+        assert a.resolve(10**6) is a
+
+
+class TestParallelSpec:
+    def test_missing_axes_default_to_solo(self):
+        s = ParallelSpec({"tensor": AxisSpec(size=2)})
+        assert (s.dp, s.stages, s.tp) == (1, 1, 2)
+        assert s.num_devices == 2
+        assert s.data == AxisSpec()
+
+    def test_axis_aliases(self):
+        s = ParallelSpec({"dp": 2, "pp": 3, "model": 4})
+        assert (s.dp, s.stages, s.tp) == (2, 3, 4)
+        assert s.axis("tp").size == 4
+        assert canonical_axis("model") == "tensor"
+
+    def test_unknown_axis_rejected(self):
+        with pytest.raises(ValueError, match="unknown parallel axis"):
+            ParallelSpec({"expert": 2})
+
+    def test_duplicate_axis_via_alias_rejected(self):
+        with pytest.raises(ValueError, match="duplicate"):
+            ParallelSpec({"tensor": 2, "model": 2})
+
+    def test_int_shorthand(self):
+        assert ParallelSpec({"data": 4}).data == AxisSpec(size=4)
+
+    def test_feedback_scope_per_axis(self):
+        # aqsgd buffers are boundary-scoped: not valid on data/tensor
+        with pytest.raises(ValueError, match="aqsgd"):
+            ParallelSpec({"data": AxisSpec(size=2, codec="topk",
+                                           feedback="aqsgd")})
+        # ef is valid everywhere
+        ParallelSpec({"tensor": AxisSpec(size=2, codec="q8",
+                                         feedback="ef")})
+
+    def test_hashable_and_name(self):
+        s = ParallelSpec({"data": AxisSpec(size=2, codec="q8"),
+                          "tensor": AxisSpec(size=2)})
+        assert hash(s) == hash(ParallelSpec(dict(s.axes)))
+        assert s.name == "data=2(q8),tensor=2"
+        assert ParallelSpec().name == "solo"
+
+    def test_resolved_maps_wire_sizes_per_axis(self):
+        s = ParallelSpec({
+            "data": AxisSpec(size=2, codec="q4@size>=65536; none"),
+            "tensor": AxisSpec(size=2, codec="q4@size>=65536; none"),
+        })
+        r = s.resolved({"data": 10**6, "tensor": 4096})
+        assert r.data.codec == "q4" and r.tensor.codec == "none"
+
+    def test_stage_policy_none_when_uncompressed(self):
+        assert ParallelSpec({"stage": 4}).stage_policy() is None
+
+    def test_stage_policy_builds_boundary_policy(self):
+        s = ParallelSpec({"stage": AxisSpec(size=4, codec="q8")})
+        p = s.stage_policy()
+        assert isinstance(p, CompressionPolicy)
+        assert p.num_stages == 4
+        assert p.boundary.fw.name.startswith("q8")
+
+
+class TestCLISpecs:
+    def test_mesh_spec_parses(self):
+        assert parse_mesh_spec("data=2,stage=2,tensor=2") == {
+            "data": 2, "stage": 2, "tensor": 2}
+        assert parse_mesh_spec("dp=4") == {"data": 4}
+
+    @pytest.mark.parametrize("bad", ("data", "data=x", "data=0",
+                                     "data=2,data=3", "", "expert=2"))
+    def test_mesh_spec_rejects(self, bad):
+        with pytest.raises(ValueError):
+            parse_mesh_spec(bad)
+
+    def test_wire_item_parses(self):
+        assert parse_wire_item("q8+ef:0.1") == ("q8", "ef", 0.1)
+        assert parse_wire_item("q4") == ("q4", "none", None)
+        assert parse_wire_item("topk:0.3") == ("topk", "none", 0.3)
+
+    def test_wire_spec_parses(self):
+        assert parse_wire_spec("data=q8+ef:0.1,tensor=q4") == {
+            "data": ("q8", "ef", 0.1), "tensor": ("q4", "none", None)}
+
+    @pytest.mark.parametrize("bad", ("q8", "data=q8:x", "",
+                                     "data=q8,data=q4"))
+    def test_wire_spec_rejects(self, bad):
+        with pytest.raises(ValueError):
+            parse_wire_spec(bad)
+
+    def test_spec_from_cli(self):
+        s = spec_from_cli("data=2,tensor=2", "data=q8+ef:0.2,tensor=q4")
+        assert s.dp == 2 and s.tp == 2 and s.stages == 1
+        assert s.data == AxisSpec(size=2, codec="q8", feedback="ef",
+                                  k_frac=0.2)
+        assert s.tensor.codec == "q4"
+
+    def test_spec_from_cli_bad_codec_rejected(self):
+        with pytest.raises(ValueError, match="codec"):
+            spec_from_cli(None, "tensor=zstd")
+
+
+class TestLegacyShim:
+    def test_from_legacy_round_trip(self):
+        s = from_legacy(dp=2, dp_codec="q8", dp_feedback="ef",
+                        dp_k_frac=0.3, num_stages=2, tp=2, tp_codec="q4")
+        assert s.data == AxisSpec(size=2, codec="q8", feedback="ef",
+                                  k_frac=0.3)
+        assert s.stages == 2 and s.tensor.codec == "q4"
+
+    def test_resolve_parallel_conflict(self):
+        from repro.train.steps import _resolve_parallel
+        with pytest.raises(ValueError, match="both parallel="):
+            _resolve_parallel("api", ParallelSpec(), NO_POLICY,
+                              "simulated", {"dp": 2})
+
+    def test_resolve_parallel_rejects_unresolved_rules(self):
+        from repro.train.steps import _resolve_parallel
+        spec = ParallelSpec({"tensor": AxisSpec(size=2, codec="q4@size<8;q8")})
+        with pytest.raises(ValueError, match="unresolved rule"):
+            _resolve_parallel("api", spec, NO_POLICY, "simulated", {})
+
+    def test_resolve_parallel_stage_wire_vs_policy_conflict(self):
+        from repro.train.steps import _resolve_parallel
+        spec = ParallelSpec({"stage": AxisSpec(size=2, codec="q8")})
+        pol = CompressionPolicy(num_stages=2, boundary=quant_policy(8, 8))
+        with pytest.raises(ValueError, match="ONE place"):
+            _resolve_parallel("api", spec, pol, "pipeline", {})
+
+    def test_stage_axis_implies_pipeline_transport(self):
+        from repro.train.steps import _resolve_parallel
+        spec = ParallelSpec({"stage": AxisSpec(size=2, codec="q8")})
+        _, pol, transport = _resolve_parallel("api", spec, NO_POLICY,
+                                              "simulated", {})
+        assert transport == "pipeline"
+        assert pol.num_stages == 2
+
+
+def _toks(n=3, b=4, s=32, lo=0, hi=64, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(lo, hi, size=(b, s)) for _ in range(n)]
+
+
+def _lm_fixture():
+    from repro.configs.registry import get
+    from repro.models import transformer
+    from repro.optim.optimizers import OptimizerConfig, init_opt_state
+    cfg = get("gpt2-small", smoke=True)
+    opt = OptimizerConfig(kind="adamw", lr=1e-3, weight_decay=0.0,
+                          schedule="constant")
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, opt, params, init_opt_state(opt, params)
+
+
+class TestShimEquivalence:
+    """Legacy kwargs and parallel= build the SAME program: identical
+    lowered HLO (one jit cache entry) and bit-identical training."""
+
+    def _run(self, step, params, opt_state, n_extra=0):
+        losses = []
+        for t in _toks():
+            batch = {"tokens": jnp.asarray(t)}
+            ids = jnp.zeros((t.shape[0],), jnp.int32)
+            out = step(params, opt_state, [], batch, ids)
+            params, opt_state = out[0], out[1]
+            losses.append(float(out[-1]["loss"]))
+        return losses, params
+
+    def test_legacy_kwargs_warn_and_match_parallel_bitwise(self):
+        from repro.train.steps import make_lm_train_step
+        cfg, opt, params, opt_state = _lm_fixture()
+        with pytest.warns(ParallelDeprecationWarning, match="deprecated"):
+            legacy = make_lm_train_step(cfg, NO_POLICY, opt, remat=False,
+                                        donate=False, dp=1,
+                                        dp_codec="none")
+        new = make_lm_train_step(cfg, NO_POLICY, opt, remat=False,
+                                 donate=False, parallel=ParallelSpec())
+        batch = {"tokens": jnp.asarray(_toks(1)[0])}
+        ids = jnp.zeros((4,), jnp.int32)
+        hlo_a = legacy.lower(params, opt_state, [], batch, ids).as_text()
+        hlo_b = new.lower(params, opt_state, [], batch, ids).as_text()
+        assert hlo_a == hlo_b
+        la, pa = self._run(legacy, params, opt_state)
+        lb, pb = self._run(new, params, opt_state)
+        assert la == lb, (la, lb)
+        for ka, kb in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+            np.testing.assert_array_equal(np.asarray(ka), np.asarray(kb))
+
+    def test_no_legacy_kwargs_no_warning(self):
+        from repro.train.steps import make_lm_train_step
+        cfg, opt, _, _ = _lm_fixture()
+        with warnings.catch_warnings():
+            warnings.simplefilter("error",
+                                  category=ParallelDeprecationWarning)
+            make_lm_train_step(cfg, NO_POLICY, opt, remat=False,
+                               donate=False)
+
+    def test_run_lm_experiment_legacy_warns_and_matches(self):
+        from repro.data.synthetic import LMData
+        from repro.train.loop import run_lm_experiment
+        cfg, _, _, _ = _lm_fixture()
+        data = LMData(num_train=32, seq_len=32)
+        with pytest.warns(ParallelDeprecationWarning, match="deprecated"):
+            r_legacy = run_lm_experiment(cfg, NO_POLICY, epochs=1, batch=8,
+                                         data=data, dp=1)
+        r_new = run_lm_experiment(cfg, NO_POLICY, epochs=1, batch=8,
+                                  data=data, parallel=ParallelSpec())
+        assert r_legacy.train_curve == r_new.train_curve
+
+    def test_both_families_rejected(self):
+        from repro.train.steps import make_lm_train_step
+        cfg, opt, _, _ = _lm_fixture()
+        with pytest.raises(ValueError, match="both parallel="):
+            make_lm_train_step(cfg, NO_POLICY, opt, dp=2,
+                               parallel=ParallelSpec({"data": 2}))
+
+
+# ---------------------------------------------------------------------------
+# Subprocess checks: dp=2 shim equivalence + the real CLI
+# ---------------------------------------------------------------------------
+
+DP2_SHIM_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import warnings
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro.configs.registry import get
+    from repro.core.parallel import (AxisSpec, ParallelDeprecationWarning,
+                                     ParallelSpec)
+    from repro.core.policy import NO_POLICY
+    from repro.models import transformer
+    from repro.optim.optimizers import OptimizerConfig, init_opt_state
+    from repro.train.loop import init_lm_dp_state
+    from repro.train.steps import make_lm_train_step
+
+    cfg = get("gpt2-small", smoke=True)
+    opt = OptimizerConfig(kind="adamw", lr=1e-3, weight_decay=0.0,
+                          schedule="constant")
+    params0 = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    toks = [rng.randint(0, 64, size=(8, 32)) for _ in range(3)]
+
+    def run(**kw):
+        step = make_lm_train_step(cfg, NO_POLICY, opt, remat=False,
+                                  donate=False, **kw)
+        params = jax.tree.map(jnp.asarray, params0)
+        opt_state = init_opt_state(opt, params)
+        dp_state = init_lm_dp_state(cfg, params, NO_POLICY, 2,
+                                    dp_feedback="ef")
+        losses = []
+        for t in toks:
+            batch = {"tokens": jnp.asarray(t)}
+            ids = jnp.zeros((8,), jnp.int32)
+            params, opt_state, _, dp_state, m = step(
+                params, opt_state, [], batch, ids, dp_state)
+            losses.append(float(m["loss"]))
+        return losses, params
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        la, pa = run(dp=2, dp_codec="topk", dp_feedback="ef",
+                     dp_k_frac=0.3)
+    assert any(issubclass(x.category, ParallelDeprecationWarning)
+               for x in w), [str(x.message) for x in w]
+    spec = ParallelSpec({"data": AxisSpec(size=2, codec="topk",
+                                          feedback="ef", k_frac=0.3)})
+    lb, pb = run(parallel=spec)
+    assert la == lb, (la, lb)
+    for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    print("DP2_SHIM_OK")
+""")
+
+
+def _run_sub(script):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    return subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=600)
+
+
+@pytest.mark.slow
+def test_dp2_shim_equivalence_subprocess():
+    """dp=2 with the compressed+EF reduce: legacy kwargs and the
+    equivalent ParallelSpec train bit-identically (2 host devices)."""
+    r = _run_sub(DP2_SHIM_SCRIPT)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "DP2_SHIM_OK" in r.stdout
+
+
+def _run_cli(*args):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", *args],
+        env=env, capture_output=True, text=True, timeout=600)
+
+
+@pytest.mark.slow
+def test_cli_mesh_conflicts_with_legacy_flags():
+    r = _run_cli("--arch", "gpt2-small", "--smoke", "--steps", "1",
+                 "--mesh", "data=2", "--dp", "2")
+    assert r.returncode != 0
+    assert "--mesh/--wire conflict" in r.stderr
+
+
+@pytest.mark.slow
+def test_cli_bad_wire_spec_rejected():
+    r = _run_cli("--arch", "gpt2-small", "--smoke", "--steps", "1",
+                 "--wire", "tensor=zstd")
+    assert r.returncode != 0
+    assert "codec" in r.stderr
+
+
+@pytest.mark.slow
+def test_cli_help_marks_legacy_flags_deprecated():
+    r = _run_cli("--help")
+    assert r.returncode == 0
+    assert "DEPRECATED" in r.stdout
+    assert "--mesh" in r.stdout and "--wire" in r.stdout
